@@ -1,0 +1,160 @@
+"""Shared experiment runner for the paper-table benchmarks.
+
+Reproduces the paper's protocol on CIFAR-shaped synthetic data with the
+paper's AlexNet (width-scaled for CPU tractability; width=1.0 recovers
+the exact Appendix-E architecture): K clients, participation r, T local
+iterations, server batch B, SGD eta=0.01, quantity (alpha) or Dirichlet
+(beta) label skew — then runs SCALA and every baseline through it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ScalaConfig
+from repro.core import baselines as B
+from repro.core.losses import accuracy, per_class_accuracy
+from repro.core.scala import (SplitModel, scala_aggregate, scala_local_step)
+from repro.data.loader import FederatedData, round_batches, sample_clients
+from repro.data.partition import partition
+from repro.data.synthetic import gaussian_images
+from repro.models import alexnet as A
+
+SCALA_METHODS = ("scala", "scala_noadj")
+ALL_METHODS = SCALA_METHODS + B.FL_METHODS + B.SFL_METHODS
+
+
+def make_dataset(n_train=2000, n_test=1000, num_classes=10, seed=0):
+    x, y = gaussian_images(n_train + n_test, num_classes=num_classes,
+                           seed=seed)
+    return (x[:n_train], y[:n_train]), (x[n_train:], y[n_train:])
+
+
+def _alexnet_fed_model(num_classes, split):
+    def fwd(p, x):
+        return A.forward(p, x, split)
+
+    def feats(p, x):
+        # features before the classifier: last FC activation
+        return A.features(p, x)
+
+    return B.FedModel(forward=fwd, num_classes=num_classes, features=feats)
+
+
+def _alexnet_split_model(num_classes, split):
+    def client_fwd(wc, batch):
+        return {"x": A.client_forward_from_split(wc, batch["x"], split)}
+
+    def server_fwd(ws, acts):
+        return (A.server_forward_from_split(ws, acts["x"], split),
+                jnp.zeros((), jnp.float32))
+
+    return SplitModel(client_fwd=client_fwd, server_fwd=server_fwd,
+                      num_classes=num_classes)
+
+
+def run_experiment(method: str, *, alpha: Optional[int] = None,
+                   beta: Optional[float] = None, K: int = 20, r: float = 0.2,
+                   T: int = 5, rounds: int = 12, server_batch: int = 48,
+                   lr: float = 0.05, width: float = 0.125,
+                   num_classes: int = 10, n_train: int = 2000,
+                   split: str = "s2", seed: int = 0) -> Dict:
+    """Returns {'acc', 'balanced_acc', 'seconds'} on the held-out test set."""
+    (x, y), (x_test, y_test) = make_dataset(n_train=n_train, seed=seed)
+    parts = partition(y, K, alpha=alpha, beta=beta, num_classes=num_classes,
+                      seed=seed)
+    data = FederatedData.from_partition(x, y, parts)
+    rng = np.random.default_rng(seed + 7)
+    key = jax.random.PRNGKey(seed)
+    C = max(1, round(K * r))
+    t0 = time.time()
+
+    full = A.init_params(key, num_classes=num_classes, width=width)
+    x_test_j = jnp.asarray(x_test)
+    y_test_j = jnp.asarray(y_test)
+
+    def finish(final_params_fwd):
+        logits = final_params_fwd(x_test_j)
+        return {
+            "acc": float(accuracy(logits, y_test_j)),
+            "balanced_acc": float(per_class_accuracy(logits, y_test_j,
+                                                     num_classes)),
+            "seconds": round(time.time() - t0, 1),
+        }
+
+    if method in SCALA_METHODS:
+        adjust = method == "scala"
+        sc = ScalaConfig(num_clients=K, participation=r, local_iters=T,
+                         server_batch=server_batch, lr=lr,
+                         adjust_server=adjust, adjust_client=adjust)
+        model = _alexnet_split_model(num_classes, split)
+        wc, ws = A.split_params(full, split)
+        params = {"client": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+            "server": ws}
+        step = jax.jit(lambda p, b: scala_local_step(model, p, b, sc))
+        for _ in range(rounds):
+            sel = sample_clients(K, C, rng)
+            rb = round_batches(data, sel, server_batch, T, rng)
+            sizes = jnp.asarray(rb.pop("sizes"))
+            for t in range(T):
+                batch = {k: jnp.asarray(v[t]) for k, v in rb.items()}
+                params, _ = step(params, batch)
+            params = scala_aggregate(params, sizes)
+        wc0 = jax.tree.map(lambda a: a[0], params["client"])
+        merged = A.merge_params(wc0, params["server"])
+        return finish(lambda xs: A.forward(merged, xs, split))
+
+    if method in B.FL_METHODS:
+        model = _alexnet_fed_model(num_classes, split)
+        w = full
+        state = B.init_fl_state(method, w, C)
+        round_fn = jax.jit(
+            lambda wg, rb, ds, st: B.make_fl_round(method, model, lr=lr)(
+                wg, rb, ds, st))
+        for _ in range(rounds):
+            sel = sample_clients(K, C, rng)
+            rb = round_batches(data, sel, server_batch, T, rng)
+            sizes = jnp.asarray(rb.pop("sizes"))
+            batches = {k: jnp.asarray(v).swapaxes(0, 1)
+                       for k, v in rb.items() if k != "weights"}
+            w, state = round_fn(w, batches, sizes, state)
+        return finish(lambda xs: A.forward(w, xs, split))
+
+    if method in B.SFL_METHODS:
+        model = _alexnet_split_model(num_classes, split)
+        wc, ws = A.split_params(full, split)
+        bcast = lambda t: jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), t)
+        state = {"wc": bcast(wc), "ws": ws}
+        aux_head_fwd = None
+        if method == "sfl_localloss":
+            feat_dim = None
+            probe = A.client_forward_from_split(wc, jnp.zeros((1, 32, 32, 3)),
+                                                split)
+            feat_dim = int(np.prod(probe.shape[1:]))
+            aux0 = {"w": jax.random.normal(key, (feat_dim, num_classes)) * 0.05}
+            state["aux"] = bcast(aux0)
+
+            def aux_head_fwd(p, feats):
+                return feats.reshape(feats.shape[0], -1) @ p["w"]
+
+        round_fn = B.make_sfl_round(method, model, lr=lr,
+                                    aux_head_fwd=aux_head_fwd)
+        round_fn = jax.jit(round_fn)
+        for _ in range(rounds):
+            sel = sample_clients(K, C, rng)
+            rb = round_batches(data, sel, server_batch, T, rng)
+            sizes = jnp.asarray(rb.pop("sizes"))
+            batches = {k: jnp.asarray(v).swapaxes(0, 1)
+                       for k, v in rb.items() if k != "weights"}
+            state = round_fn(state, batches, sizes)
+        wc0 = jax.tree.map(lambda a: a[0], state["wc"])
+        merged = A.merge_params(wc0, state["ws"])
+        return finish(lambda xs: A.forward(merged, xs, split))
+
+    raise ValueError(f"unknown method {method!r}")

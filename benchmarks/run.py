@@ -1,0 +1,184 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Each bench reproduces the *protocol* of a SCALA table at CPU-tractable
+scale (synthetic CIFAR-shaped data, width-scaled AlexNet, reduced
+rounds) and prints a CSV block ``table,setting,method,acc,balanced_acc,
+seconds``.  The claim validated per table is the paper's *ordering*
+(SCALA > baselines, and the trends across r / K / T / split point), not
+the absolute accuracies — see EXPERIMENTS.md §Paper-validation.
+
+Additionally, the roofline benches (paper has no table for these; they
+back deliverable (g)) re-print the dry-run-derived roofline terms per
+(arch x shape x mesh) from ``results/dryrun``.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # standard (a few min)
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke (~1 min)
+  PYTHONPATH=src python -m benchmarks.run --table t1 # a single table
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import run_experiment
+
+HEADER = "table,setting,method,acc,balanced_acc,seconds"
+
+
+def _emit(table: str, setting: str, method: str, res: dict) -> None:
+    print(f"{table},{setting},{method},{res['acc']:.4f},"
+          f"{res['balanced_acc']:.4f},{res['seconds']}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / Figure 4: SCALA vs FL baselines under quantity (alpha) and
+# Dirichlet (beta) label skew.
+# ---------------------------------------------------------------------------
+
+def bench_table1(quick: bool) -> None:
+    methods = ("scala", "fedavg", "fedprox", "fedlogit", "fedla") if quick \
+        else ("scala", "scala_noadj", "fedavg", "fedprox", "feddyn",
+              "feddecorr", "fedlogit", "fedla")
+    rounds = 6 if quick else 10
+    for setting, kw in (("alpha=2", dict(alpha=2)),
+                        ("beta=0.05", dict(beta=0.05))):
+        for m in methods:
+            res = run_experiment(m, rounds=rounds, **kw)
+            _emit("T1", setting, m, res)
+
+
+# ---------------------------------------------------------------------------
+# Table 2: participation ratio r sweep (alpha=2).
+# ---------------------------------------------------------------------------
+
+def bench_table2(quick: bool) -> None:
+    ratios = (0.1, 0.5) if quick else (0.1, 0.2, 0.5)
+    methods = ("scala", "fedavg") if quick else ("scala", "fedavg",
+                                                 "fedla")
+    rounds = 6 if quick else 10
+    for r in ratios:
+        for m in methods:
+            res = run_experiment(m, alpha=2, r=r, rounds=rounds)
+            _emit("T2", f"r={r}", m, res)
+
+
+# ---------------------------------------------------------------------------
+# Table 3: number-of-clients K sweep (alpha=2; r=50% for small K, 10%
+# for large K, as in the paper).
+# ---------------------------------------------------------------------------
+
+def bench_table3(quick: bool) -> None:
+    grid = ((10, 0.5), (20, 0.5)) if quick else ((10, 0.5), (20, 0.5),
+                                                 (50, 0.1))
+    methods = ("scala", "fedavg") if quick else ("scala", "fedavg",
+                                                 "fedla")
+    rounds = 6 if quick else 10
+    for K, r in grid:
+        for m in methods:
+            res = run_experiment(m, alpha=2, K=K, r=r, rounds=rounds)
+            _emit("T3", f"K={K},r={r}", m, res)
+
+
+# ---------------------------------------------------------------------------
+# Tables 5-6: SCALA vs the SFL family.
+# ---------------------------------------------------------------------------
+
+def bench_table5(quick: bool) -> None:
+    methods = ("scala", "splitfed_v1", "splitfed_v2") if quick else (
+        "scala", "splitfed_v1", "splitfed_v2", "splitfed_v3",
+        "sfl_localloss")
+    rounds = 6 if quick else 10
+    for setting, kw in (("alpha=2", dict(alpha=2)),
+                        ("beta=0.1", dict(beta=0.1))):
+        for m in methods:
+            res = run_experiment(m, rounds=rounds, **kw)
+            _emit("T5", setting, m, res)
+
+
+# ---------------------------------------------------------------------------
+# Table 7: local-iteration (T) sweep.
+# ---------------------------------------------------------------------------
+
+def bench_table7(quick: bool) -> None:
+    Ts = (1, 5) if quick else (1, 5, 10)
+    methods = ("scala", "fedavg") if quick else ("scala", "fedavg", "fedla")
+    rounds = 6 if quick else 10
+    for T in Ts:
+        for m in methods:
+            res = run_experiment(m, alpha=2, T=T, rounds=rounds)
+            _emit("T7", f"T={T}", m, res)
+
+
+# ---------------------------------------------------------------------------
+# Table 8: splitting-point sweep (client/server boundary depth).
+# ---------------------------------------------------------------------------
+
+def bench_table8(quick: bool) -> None:
+    splits = ("s1", "s2") if quick else ("s1", "s2", "s3", "s4")
+    rounds = 6 if quick else 10
+    for sp in splits:
+        res = run_experiment("scala", alpha=2, split=sp, rounds=rounds)
+        _emit("T8", f"split={sp}", "scala", res)
+
+
+# ---------------------------------------------------------------------------
+# Roofline report (deliverable g): reprint dry-run-derived terms.
+# ---------------------------------------------------------------------------
+
+def bench_roofline(_quick: bool) -> None:
+    root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "dryrun")
+    files = sorted(glob.glob(os.path.join(root, "*.json")))
+    if not files:
+        print("roofline,NO_DRYRUN_RESULTS,,,,", flush=True)
+        return
+    print("roofline_table,arch,shape,mesh,status,bottleneck,"
+          "t_compute_s,t_memory_s,t_collective_s,useful_flops_ratio",
+          flush=True)
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("status") != "ok":
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r.get('status')},,,,,", flush=True)
+            continue
+        t = r.get("roofline_scoped", r["roofline"])
+        ufr = r.get("useful_flops_ratio")
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},ok,"
+              f"{t['bottleneck']},{t['t_compute_s']:.3e},"
+              f"{t['t_memory_s']:.3e},{t['t_collective_s']:.3e},"
+              f"{'' if ufr is None else f'{ufr:.3f}'}", flush=True)
+
+
+TABLES = {
+    "t1": bench_table1,
+    "t2": bench_table2,
+    "t3": bench_table3,
+    "t5": bench_table5,
+    "t7": bench_table7,
+    "t8": bench_table8,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default=None, choices=sorted(TABLES))
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-protocol settings (slow)")
+    args = ap.parse_args()
+    quick = args.quick and not args.full
+
+    print(HEADER, flush=True)
+    names = [args.table] if args.table else list(TABLES)
+    for name in names:
+        TABLES[name](quick)
+
+
+if __name__ == "__main__":
+    main()

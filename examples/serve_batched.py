@@ -1,0 +1,49 @@
+"""Serve a (reduced) global model with batched requests: prefill a batch
+of prompts through the decode path and generate greedily with a KV/SSM
+cache — the same ``decode_step`` the decode_32k / long_500k dry-run
+shapes lower on the production mesh.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch qwen1.5-0.5b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.time()
+    out = generate(params, cfg, prompts,
+                   max_len=args.prompt_len + args.gen, gen=args.gen)
+    dt = time.time() - t0
+    assert out.shape == (args.batch, args.prompt_len + args.gen)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+    toks = args.batch * args.gen
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}: {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s on CPU)")
+    print("first sequence:", out[0].tolist())
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end driver: federated LM training with SCALA on a reduced
+qwen1.5-0.5b (the framework's production path — transformer split model,
+fused LACE loss, stacked-client layout) for a few hundred local steps.
+
+This is the same code path the multi-pod dry-run lowers onto the
+16x16 / 2x16x16 mesh; here it runs on CPU with a reduced config.
+
+  PYTHONPATH=src python examples/train_lm_scala.py [--rounds 8]
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+
+    sys.argv = [
+        "train", "--arch", args.arch, "--reduced",
+        "--rounds", str(args.rounds), "--clients", "8",
+        "--participation", "0.5", "--local-iters", "4",
+        "--seq", "64", "--server-batch", "16", "--docs-per-client", "16",
+    ]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

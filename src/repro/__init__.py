@@ -1,0 +1,3 @@
+"""repro: SCALA (Split Federated Learning with Concatenated Activations
+and Logit Adjustments) as a production multi-pod JAX framework."""
+__version__ = "1.0.0"

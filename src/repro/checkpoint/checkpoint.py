@@ -1,0 +1,67 @@
+"""Pytree checkpointing: host-gathered ``.npz`` + a JSON treedef.
+
+Sharded arrays are gathered to host before save (fine at the scales this
+container trains; a production deployment would swap in tensorstore /
+orbax-style per-shard IO behind the same ``save``/``restore`` API).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(directory, "treedef.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "step": step}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.match(r"ckpt_(\d+)\.npz$", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        arrays = dict(data)
+    keys = list(_flatten_with_paths(template))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    assert len(keys) == len(leaves)
+    new_leaves = []
+    for key, leaf in zip(keys, leaves):
+        a = arrays[key]
+        assert a.shape == leaf.shape, (key, a.shape, leaf.shape)
+        new_leaves.append(a.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

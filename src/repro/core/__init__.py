@@ -1,0 +1,11 @@
+from repro.core import baselines, label_stats, logit_adjust, losses, scala, split  # noqa: F401
+from repro.core.scala import (  # noqa: F401
+    SplitModel,
+    alexnet_split_model,
+    init_scala_params,
+    scala_aggregate,
+    scala_local_step,
+    scala_local_step_fused,
+    scala_round,
+    transformer_split_model,
+)

@@ -1,0 +1,296 @@
+"""Baselines the paper compares against (Tables 1-6).
+
+FL family (full model on clients, FedAvg aggregation):
+  fedavg, fedprox, feddyn, feddecorr, fedlogit (eq. 15 used locally),
+  fedla (FedLC-style logit calibration).
+
+SFL family (split model):
+  splitfed_v1 (per-client server copies, both halves averaged per round),
+  splitfed_v2 (shared server model updated sequentially; no server avg),
+  splitfed_v3 (personalized client halves, server averaged),
+  sfl_localloss (auxiliary client head; no server->client gradients).
+
+All baselines run at CPU scale (the paper's AlexNet / MLP experiments);
+SCALA itself additionally scales to the production mesh via core.scala.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.label_stats import histogram, prior
+from repro.core.scala import SplitModel
+from repro.core.split import fedavg
+
+FL_METHODS = ("fedavg", "fedprox", "feddyn", "feddecorr", "fedlogit", "fedla")
+SFL_METHODS = ("splitfed_v1", "splitfed_v2", "splitfed_v3", "sfl_localloss")
+
+
+@dataclass(frozen=True)
+class FedModel:
+    """Full (non-split) model adapter for the FL baselines."""
+
+    forward: Callable[[Any, Any], Any]              # (params, x) -> logits
+    num_classes: int
+    # optional feature extractor for FedDecorr
+    features: Optional[Callable[[Any, Any], Any]] = None
+
+
+# ---------------------------------------------------------------------------
+# local losses
+# ---------------------------------------------------------------------------
+
+
+def _decorr_loss(feats):
+    """FedDecorr: squared off-diagonal correlation of normalized features."""
+    f = feats.reshape(feats.shape[0], -1).astype(jnp.float32)
+    f = (f - f.mean(0)) / (f.std(0) + 1e-5)
+    n = f.shape[0]
+    corr = (f.T @ f) / n
+    d = corr.shape[0]
+    off = corr - jnp.diag(jnp.diag(corr))
+    return jnp.sum(off ** 2) / (d * d)
+
+
+def make_local_loss(method: str, model: FedModel, *, mu: float = 0.01,
+                    alpha: float = 0.01, beta: float = 0.1,
+                    tau: float = 1.0):
+    N = model.num_classes
+
+    def base_ce(params, batch, ctx):
+        logits = model.forward(params, batch["x"])
+        return losses.softmax_xent(logits, batch["labels"])
+
+    if method == "fedavg":
+        return base_ce
+
+    if method == "fedprox":
+        def loss(params, batch, ctx):
+            prox = sum(jnp.sum((a - b.astype(a.dtype)) ** 2) for a, b in zip(
+                jax.tree.leaves(params), jax.tree.leaves(ctx["w_global"])))
+            return base_ce(params, batch, ctx) + 0.5 * mu * prox
+        return loss
+
+    if method == "feddyn":
+        def loss(params, batch, ctx):
+            lin = sum(jnp.sum(a * g) for a, g in zip(
+                jax.tree.leaves(params), jax.tree.leaves(ctx["h_k"])))
+            prox = sum(jnp.sum((a - b.astype(a.dtype)) ** 2) for a, b in zip(
+                jax.tree.leaves(params), jax.tree.leaves(ctx["w_global"])))
+            return base_ce(params, batch, ctx) - lin + 0.5 * alpha * prox
+        return loss
+
+    if method == "feddecorr":
+        assert model.features is not None, "feddecorr needs model.features"
+        def loss(params, batch, ctx):
+            logits = model.forward(params, batch["x"])
+            feats = model.features(params, batch["x"])
+            return (losses.softmax_xent(logits, batch["labels"])
+                    + beta * _decorr_loss(feats))
+        return loss
+
+    if method == "fedlogit":
+        # eq. (15) applied to purely-local FL training
+        def loss(params, batch, ctx):
+            logits = model.forward(params, batch["x"])
+            return losses.softmax_xent(logits, batch["labels"],
+                                       prior=ctx["p_k"], tau=tau)
+        return loss
+
+    if method == "fedla":
+        # FedLC (Zhang et al. 2022): margin calibration by count^{-1/4}
+        def loss(params, batch, ctx):
+            logits = model.forward(params, batch["x"]).astype(jnp.float32)
+            margin = tau * (ctx["counts_k"] + 1e-8) ** -0.25
+            return losses.softmax_xent(logits - margin, batch["labels"])
+        return loss
+
+    raise ValueError(f"unknown FL method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# FL runner
+# ---------------------------------------------------------------------------
+
+
+def fl_local_round(loss_fn, w_global, batches, ctx, lr: float):
+    """T local SGD steps from w_global. batches leaves: (T, Bk, ...)."""
+
+    def step(w, batch):
+        g = jax.grad(loss_fn)(w, batch, ctx)
+        return jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype), w, g), None
+
+    w, _ = jax.lax.scan(step, w_global, batches)
+    return w
+
+
+def make_fl_round(method: str, model: FedModel, lr: float, **kw):
+    """Returns round(w_global, round_batches, client_labels_counts, state)
+    -> (w_global', state'). round_batches leaves: (C, T, Bk, ...).
+    """
+    loss_fn = make_local_loss(method, model, **kw)
+    alpha = kw.get("alpha", 0.01)
+
+    def round_fn(w_global, round_batches, data_sizes, state):
+        C = jax.tree.leaves(round_batches)[0].shape[0]
+        counts = jax.vmap(
+            lambda b: histogram(b, model.num_classes))(
+                round_batches["labels"].reshape(C, -1))
+        p_k = jax.vmap(prior)(counts)
+
+        def one_client(batches_k, counts_k, pk_k, h_k):
+            ctx = {"w_global": w_global, "p_k": pk_k, "counts_k": counts_k,
+                   "h_k": h_k}
+            return fl_local_round(loss_fn, w_global, batches_k, ctx, lr)
+
+        if method == "feddyn":
+            h = state["h"]
+            w_k = jax.vmap(one_client)(round_batches, counts, p_k, h)
+            # h_k <- h_k - alpha (w_k - w_global)
+            new_h = jax.tree.map(
+                lambda hk, wk, wg: hk - alpha * (wk - wg[None]),
+                h, w_k, w_global)
+            state = {"h": new_h}
+        else:
+            dummy_h = jax.tree.map(
+                lambda a: jnp.zeros((C,) + a.shape, a.dtype), w_global)
+            w_k = jax.vmap(one_client)(round_batches, counts, p_k, dummy_h)
+        return fedavg(w_k, data_sizes), state
+
+    return round_fn
+
+
+def init_fl_state(method: str, w_global, num_clients: int):
+    if method == "feddyn":
+        return {"h": jax.tree.map(
+            lambda a: jnp.zeros((num_clients,) + a.shape, a.dtype), w_global)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# SFL baselines (split model)
+# ---------------------------------------------------------------------------
+
+
+def _ce_through_split(model: SplitModel, wc, ws, batch):
+    acts = model.client_fwd(wc, batch)
+    logits, aux = model.server_fwd(ws, acts)
+    return losses.softmax_xent(logits, batch["labels"]) + aux
+
+
+def make_sfl_round(method: str, model: SplitModel, lr: float,
+                   aux_head_fwd=None):
+    """SFL-family round functions.
+
+    State layout: {'wc': stacked (C,...) or shared, 'ws': ..., 'aux': ...}.
+    round_batches leaves: (C, T, Bk, ...).
+    """
+
+    def local_steps_pair(wc, ws, batches_k):
+        def step(carry, batch):
+            wc, ws = carry
+            gc, gs = jax.grad(
+                lambda a, b: _ce_through_split(model, a, b, batch),
+                argnums=(0, 1))(wc, ws)
+            wc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), wc, gc)
+            ws = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), ws, gs)
+            return (wc, ws), None
+        (wc, ws), _ = jax.lax.scan(step, (wc, ws), batches_k)
+        return wc, ws
+
+    if method in ("splitfed_v1", "splitfed_v3"):
+        def round_fn(state, round_batches, data_sizes):
+            wc_stack = state["wc"]                     # (C, ...)
+            ws = state["ws"]
+            wc_k, ws_k = jax.vmap(
+                lambda wc, b: local_steps_pair(wc, ws, b))(wc_stack, round_batches)
+            new_ws = fedavg(ws_k, data_sizes)
+            if method == "splitfed_v1":
+                new_wc_avg = fedavg(wc_k, data_sizes)
+                C = jax.tree.leaves(wc_k)[0].shape[0]
+                new_wc = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (C,) + a.shape),
+                    new_wc_avg)
+            else:  # v3: personalized client halves
+                new_wc = wc_k
+            return {"wc": new_wc, "ws": new_ws}
+        return round_fn
+
+    if method == "splitfed_v2":
+        # shared server model, clients processed sequentially per local step
+        def round_fn(state, round_batches, data_sizes):
+            wc_stack, ws = state["wc"], state["ws"]
+            C = jax.tree.leaves(wc_stack)[0].shape[0]
+            T = jax.tree.leaves(round_batches)[0].shape[1]
+
+            def local_step(carry, t):
+                wc_stack, ws = carry
+
+                def per_client(carry_ws, k):
+                    ws = carry_ws
+                    batch = jax.tree.map(lambda a: a[k, t], round_batches)
+                    wc = jax.tree.map(lambda a: a[k], wc_stack)
+                    gc, gs = jax.grad(
+                        lambda a, b: _ce_through_split(model, a, b, batch),
+                        argnums=(0, 1))(wc, ws)
+                    ws = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                      ws, gs)
+                    return ws, gc
+
+                ws, gcs = jax.lax.scan(per_client, ws, jnp.arange(C))
+                wc_stack = jax.tree.map(
+                    lambda p, g: p - lr * g.astype(p.dtype), wc_stack, gcs)
+                return (wc_stack, ws), None
+
+            (wc_stack, ws), _ = jax.lax.scan(
+                local_step, (wc_stack, ws), jnp.arange(T))
+            new_wc_avg = fedavg(wc_stack, data_sizes)
+            new_wc = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), new_wc_avg)
+            return {"wc": new_wc, "ws": ws}
+        return round_fn
+
+    if method == "sfl_localloss":
+        assert aux_head_fwd is not None
+        def round_fn(state, round_batches, data_sizes):
+            wc_stack, ws, aux_stack = state["wc"], state["ws"], state["aux"]
+
+            def one_client(wc, aux_p, batches_k):
+                def step(carry, batch):
+                    wc, aux_p, ws_l = carry
+                    # client: local auxiliary loss only
+                    def closs(wc_, aux_):
+                        acts = model.client_fwd(wc_, batch)
+                        lg = aux_head_fwd(aux_, acts["x"])
+                        return losses.softmax_xent(lg, batch["labels"])
+                    gc, ga = jax.grad(closs, argnums=(0, 1))(wc, aux_p)
+                    wc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), wc, gc)
+                    aux_p = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), aux_p, ga)
+                    # server: trains on (detached) activations
+                    acts = model.client_fwd(wc, batch)
+                    acts = jax.tree.map(jax.lax.stop_gradient, acts)
+                    def sloss(ws_):
+                        lg, aux = model.server_fwd(ws_, acts)
+                        return losses.softmax_xent(lg, batch["labels"]) + aux
+                    gs = jax.grad(sloss)(ws_l)
+                    ws_l = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), ws_l, gs)
+                    return (wc, aux_p, ws_l), None
+                (wc, aux_p, ws_l), _ = jax.lax.scan(step, (wc, aux_p, ws), batches_k)
+                return wc, aux_p, ws_l
+
+            wc_k, aux_k, ws_k = jax.vmap(one_client)(wc_stack, aux_stack,
+                                                     round_batches)
+            new_ws = fedavg(ws_k, data_sizes)
+            new_wc_avg = fedavg(wc_k, data_sizes)
+            C = jax.tree.leaves(wc_k)[0].shape[0]
+            bcast = lambda a: jnp.broadcast_to(a[None], (C,) + a.shape)
+            return {"wc": jax.tree.map(bcast, new_wc_avg),
+                    "ws": new_ws,
+                    "aux": jax.tree.map(bcast, fedavg(aux_k, data_sizes))}
+        return round_fn
+
+    raise ValueError(f"unknown SFL method {method!r}")

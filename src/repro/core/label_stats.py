@@ -1,0 +1,58 @@
+"""Label-distribution statistics: P_k(y) per client, P_s(y) concatenated.
+
+The paper's server receives label sets Y_k with the activations (Alg. 1
+line 12) and forms the concatenated distribution P_s (eq. 14) plus the
+per-client distributions P_k (eq. 15). Histograms are scatter-adds (no
+one-hot materialization — the LM archs have 262k classes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def histogram(labels, num_classes: int, weights=None):
+    """Count labels. labels: int array any shape; weights broadcastable.
+
+    Returns float32 counts (num_classes,).
+    """
+    flat = labels.reshape(-1)
+    if weights is None:
+        w = jnp.ones_like(flat, jnp.float32)
+    else:
+        w = jnp.broadcast_to(weights, labels.shape).reshape(-1).astype(jnp.float32)
+    valid = (flat >= 0) & (flat < num_classes)
+    idx = jnp.clip(flat, 0, num_classes - 1)
+    return jnp.zeros((num_classes,), jnp.float32).at[idx].add(
+        jnp.where(valid, w, 0.0))
+
+
+def prior(counts, eps: float = 1e-8):
+    """Normalize counts -> P(y); all-zero counts give the uniform prior."""
+    total = counts.sum()
+    n = counts.shape[-1]
+    uniform = jnp.full_like(counts, 1.0 / n)
+    p = counts / jnp.maximum(total, eps)
+    return jnp.where(total > 0, p, uniform)
+
+
+def client_and_concat_priors(labels, num_classes: int, weights=None,
+                             client_axis: int = 0, eps: float = 1e-8):
+    """labels: (C, ...) per-client labels. Returns (P_k (C,N), P_s (N,)).
+
+    P_s is the *concatenated* distribution (eq. 5-6): the histogram of the
+    union batch — i.e. the sum of client histograms, NOT the mean of
+    client priors (clients contribute proportionally to B_k, eq. 3).
+    """
+    import jax
+
+    assert client_axis == 0
+    if weights is None:
+        counts = jax.vmap(lambda l: histogram(l, num_classes))(labels)
+    else:
+        counts = jax.vmap(lambda l, w: histogram(l, num_classes, w))(
+            labels, weights)
+    p_k = jax.vmap(lambda c: prior(c, eps))(counts)
+    p_s = prior(counts.sum(axis=0), eps)
+    return p_k, p_s

@@ -1,0 +1,59 @@
+"""Cross-entropy losses (plain + logit-adjusted), reference jnp path.
+
+The Pallas fused kernel (:mod:`repro.kernels.lace`) implements the same
+adjusted-CE math with blocked vocab; :func:`softmax_xent` is its oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.logit_adjust import adjust_logits
+
+
+def softmax_xent(logits, labels, *, weights=None, prior=None,
+                 tau: float = 1.0, label_smoothing: float = 0.0,
+                 prior_eps: float = 1e-8):
+    """Weighted-mean softmax cross-entropy with optional logit adjustment.
+
+    logits: (..., N); labels: (...) int; weights: (...) or None;
+    prior: (N,) or broadcastable to (..., N) — eq. (14)/(15) adjustment.
+    Returns scalar f32 loss.
+    """
+    z = logits.astype(jnp.float32)
+    if prior is not None:
+        z = adjust_logits(z, prior, tau, prior_eps)
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    ll = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if label_smoothing > 0.0:
+        n = z.shape[-1]
+        mean_z = z.mean(axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * (lse - mean_z)
+    if weights is None:
+        return nll.mean()
+    w = weights.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1e-8)
+
+
+def accuracy(logits, labels, weights=None):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if weights is None:
+        return correct.mean()
+    w = weights.astype(jnp.float32)
+    return (correct * w).sum() / jnp.maximum(w.sum(), 1e-8)
+
+
+def per_class_accuracy(logits, labels, num_classes: int):
+    """Balanced (macro-averaged) accuracy — the paper's motivating metric."""
+    pred = jnp.argmax(logits, axis=-1).reshape(-1)
+    lab = labels.reshape(-1)
+    correct = (pred == lab).astype(jnp.float32)
+    hits = jnp.zeros((num_classes,)).at[lab].add(correct)
+    counts = jnp.zeros((num_classes,)).at[lab].add(1.0)
+    per_class = hits / jnp.maximum(counts, 1.0)
+    present = counts > 0
+    return (per_class * present).sum() / jnp.maximum(present.sum(), 1.0)

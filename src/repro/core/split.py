@@ -1,0 +1,48 @@
+"""Client-model stacking and FedAvg aggregation (paper eqs. 3, 10).
+
+On the TPU mesh, "the C participating clients" are the slices of the
+client-parallel axis; the per-client client-side models are a single
+pytree whose leaves carry a leading ``client`` dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stack_client_params(client_params, num_clients: int):
+    """Replicate one client-side pytree into (C, ...) stacked params —
+    every participating client starts a round from the aggregated model
+    (Alg. 1 line 7)."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (num_clients,) + a.shape), client_params)
+
+
+def fedavg(stacked_params, data_sizes=None):
+    """eq. (10): weighted average over the leading client axis."""
+    if data_sizes is None:
+        return jax.tree.map(lambda a: a.mean(axis=0), stacked_params)
+    w = data_sizes.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-8)
+
+    def avg(a):
+        wb = w.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        return (a * wb).sum(axis=0)
+
+    return jax.tree.map(avg, stacked_params)
+
+
+def redistribute(stacked_params, data_sizes=None):
+    """FedAvg + broadcast back to all client slots (end of round)."""
+    avg = fedavg(stacked_params, data_sizes)
+    C = jax.tree.leaves(stacked_params)[0].shape[0]
+    return stack_client_params(avg, C)
+
+
+def client_minibatch_sizes(data_sizes, server_batch: int):
+    """eq. (3): B_k = |D_k| * B / sum |D_k| (integer, >=1)."""
+    import numpy as np
+
+    d = np.asarray(data_sizes, dtype=np.float64)
+    b = np.maximum(1, np.floor(d * server_batch / d.sum())).astype(int)
+    return b

@@ -1,0 +1,3 @@
+from repro.data import loader, partition, synthetic  # noqa: F401
+from repro.data.loader import FederatedData, lm_round_batches, round_batches, sample_clients  # noqa: F401
+from repro.data.partition import partition as partition_labels  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+
+* lace       — fused logit-adjusted softmax CE (the paper's loss, eqs. 14/15)
+* flash_attn — blocked attention with sliding-window skip
+* mlstm      — chunkwise mLSTM for the xLSTM arch
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Validated in interpret mode on CPU.
+"""
+from repro.kernels import flash_attn, lace, mlstm  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.flash_attn import kernel, ops, ref  # noqa: F401

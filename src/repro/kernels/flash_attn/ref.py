@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (causal + sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window=None, scale=None):
+    """q,k,v: (B, S, H, hd) (kv already repeated to H heads).
+    Returns (B, S, H, hd)."""
+    S, Skv = q.shape[1], k.shape[1]
+    scale = scale or q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,1 @@
+from repro.kernels.lace import kernel, ops, ref  # noqa: F401

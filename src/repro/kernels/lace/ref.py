@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused Logit-Adjusted Cross-Entropy (LACE).
+
+Semantics (paper eqs. 14/15): per token i with features f_i, head weight
+W (d, V), label y_i, prior row P[pid_i] and temperature tau,
+
+    z_i   = f_i @ W + tau * log(P[pid_i] + eps)      (adjusted logits)
+    nll_i = logsumexp(z_i) - z_i[y_i]
+    loss  = sum_i w_i nll_i / sum_i w_i
+
+This oracle materializes the full (N, V) logits — correct but memory-
+hungry; it exists to validate the chunked ops and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lace_ref(feats, w_head, labels, *, prior_rows=None, prior_ids=None,
+             tau: float = 1.0, weights=None, eps: float = 1e-8):
+    """feats: (N, d); w_head: (d, V); labels: (N,) int;
+    prior_rows: (K, V) or None; prior_ids: (N,) int into prior_rows.
+    Returns scalar f32 loss."""
+    z = (feats.astype(jnp.float32) @ w_head.astype(jnp.float32))
+    if prior_rows is not None:
+        lp = jnp.log(prior_rows.astype(jnp.float32) + eps)
+        if prior_ids is None:
+            adj = lp[0]
+        else:
+            adj = lp[prior_ids]
+        z = z + tau * adj
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    ll = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+    nll = lse - ll
+    if weights is None:
+        return nll.mean()
+    w = weights.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1e-8)

@@ -1,0 +1,1 @@
+from repro.kernels.mlstm import kernel, ops, ref  # noqa: F401

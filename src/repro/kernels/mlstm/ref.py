@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the chunkwise mLSTM: the exact per-step recurrence
+(arXiv:2405.04517, stabilized form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, i_raw, f_log):
+    """q,k,v: (S, dk/dv) single head; i_raw, f_log: (S,). Step-by-step.
+
+    Returns h (S, dv)."""
+    S, dk = q.shape
+    dv = v.shape[1]
+
+    def step(state, inp):
+        C, n, m = state
+        qt, kt, vt, it, ft = inp
+        m_new = jnp.maximum(ft + m, it)
+        wf = jnp.exp(ft + m - m_new)
+        wi = jnp.exp(it - m_new)
+        C = wf * C + wi * jnp.outer(kt, vt)
+        n = wf * n + wi * kt
+        num = qt @ C
+        den = jnp.maximum(jnp.abs(qt @ n), jnp.exp(-m_new))
+        return (C, n, m_new), num / den
+
+    state0 = (jnp.zeros((dk, dv)), jnp.zeros((dk,)), jnp.zeros(()))
+    _, h = jax.lax.scan(step, state0, (q, k, v, i_raw, f_log))
+    return h

@@ -1,0 +1,2 @@
+from repro.launch import input_specs, mesh  # noqa: F401
+from repro.launch.mesh import make_host_mesh, make_production_mesh, num_clients_for  # noqa: F401

@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct stand-ins + logical axes for every lowered entrypoint.
+
+No device allocation: these are exactly what ``jax.jit(...).lower()``
+consumes for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.models.common import dtype_of
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes_train() -> Dict[str, tuple]:
+    return {
+        "tokens": ("client", "per_client_batch", "seq"),
+        "labels": ("client", "per_client_batch", "seq"),
+        "weights": ("client", "per_client_batch", "seq"),
+    }
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, num_clients: int
+                      ) -> Tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for one SCALA local step.
+
+    Labels cover the full (prefix + text) sequence; prefix positions get
+    zero weight — matching what the loss actually sees.
+    """
+    C = num_clients
+    assert shape.global_batch % C == 0, (shape.name, C)
+    bk = shape.global_batch // C
+    P = cfg.num_prefix_tokens if cfg.frontend == "vision" else 0
+    text = shape.seq_len - P
+    assert text > 0
+
+    specs = {
+        "tokens": SDS((C, bk, text), jnp.int32),
+        "labels": SDS((C, bk, shape.seq_len), jnp.int32),
+        "weights": SDS((C, bk, shape.seq_len), jnp.float32),
+    }
+    axes = _batch_axes_train()
+    emb_dtype = dtype_of(cfg.dtype)
+    if cfg.frontend == "vision":
+        specs["prefix_emb"] = SDS((C, bk, cfg.num_prefix_tokens,
+                                   cfg.frontend_dim), emb_dtype)
+        axes["prefix_emb"] = ("client", "per_client_batch", "prefix", "frontend")
+    if cfg.frontend == "audio":
+        specs["memory_emb"] = SDS((C, bk, cfg.num_prefix_tokens,
+                                   cfg.frontend_dim), emb_dtype)
+        axes["memory_emb"] = ("client", "per_client_batch", "prefix", "frontend")
+    return specs, axes
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape
+                        ) -> Tuple[dict, dict]:
+    B = shape.global_batch
+    P = cfg.num_prefix_tokens if cfg.frontend == "vision" else 0
+    text = shape.seq_len - P
+    specs = {"tokens": SDS((B, text), jnp.int32)}
+    axes = {"tokens": ("batch", "seq")}
+    emb_dtype = dtype_of(cfg.dtype)
+    if cfg.frontend == "vision":
+        specs["prefix_emb"] = SDS((B, cfg.num_prefix_tokens, cfg.frontend_dim),
+                                  emb_dtype)
+        axes["prefix_emb"] = ("batch", "prefix", "frontend")
+    if cfg.frontend == "audio":
+        specs["memory_emb"] = SDS((B, cfg.num_prefix_tokens, cfg.frontend_dim),
+                                  emb_dtype)
+        axes["memory_emb"] = ("batch", "prefix", "frontend")
+    return specs, axes
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape
+                       ) -> Tuple[dict, dict, dict, dict]:
+    """Returns (batch_specs, batch_axes, cache_specs, cache_axes)."""
+    B = shape.global_batch
+    specs = {"tokens": SDS((B, 1), jnp.int32)}
+    axes = {"tokens": ("batch", "seq")}
+    if cfg.frontend == "audio":
+        specs["memory_emb"] = SDS((B, cfg.num_prefix_tokens, cfg.frontend_dim),
+                                  dtype_of(cfg.dtype))
+        axes["memory_emb"] = ("batch", "prefix", "frontend")
+
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_decode_cache(cfg, B, shape.seq_len))
+    cache_ax = T.cache_axes(cfg)
+    return specs, axes, cache_shapes, cache_ax
+
+
+def param_specs(cfg: ModelConfig, num_clients: int = 0):
+    """(ShapeDtypeStruct tree, logical-axes tree) for model params.
+
+    num_clients > 0 -> SCALA layout (client half stacked over clients);
+    num_clients == 0 -> merged/serving layout.
+    """
+    shapes = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    axes = T.param_axes(cfg)
+    if num_clients > 0:
+        shapes = dict(shapes)
+        shapes["client"] = jax.tree.map(
+            lambda s: SDS((num_clients,) + s.shape, s.dtype), shapes["client"])
+        axes = dict(axes)
+        axes["client"] = jax.tree.map(
+            lambda a: ("client",) + a, axes["client"],
+            is_leaf=lambda a: isinstance(a, tuple))
+    return shapes, axes

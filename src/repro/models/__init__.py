@@ -1,0 +1,1 @@
+from repro.models import alexnet, blocks, transformer  # noqa: F401

@@ -1,0 +1,139 @@
+"""AlexNet adapted for 32x32 inputs — the paper's own model (Appendix E).
+
+Conv stack (5 convs + pools) + 2 FC layers + classifier. The split point
+``s1..s5`` (Appendix H) selects how many conv layers stay on the client;
+the paper's default (§5.1, "first 6 layers client / last 8 server")
+corresponds to s2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.alexnet_cifar import CONV_CHANNELS, FC_WIDTHS, SPLIT_POINTS
+
+# (kernel, stride, pool_after) per conv layer; pools are 2x2 max.
+_CONV_SPECS = [(3, 1, True), (3, 1, True), (3, 1, False), (3, 1, False), (3, 1, True)]
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / jnp.sqrt(k * k * cin)
+    return {
+        "w": jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout)) * scale,
+        "b": jnp.zeros((cout,)),
+    }
+
+
+def _fc_init(key, din, dout):
+    scale = 1.0 / jnp.sqrt(din)
+    return {
+        "w": jax.random.truncated_normal(key, -2, 2, (din, dout)) * scale,
+        "b": jnp.zeros((dout,)),
+    }
+
+
+def _flat_dim(channels, in_hw: int = 32) -> int:
+    hw = in_hw
+    for _, _, pool in _CONV_SPECS:
+        if pool:
+            hw //= 2
+    return hw * hw * channels[-1]
+
+
+def init_params(key, num_classes: int = 10, in_channels: int = 3,
+                width: float = 1.0):
+    """width < 1 scales channels/FC widths for CPU-scale benchmark runs;
+    the paper's exact architecture is width=1.0."""
+    channels = [max(8, int(c * width)) for c in CONV_CHANNELS]
+    fc_widths = [max(32, int(f * width)) for f in FC_WIDTHS]
+    keys = jax.random.split(key, len(channels) + len(fc_widths) + 1)
+    convs = []
+    cin = in_channels
+    for i, cout in enumerate(channels):
+        convs.append(_conv_init(keys[i], _CONV_SPECS[i][0], cin, cout))
+        cin = cout
+    fcs = []
+    din = _flat_dim(channels)
+    for j, w in enumerate(fc_widths):
+        fcs.append(_fc_init(keys[len(channels) + j], din, w))
+        din = w
+    head = _fc_init(keys[-1], din, num_classes)
+    return {"convs": convs, "fcs": fcs, "head": head}
+
+
+def _conv_apply(p, x, pool):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"])
+    if pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return y
+
+
+def client_forward(params, x, split: str = "s2"):
+    """x: (B,32,32,3) -> activations after `split` conv layers."""
+    n = SPLIT_POINTS[split]
+    for i in range(n):
+        x = _conv_apply(params["convs"][i], x, _CONV_SPECS[i][2])
+    return x
+
+
+def server_forward(params, acts, split: str = "s2"):
+    """Remaining convs + FCs + classifier. Returns logits (B, classes)."""
+    n = SPLIT_POINTS[split]
+    x = acts
+    for i in range(n, len(params["convs"])):
+        x = _conv_apply(params["convs"][i], x, _CONV_SPECS[i][2])
+    x = x.reshape(x.shape[0], -1)
+    for fc in params["fcs"]:
+        x = jax.nn.relu(x @ fc["w"] + fc["b"])
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def forward(params, x, split: str = "s2"):
+    return server_forward(params, client_forward(params, x, split), split)
+
+
+def features(params, x):
+    """Representation before the classifier head (last FC activation) —
+    used by FedDecorr's dimensional-collapse regularizer."""
+    for i, p in enumerate(params["convs"]):
+        x = _conv_apply(p, x, _CONV_SPECS[i][2])
+    x = x.reshape(x.shape[0], -1)
+    for fc in params["fcs"]:
+        x = jax.nn.relu(x @ fc["w"] + fc["b"])
+    return x
+
+
+def split_params(params, split: str = "s2"):
+    """Partition the pytree into (client_side, server_side)."""
+    n = SPLIT_POINTS[split]
+    client = {"convs": params["convs"][:n]}
+    server = {"convs": params["convs"][n:], "fcs": params["fcs"],
+              "head": params["head"]}
+    return client, server
+
+
+def merge_params(client, server):
+    return {"convs": client["convs"] + server["convs"],
+            "fcs": server["fcs"], "head": server["head"]}
+
+
+def client_forward_from_split(client_params, x, split: str = "s2"):
+    """Forward through the client half only (params already partitioned)."""
+    for i, p in enumerate(client_params["convs"]):
+        x = _conv_apply(p, x, _CONV_SPECS[i][2])
+    return x
+
+
+def server_forward_from_split(server_params, acts, split: str = "s2"):
+    offset = SPLIT_POINTS[split]
+    x = acts
+    for i, p in enumerate(server_params["convs"]):
+        x = _conv_apply(p, x, _CONV_SPECS[offset + i][2])
+    x = x.reshape(x.shape[0], -1)
+    for fc in server_params["fcs"]:
+        x = jax.nn.relu(x @ fc["w"] + fc["b"])
+    return x @ server_params["head"]["w"] + server_params["head"]["b"]

@@ -1,0 +1,214 @@
+"""Residual block assembly: one BlockSpec -> params/apply/axes/cache.
+
+A block is: pre-norm -> mixer (+residual) [-> pre-norm -> cross-attn
+(+residual)] [-> pre-norm -> ffn (+residual)]. xLSTM blocks carry their
+FFN inside the mixer (ffn == 'none').
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models.layers import attention, mamba, mlp, moe, norms, xlstm
+
+
+# ---------------------------------------------------------------------------
+# init / axes
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "attn": lambda k, cfg: attention.attn_init(k, cfg),
+    "mamba": lambda k, cfg: mamba.mamba_init(k, cfg),
+    "mlstm": lambda k, cfg: xlstm.mlstm_init(k, cfg),
+    "slstm": lambda k, cfg: xlstm.slstm_init(k, cfg),
+}
+
+_MIXER_AXES = {
+    "attn": lambda cfg: attention.attn_axes(cfg),
+    "mamba": lambda cfg: mamba.mamba_axes(cfg),
+    "mlstm": lambda cfg: xlstm.mlstm_axes(cfg),
+    "slstm": lambda cfg: xlstm.slstm_axes(cfg),
+}
+
+
+def block_init(key, spec: BlockSpec, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norms.rms_norm_init(cfg),
+        "mixer": _MIXER_INIT[spec.mixer](ks[0], cfg),
+    }
+    if spec.cross_attn:
+        p["norm_cross"] = norms.rms_norm_init(cfg)
+        p["cross"] = attention.attn_init(ks[1], cfg, cross=True)
+    if spec.ffn == "dense":
+        p["norm2"] = norms.rms_norm_init(cfg)
+        p["ffn"] = mlp.mlp_init(ks[2], cfg)
+    elif spec.ffn == "moe":
+        p["norm2"] = norms.rms_norm_init(cfg)
+        p["ffn"] = moe.moe_init(ks[3], cfg)
+    return p
+
+
+def block_axes(spec: BlockSpec, cfg: ModelConfig):
+    a = {
+        "norm1": norms.rms_norm_axes(cfg),
+        "mixer": _MIXER_AXES[spec.mixer](cfg),
+    }
+    if spec.cross_attn:
+        a["norm_cross"] = norms.rms_norm_axes(cfg)
+        a["cross"] = attention.attn_axes(cfg, cross=True)
+    if spec.ffn == "dense":
+        a["norm2"] = norms.rms_norm_axes(cfg)
+        a["ffn"] = mlp.mlp_axes(cfg)
+    elif spec.ffn == "moe":
+        a["norm2"] = norms.rms_norm_axes(cfg)
+        a["ffn"] = moe.moe_axes(cfg)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _use_chunked(seq_len: int, window: Optional[int]) -> bool:
+    if seq_len > 8192:
+        return True
+    return window is not None and window * 2 <= seq_len
+
+
+def block_apply(params, x, spec: BlockSpec, cfg: ModelConfig, *,
+                positions, memory=None):
+    """Full-sequence forward. Returns (y, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norms.rms_norm_apply(params["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h = attention.attn_apply(
+            params["mixer"], h, cfg, positions=positions, window=spec.window,
+            chunked=_use_chunked(x.shape[1], spec.window))
+    elif spec.mixer == "mamba":
+        h = mamba.mamba_apply(params["mixer"], h, cfg)
+    elif spec.mixer == "mlstm":
+        h = xlstm.mlstm_apply(params["mixer"], h, cfg)
+    elif spec.mixer == "slstm":
+        h = xlstm.slstm_apply(params["mixer"], h, cfg)
+    x = x + h
+
+    if spec.cross_attn:
+        h = norms.rms_norm_apply(params["norm_cross"], x, cfg.norm_eps)
+        h = attention.cross_attn_apply(params["cross"], h, memory, cfg)
+        x = x + h
+
+    if spec.ffn == "dense":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp.mlp_apply(params["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        y, aux = moe.moe_apply(params["ffn"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, stateful caches)
+# ---------------------------------------------------------------------------
+
+
+def block_cache_init(spec: BlockSpec, cfg: ModelConfig, batch: int,
+                     max_len: int, dtype):
+    if spec.mixer == "attn":
+        # windowed layers only need a window-sized cache ring; we keep the
+        # full length for layout uniformity unless the window is smaller.
+        length = max_len if spec.window is None else min(max_len, spec.window)
+        return attention.init_cache(cfg, batch, length, dtype)
+    if spec.mixer == "mamba":
+        return mamba.init_cache(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_init_cache(cfg, batch, dtype)
+    if spec.mixer == "slstm":
+        return xlstm.slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def block_cache_axes(spec: BlockSpec):
+    if spec.mixer == "attn":
+        return attention.cache_axes()
+    if spec.mixer == "mamba":
+        return mamba.cache_axes()
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_cache_axes()
+    if spec.mixer == "slstm":
+        return xlstm.slstm_cache_axes()
+    raise ValueError(spec.mixer)
+
+
+def block_decode(params, x, cache, index, spec: BlockSpec, cfg: ModelConfig,
+                 *, memory=None):
+    """One-token decode. Returns (y, new_cache)."""
+    h = norms.rms_norm_apply(params["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        cache_len = cache["k"].shape[1]
+        # windowed ring cache: write at index % cache_len
+        widx = jnp.remainder(index, cache_len) if spec.window is not None else index
+        if spec.window is not None:
+            h, new_cache = _decode_ring(params["mixer"], h, cache, index,
+                                        widx, cfg, spec.window)
+        else:
+            h, new_cache = attention.attn_decode(params["mixer"], h, cache,
+                                                 index, cfg, window=None)
+    elif spec.mixer == "mamba":
+        h, new_cache = mamba.mamba_decode(params["mixer"], h, cache, cfg)
+    elif spec.mixer == "mlstm":
+        h, new_cache = xlstm.mlstm_decode(params["mixer"], h, cache, cfg)
+    elif spec.mixer == "slstm":
+        h, new_cache = xlstm.slstm_decode(params["mixer"], h, cache, cfg)
+    x = x + h
+
+    if spec.cross_attn:
+        h = norms.rms_norm_apply(params["norm_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_attn_apply(params["cross"], h, memory, cfg)
+
+    if spec.ffn == "dense":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp.mlp_apply(params["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        y, _ = moe.moe_apply(params["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def _decode_ring(params, x, cache, index, widx, cfg, window):
+    """Decode against a ring buffer of size <= window (SWA layers).
+
+    Positions of ring slots are reconstructed from the write index so the
+    relative-window mask stays exact.
+    """
+    from repro.models.layers.attention import (_mask, _project_kv, _project_q,
+                                               _repeat_kv, attend_dense)
+    from repro.models.layers.rope import apply_rope
+
+    cache_len = cache["k"].shape[1]
+    q = _project_q(params, x, cfg)
+    k_new, v_new = _project_kv(params, x, cfg)
+    pos = jnp.full((1,), index, jnp.int32)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), widx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), widx, axis=1)
+    # slot i holds position: the largest p <= index with p % cache_len == i
+    slots = jnp.arange(cache_len)
+    delta = jnp.remainder(widx - slots, cache_len)
+    kv_pos = index - delta
+    kv_pos = jnp.where(kv_pos >= 0, kv_pos, -1)
+    kf = _repeat_kv(k.astype(x.dtype), cfg.num_heads)
+    vf = _repeat_kv(v.astype(x.dtype), cfg.num_heads)
+    out = attend_dense(q, kf, vf, pos, kv_pos, causal=True, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}

@@ -1,0 +1,66 @@
+"""Shared helpers for the functional model library.
+
+Every layer module follows the same convention:
+
+``init(key, cfg, ...) -> params``        pure, eval_shape-friendly
+``apply(params, x, ...) -> y``           pure
+``axes(cfg, ...) -> pytree``             same structure as params, leaves are
+                                          tuples of *logical axis names*
+
+Logical axis names are resolved to mesh axes by :mod:`repro.sharding`.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[str, ...]
+
+DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "int32": jnp.int32,
+}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+def dense_init(key, shape, in_axis_size, dtype) -> jax.Array:
+    """Truncated-normal fan-in initializer (LeCun-style)."""
+    scale = 1.0 / np.sqrt(max(1, in_axis_size))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": gelu,
+    "gelu_mlp": gelu,
+    "relu": jax.nn.relu,
+}

@@ -1,0 +1,11 @@
+from repro.models.layers import (  # noqa: F401
+    attention,
+    embeddings,
+    frontends,
+    mamba,
+    mlp,
+    moe,
+    norms,
+    rope,
+    xlstm,
+)

@@ -1,0 +1,242 @@
+"""Multi-head attention: GQA + RoPE + sliding window + KV cache + cross-attn.
+
+Three execution paths:
+
+* ``dense``   — full (Sq, Skv) score matrix; used for short sequences.
+* ``chunked`` — lax.scan over query chunks; with a sliding window the KV is
+  dynamically sliced to ``window + chunk`` so compute/memory are O(S·w),
+  not O(S²). Used for long prefill and windowed training.
+* ``decode``  — one query token against a (possibly windowed) KV cache.
+
+The dense/chunked paths are the pure-jnp reference; the Pallas flash
+kernel in :mod:`repro.kernels.flash_attn` implements the same math for
+TPU and is validated against :func:`attend_dense` in the kernel tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of
+from repro.models.layers import norms
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+DEFAULT_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, *, cross: bool = False):
+    pd = dtype_of(cfg.param_dtype)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, pd),
+        "wk": dense_init(ks[1], (d, kv, hd), d, pd),
+        "wv": dense_init(ks[2], (d, kv, hd), d, pd),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = norms.head_norm_init(hd)
+        p["k_norm"] = norms.head_norm_init(hd)
+    return p
+
+
+def attn_axes(cfg, *, cross: bool = False):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm and not cross:
+        a["q_norm"] = norms.head_norm_axes()
+        a["k_norm"] = norms.head_norm_axes()
+    return a
+
+
+# ---------------------------------------------------------------------------
+# core attends (q/k/v already projected & roped; k/v have full head count)
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: Optional[int]):
+    """Boolean mask [..., Sq, Skv]; True = attend."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    m &= k >= 0  # kv_pos < 0 marks invalid/unwritten cache slots
+    return m
+
+
+def attend_dense(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int]):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,H,hd); positions: (B?,S) or (S,)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = _mask(q_pos, kv_pos, causal=causal, window=window)
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    else:
+        mask = mask[:, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend_chunked(q, k, v, q_pos, kv_pos, *, causal: bool,
+                   window: Optional[int], chunk: int = DEFAULT_CHUNK):
+    """Query-chunked attention. With a window the KV is sliced per chunk.
+
+    Positions must be 1-D (shared across batch) for the chunked path.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    if Sq % chunk != 0:
+        return attend_dense(q, k, v, q_pos, kv_pos, causal=causal, window=window)
+
+    nchunks = Sq // chunk
+    qc = q.reshape(B, nchunks, chunk, H, hd).swapaxes(0, 1)  # (n, B, c, H, hd)
+    qp = q_pos.reshape(nchunks, chunk)
+
+    windowed = window is not None and (window + chunk) < Skv
+
+    def body(_, inp):
+        qi, qpi, idx = inp
+        if windowed:
+            span = window + chunk
+            start = jnp.clip(idx * chunk - window, 0, Skv - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(kv_pos, start, span, axis=0)
+        else:
+            ki, vi, kpi = k, v, kv_pos
+        out = attend_dense(qi, ki, vi, qpi, kpi, causal=causal, window=window)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None,
+                           (qc, qp, jnp.arange(nchunks)))
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# full layer apply
+# ---------------------------------------------------------------------------
+
+
+def _project_q(params, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    if "q_norm" in params:
+        q = norms.head_norm_apply(params["q_norm"], q, cfg.norm_eps)
+    return q
+
+
+def _project_kv(params, x, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bk" in params:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if "k_norm" in params:
+        k = norms.head_norm_apply(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def _repeat_kv(k, num_heads):
+    reps = num_heads // k.shape[2]
+    return jnp.repeat(k, reps, axis=2) if reps > 1 else k
+
+
+def attn_apply(params, x, cfg, *, positions, window=None,
+               chunked: bool = False):
+    """Self-attention over a full sequence (train / prefill)."""
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, x, cfg)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    attend = attend_chunked if chunked else attend_dense
+    out = attend(q, k, v, positions, positions, causal=True, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def cross_attn_apply(params, x, memory, cfg):
+    """Cross-attention: queries from x, keys/values from encoder memory."""
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, memory, cfg)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    Sq, Skv = x.shape[1], memory.shape[1]
+    out = attend_dense(q, k, v, jnp.arange(Sq), jnp.arange(Skv),
+                       causal=False, window=None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    hd, kv = cfg.head_dim, cfg.num_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def cache_axes():
+    return {
+        "k": ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+
+
+def attn_decode(params, x, cache, index, cfg, *, window=None):
+    """One-token decode. x: (B,1,d); cache k/v: (B,Smax,kv,hd); index: ()
+    = number of tokens already in the cache (the new token's position).
+
+    Returns (y, new_cache).
+    """
+    B = x.shape[0]
+    q = _project_q(params, x, cfg)            # (B,1,H,hd)
+    k_new, v_new = _project_kv(params, x, cfg)  # (B,1,kv,hd)
+    pos = jnp.full((1,), index, jnp.int32)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
+    new_cache = {"k": k, "v": v}
+
+    kf = _repeat_kv(k.astype(x.dtype), cfg.num_heads)
+    vf = _repeat_kv(v.astype(x.dtype), cfg.num_heads)
+    Smax = k.shape[1]
+    kv_pos = jnp.arange(Smax)
+    # slots beyond `index` are unwritten: mark invalid with pos = -1
+    kv_pos = jnp.where(kv_pos <= index, kv_pos, -1)
+    out = attend_dense(q, kf, vf, pos, kv_pos, causal=True, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache

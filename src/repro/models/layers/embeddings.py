@@ -1,0 +1,49 @@
+"""Token embeddings, learned positions, output head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of, embed_init
+
+
+def embedding_init(key, cfg):
+    p = {"tok": embed_init(key, (cfg.vocab_size, cfg.d_model), dtype_of(cfg.param_dtype))}
+    if cfg.pos_embed == "learned":
+        p["pos"] = embed_init(
+            jax.random.fold_in(key, 1),
+            (cfg.max_position, cfg.d_model),
+            dtype_of(cfg.param_dtype),
+        )
+    return p
+
+
+def embedding_axes(cfg):
+    a = {"tok": ("vocab", "embed")}
+    if cfg.pos_embed == "learned":
+        a["pos"] = ("position", "embed")
+    return a
+
+
+def embedding_apply(params, tokens, cfg, positions=None):
+    x = jnp.take(params["tok"], tokens, axis=0).astype(dtype_of(cfg.dtype))
+    if cfg.pos_embed == "learned":
+        assert positions is not None
+        x = x + jnp.take(params["pos"], positions, axis=0).astype(x.dtype)
+    return x
+
+
+def head_init(key, cfg):
+    # NOTE: tied embeddings are deliberately *untied* in this framework:
+    # SCALA places the embedding on clients and the classifier head on the
+    # server; a tie would cross the split privacy boundary (see DESIGN.md).
+    return {"out": dense_init(key, (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                              dtype_of(cfg.param_dtype))}
+
+
+def head_axes(cfg):
+    return {"out": ("embed", "vocab")}
+
+
+def head_apply(params, x, cfg):
+    return jnp.einsum("...d,dv->...v", x, params["out"].astype(x.dtype))

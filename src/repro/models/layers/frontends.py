@@ -1,0 +1,43 @@
+"""Modality frontends (STUBBED per the brief).
+
+The VLM vision encoder (InternViT) and the audio conv/mel encoder
+(Whisper) are NOT implemented — ``input_specs`` supplies pre-computed
+patch / frame embeddings. What IS implemented is the part that belongs to
+the language backbone: the projector that maps frontend embeddings into
+d_model (and, for whisper, the cross-attention memory path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of
+from repro.models.layers import norms
+
+
+def projector_init(key, cfg):
+    """Two-layer MLP projector (InternVL-style) frontend_dim -> d_model."""
+    pd = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": norms.layer_norm_init(cfg.frontend_dim),
+        "fc1": dense_init(k1, (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim, pd),
+        "fc2": dense_init(k2, (cfg.d_model, cfg.d_model), cfg.d_model, pd),
+    }
+
+
+def projector_axes(cfg):
+    return {
+        "norm": norms.layer_norm_axes(),
+        "fc1": ("frontend", "embed"),
+        "fc2": ("embed", "embed_alt"),
+    }
+
+
+def projector_apply(params, emb, cfg):
+    """emb: (B, P, frontend_dim) -> (B, P, d_model)."""
+    x = norms.layer_norm_apply(params["norm"], emb.astype(jnp.float32))
+    x = x.astype(dtype_of(cfg.dtype))
+    x = jnp.einsum("bpf,fd->bpd", x, params["fc1"].astype(x.dtype))
+    x = jax.nn.gelu(x, approximate=True)
+    return jnp.einsum("bpd,de->bpe", x, params["fc2"].astype(x.dtype))

@@ -1,0 +1,173 @@
+"""Mamba-1 selective SSM mixer (Jamba-style), chunkwise-parallel training.
+
+TPU adaptation: instead of the CUDA selective-scan kernel, training uses a
+``lax.scan`` over sequence chunks with a ``lax.associative_scan`` inside
+each chunk — the (B, chunk, d_inner, d_state) working set stays VMEM-sized
+once d_inner is sharded over the model axis, and the HLO remains a compact
+while-loop for the 72-layer dry-runs. Decode is the exact single-step
+recurrence with a (conv window, ssm state) cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of
+
+CHUNK = 64
+
+
+def _dims(cfg):
+    di = cfg.mamba.d_inner(cfg.d_model)
+    dt_rank = math.ceil(cfg.d_model / 16)
+    return di, dt_rank, cfg.mamba.d_state, cfg.mamba.d_conv
+
+
+def mamba_init(key, cfg):
+    pd = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    di, dt_rank, N, dc = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    dt = jnp.exp(
+        jax.random.uniform(ks[5], (di,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    dt_bias = dt + jnp.log1p(-jnp.exp(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, pd),
+        "conv_w": dense_init(ks[1], (dc, di), dc, jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * N), di, pd),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dt_rank, jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), di, pd),
+    }
+
+
+def mamba_axes(cfg):
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": ("conv_k", "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", "lowrank"),
+        "dt_proj": ("lowrank", "inner"),
+        "dt_bias": ("inner",),
+        "A_log": ("inner", "state"),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _causal_conv(x, w, b, prev=None):
+    """Depthwise causal conv. x: (B,S,di); w: (dc,di); prev: (B,dc-1,di)."""
+    dc = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, k : k + S, :] * w[k].astype(x.dtype) for k in range(dc))
+    return y + b.astype(x.dtype), xp[:, -(dc - 1) :, :]
+
+
+def _ssm_inputs(params, xc, cfg):
+    """From conv output xc (B,S,di): dt (B,S,di), Bm/Cm (B,S,N)."""
+    di, dt_rank, N, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,dr->bsr", xc, params["x_proj"].astype(xc.dtype))
+    dt_low, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dt_rank, dt_rank + N], -1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, params["dt_proj"]) + params["dt_bias"])
+    return dt, Bm, Cm
+
+
+def _scan_chunked(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t over axis 1, chunked.
+
+    a, b: (B, S, di, N) f32; h0: (B, di, N). Returns (h_all (B,S,di,N), h_S).
+    """
+    B, S, di, N = a.shape
+    L = min(CHUNK, S)
+    while S % L:
+        L //= 2
+    nchunks = S // L
+    a = a.reshape(B, nchunks, L, di, N).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(B, nchunks, L, di, N).transpose(1, 0, 2, 3, 4)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, ab):
+        ai, bi = ab
+        Acum, Bcum = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        h_all = Acum * h[:, None] + Bcum
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(step, h0, (a, b))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, di, N)
+    return h_all, h_last
+
+
+def mamba_apply(params, x, cfg):
+    """Full-sequence forward. x: (B,S,d) -> (B,S,d)."""
+    di, _, N, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])                                  # (di,N)
+    a = jnp.exp(dt[..., None] * A)                                 # (B,S,di,N)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    h0 = jnp.zeros((x.shape[0], di, N), jnp.float32)
+    h_all, _ = _scan_chunked(a, b, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, dtype):
+    di, _, N, dc = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def cache_axes():
+    return {
+        "conv": ("cache_batch", "conv_k", "inner"),
+        "h": ("cache_batch", "inner", "state"),
+    }
+
+
+def mamba_decode(params, x, cache, cfg):
+    """One-token step. x: (B,1,d). Returns (y, new_cache)."""
+    di, _, N, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                  prev=cache["conv"])
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                             # (B,di,N)
+    b = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * cache["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+    y = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+    return y, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,41 @@
+"""Dense FFN: gated (SwiGLU / GeGLU) or plain two-layer MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, dense_init, dtype_of
+
+
+def _gated(cfg) -> bool:
+    return cfg.act in ("silu", "gelu")
+
+
+def mlp_init(key, cfg):
+    pd = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, (cfg.d_model, cfg.d_ff), cfg.d_model, pd),
+        "down": dense_init(k2, (cfg.d_ff, cfg.d_model), cfg.d_ff, pd),
+    }
+    if _gated(cfg):
+        p["gate"] = dense_init(k3, (cfg.d_model, cfg.d_ff), cfg.d_model, pd)
+    return p
+
+
+def mlp_axes(cfg):
+    a = {"up": ("embed", "ffn"), "down": ("ffn", "embed")}
+    if _gated(cfg):
+        a["gate"] = ("embed", "ffn")
+    return a
+
+
+def mlp_apply(params, x, cfg):
+    act = ACTIVATIONS[cfg.act]
+    up = jnp.einsum("...d,df->...f", x, params["up"].astype(x.dtype))
+    if _gated(cfg):
+        gate = jnp.einsum("...d,df->...f", x, params["gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("...f,fd->...d", h, params["down"].astype(x.dtype))

@@ -1,0 +1,54 @@
+"""RMSNorm / LayerNorm / QK head-norm (functional)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ones, zeros
+
+
+def rms_norm_init(cfg):
+    return {"scale": ones((cfg.d_model,), jnp.float32)}
+
+
+def rms_norm_axes(cfg):
+    return {"scale": ("embed",)}
+
+
+def rms_norm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * (var + eps) ** -0.5 * params["scale"]).astype(dtype)
+
+
+def layer_norm_init(dim):
+    return {"scale": ones((dim,), jnp.float32), "bias": zeros((dim,), jnp.float32)}
+
+
+def layer_norm_axes():
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layer_norm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * (var + eps) ** -0.5
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# head-dim norm for QK-norm (qwen3 / gemma3)
+def head_norm_init(head_dim):
+    return {"scale": ones((head_dim,), jnp.float32)}
+
+
+def head_norm_axes():
+    return {"scale": ("head_dim",)}
+
+
+def head_norm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * (var + eps) ** -0.5 * params["scale"]).astype(dtype)

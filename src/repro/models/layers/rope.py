@@ -1,0 +1,33 @@
+"""Rotary position embeddings (applied per-call from integer positions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: integer array [...]; returns (cos, sin) of shape [..., half]."""
+    inv = _freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+
+    Rotates pairs (x[..., :half], x[..., half:]) — the "GPT-NeoX" layout.
+    Odd head_dims (e.g. danube's 120 is even, fine) require even head_dim.
+    """
+    head_dim = x.shape[-1]
+    assert head_dim % 2 == 0, "rope requires even head_dim"
+    cos, sin = rope_angles(positions, head_dim, theta)  # [..., seq, half]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

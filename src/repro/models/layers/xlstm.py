@@ -1,0 +1,374 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, true recurrence).
+
+The mLSTM chunkwise math mirrors the stabilized formulation of
+arXiv:2405.04517: per head, with log-sigmoid forget gates ``f`` and raw
+input gates ``i``,
+
+    m_t = max(f_t + m_{t-1}, i_t)
+    C_t = e^{f_t + m_{t-1} - m_t} C_{t-1} + e^{i_t - m_t} k_t v_t^T
+    n_t = e^{f_t + m_{t-1} - m_t} n_{t-1} + e^{i_t - m_t} k_t
+    h_t = (q_t C_t) / max(|q_t n_t|, e^{-m_t})
+
+Training evaluates this chunkwise: intra-chunk via an (L, L) decay matrix,
+inter-chunk via the carried (C, n, m) state — the same decomposition the
+Pallas kernel in :mod:`repro.kernels.mlstm` tiles for VMEM. The per-step
+recurrence (used for decode) is the oracle the chunkwise path is tested
+against.
+
+sLSTM has a hidden-to-hidden recurrence (block-diagonal R per head), so it
+is inherently sequential: a ``lax.scan`` over time both for training and
+decode — this is the TPU-honest statement of its cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of
+from repro.models.layers import norms
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    di = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    H = cfg.num_heads
+    return di, H, di // H
+
+
+def mlstm_init(key, cfg):
+    pd = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    di, H, hd = _mlstm_dims(cfg)
+    dc = cfg.xlstm.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), d, pd),
+        "conv_w": dense_init(ks[1], (dc, di), dc, jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        # per-head block-diagonal projections (xLSTM paper §4: "block-
+        # diagonal projection matrices with NH blocks") — a dense (di, di)
+        # here would nearly triple total params (3.6B vs the cited 1.3B)
+        "wq": dense_init(ks[2], (H, hd, hd), hd, pd),
+        "wk": dense_init(ks[3], (H, hd, hd), hd, pd),
+        "wv": dense_init(ks[4], (H, hd, hd), hd, pd),
+        "w_gates": dense_init(ks[5], (di, 2 * H), di, jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]).astype(jnp.float32),
+        "out_norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "down": dense_init(ks[6], (di, d), di, pd),
+    }
+
+
+def mlstm_axes(cfg):
+    return {
+        "up": ("embed", "inner"),
+        "conv_w": ("conv_k", "inner"),
+        "conv_b": ("inner",),
+        "wq": ("heads", "head_dim", "head_dim_alt"),
+        "wk": ("heads", "head_dim", "head_dim_alt"),
+        "wv": ("heads", "head_dim", "head_dim_alt"),
+        "w_gates": ("inner", "gates"),
+        "b_gates": ("gates",),
+        "out_norm": {"scale": ("inner",)},
+        "down": ("inner", "embed"),
+    }
+
+
+def _mlstm_qkvg(params, x, cfg, conv_prev=None):
+    """x: (B,S,d) -> q,k,v (B,S,H,hd), i,f (B,S,H) f32, z (B,S,di), conv_state."""
+    from repro.models.layers.mamba import _causal_conv
+
+    di, H, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up"].astype(x.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                  prev=conv_prev)
+    xc = jax.nn.silu(xc)
+    B, S = x.shape[:2]
+    xch = xc.reshape(B, S, H, hd)
+    xinh = xin.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xch, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bshd,hde->bshe", xch, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bshd,hde->bshe", xinh, params["wv"].astype(x.dtype))
+    gates = jnp.einsum("bse,eg->bsg", xc.astype(jnp.float32),
+                       params["w_gates"]) + params["b_gates"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)                   # (B,S,H)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    q = q * (hd ** -0.5)
+    return q, k, v, i_raw, f_log, z, conv_state
+
+
+def mlstm_chunk(q, k, v, i_raw, f_log, state, chunk: int):
+    """Chunkwise mLSTM core. q,k,v: (B,S,H,hd); gates (B,S,H) f32.
+
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)). Returns (h (B,S,H,hd), state').
+    """
+    B, S, H, hd = q.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+
+    def resh(t, trailing):
+        return t.reshape((B, nc, L) + trailing).transpose((1, 0, 2) + tuple(
+            range(3, 3 + len(trailing))))
+
+    qs, ks, vs = (resh(t, (H, hd)) for t in (q, k, v))
+    is_, fs = (resh(t, (H,)) for t in (i_raw, f_log))
+
+    # sqrt-remat over the chunk scan: autodiff saves the (C,n,m) carry at
+    # every chunk boundary, which at 4k/64-token chunks is ~268MB/layer of
+    # f32 matrix memory. Segment the scan (outer saves ~sqrt(nc)
+    # boundaries; inner recomputes within a segment on the backward pass)
+    # -> ~8x less live state for one extra inner forward.
+    seg = 1
+    for cand in range(int(np.sqrt(nc)), 0, -1):
+        if nc % cand == 0:
+            seg = cand
+            break
+
+    if seg > 1:
+        n_seg = nc // seg
+
+        def seg_resh(t):
+            return t.reshape((n_seg, seg) + t.shape[1:])
+
+        xs_seg = tuple(seg_resh(t) for t in (qs, ks, vs, is_, fs))
+
+        @jax.checkpoint
+        def seg_step(carry, inp):
+            new_carry, hs_seg = jax.lax.scan(_mlstm_chunk_step, carry, inp)
+            return new_carry, hs_seg
+
+        (C, n, m), hs = jax.lax.scan(seg_step, state, xs_seg)
+        hs = hs.reshape((nc,) + hs.shape[2:])
+    else:
+        (C, n, m), hs = jax.lax.scan(_mlstm_chunk_step, state,
+                                     (qs, ks, vs, is_, fs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, (C, n, m)
+
+
+def _mlstm_chunk_step(carry, inp):
+    C0, n0, m0 = carry
+    qi, ki, vi, ii, fi = inp
+    B, L, H, hd = qi.shape
+    b = jnp.cumsum(fi, axis=1)
+    a = ii - b
+    a_max = jax.lax.cummax(a, axis=1)
+    m_t = jnp.maximum(m0[:, None] + b, b + a_max)
+    w0 = jnp.exp(m0[:, None] + b - m_t)
+    h_inter = jnp.einsum("blhd,bhde->blhe", qi, C0) * w0[..., None]
+    d_inter = jnp.einsum("blhd,bhd->blh", qi, n0) * w0
+    Dlog = b[:, :, None] - b[:, None, :] + ii[:, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    Dlog = jnp.where(mask, Dlog - m_t[:, :, None], -jnp.inf)
+    D = jnp.exp(Dlog)
+    scores = jnp.einsum("blhd,bshd->blsh", qi, ki) * D
+    h_intra = jnp.einsum("blsh,bshd->blhd", scores, vi)
+    d_intra = scores.sum(axis=2)
+    denom = jnp.maximum(jnp.abs(d_inter + d_intra), jnp.exp(-m_t))
+    h = (h_inter + h_intra) / denom[..., None]
+    F = b[:, -1]
+    m_new = jnp.maximum(m0 + F, F + a_max[:, -1])
+    wC0 = jnp.exp(m0 + F - m_new)
+    wks = jnp.exp(F[:, None] - b + ii - m_new[:, None])
+    C_new = C0 * wC0[..., None, None] + jnp.einsum(
+        "blhd,blhe->bhde", ki * wks[..., None], vi)
+    n_new = n0 * wC0[..., None] + (ki * wks[..., None]).sum(axis=1)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_step(q, k, v, i_raw, f_log, state):
+    """Exact per-step recurrence (decode + oracle). q,k,v: (B,H,hd)."""
+    C0, n0, m0 = state
+    m_t = jnp.maximum(f_log + m0, i_raw)
+    wf = jnp.exp(f_log + m0 - m_t)
+    wi = jnp.exp(i_raw - m_t)
+    C = C0 * wf[..., None, None] + wi[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = n0 * wf[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_t))
+    return num / den[..., None], (C, n, m_t)
+
+
+def _mlstm_out(params, h, z, cfg, dtype):
+    B, S = h.shape[:2]
+    di, H, hd = _mlstm_dims(cfg)
+    h = h.reshape(B, S, di)
+    # per-head group norm
+    h = h.reshape(B, S, H, hd)
+    mu = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = ((h - mu) * (var + 1e-6) ** -0.5).reshape(B, S, di)
+    h = h * params["out_norm"]["scale"]
+    y = h.astype(dtype) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["down"].astype(dtype))
+
+
+def mlstm_apply(params, x, cfg):
+    q, k, v, i_raw, f_log, z, _ = _mlstm_qkvg(params, x, cfg)
+    B = x.shape[0]
+    di, H, hd = _mlstm_dims(cfg)
+    state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    h, _ = mlstm_chunk(q.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), i_raw, f_log, state,
+                       cfg.xlstm.chunk_size)
+    return _mlstm_out(params, h, z, cfg, x.dtype)
+
+
+def mlstm_init_cache(cfg, batch: int, dtype):
+    di, H, hd = _mlstm_dims(cfg)
+    dc = cfg.xlstm.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_cache_axes():
+    return {
+        "conv": ("cache_batch", "conv_k", "inner"),
+        "C": ("cache_batch", "heads", "head_dim", "head_dim_alt"),
+        "n": ("cache_batch", "heads", "head_dim"),
+        "m": ("cache_batch", "heads"),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg):
+    q, k, v, i_raw, f_log, z, conv_state = _mlstm_qkvg(
+        params, x, cfg, conv_prev=cache["conv"])
+    state = (cache["C"], cache["n"], cache["m"])
+    h, (C, n, m) = mlstm_step(
+        q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), i_raw[:, 0], f_log[:, 0], state)
+    y = _mlstm_out(params, h[:, None], z, cfg, x.dtype)
+    return y, {"conv": conv_state.astype(cache["conv"].dtype),
+               "C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def _slstm_dims(cfg):
+    H = cfg.num_heads
+    return cfg.d_model, H, cfg.d_model // H
+
+
+def slstm_init(key, cfg):
+    pd = dtype_of(cfg.param_dtype)
+    d, H, hd = _slstm_dims(cfg)
+    df = int(cfg.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), d, jnp.float32),
+        "r_gates": dense_init(ks[1], (4, H, hd, hd), hd, jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.linspace(3.0, 6.0, d),
+             jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out_norm": {"scale": jnp.ones((d,), jnp.float32)},
+        "ffn_up": dense_init(ks[2], (d, df), d, pd),
+        "ffn_gate": dense_init(ks[3], (d, df), d, pd),
+        "ffn_down": dense_init(ks[4], (df, d), df, pd),
+    }
+
+
+def slstm_axes(cfg):
+    return {
+        "w_gates": ("embed", "gates"),
+        "r_gates": ("gate_kind", "heads", "head_dim", "head_dim_alt"),
+        "b_gates": ("gates",),
+        "out_norm": {"scale": ("embed",)},
+        "ffn_up": ("embed", "ffn"),
+        "ffn_gate": ("embed", "ffn"),
+        "ffn_down": ("ffn", "embed"),
+    }
+
+
+def slstm_cell(gx, state, r_gates):
+    """One sLSTM step. gx: (B, 4d) pre-activations from input path.
+
+    state: (c, n, m, h) each (B, d). Block-diagonal recurrent mixing per head.
+    """
+    c0, n0, m0, h0 = state
+    B, d = c0.shape
+    _, H, hd, _ = r_gates.shape
+    hh = h0.reshape(B, H, hd)
+    rec = jnp.einsum("bhk,ghkl->gbhl", hh, r_gates).reshape(4, B, d)
+    gi, gf, gz, go = jnp.split(gx, 4, axis=-1)
+    gi = gi + rec[0]
+    gf = gf + rec[1]
+    gz = gz + rec[2]
+    go = go + rec[3]
+    f_log = jax.nn.log_sigmoid(gf)
+    m_t = jnp.maximum(f_log + m0, gi)
+    wf = jnp.exp(f_log + m0 - m_t)
+    wi = jnp.exp(gi - m_t)
+    c = wf * c0 + wi * jnp.tanh(gz)
+    n = wf * n0 + wi
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_t, h)
+
+
+def slstm_scan(params, x32):
+    """x32: (B,S,d) f32 -> h (B,S,d), final state."""
+    B, S, d = x32.shape
+    gx = jnp.einsum("bsd,de->bse", x32, params["w_gates"]) + params["b_gates"]
+    state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    def step(state, g_t):
+        new_state = slstm_cell(g_t, state, params["r_gates"])
+        return new_state, new_state[3]
+
+    state, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state
+
+
+def _slstm_out(params, h, x, cfg):
+    d, H, hd = _slstm_dims(cfg)
+    B, S = h.shape[:2]
+    hh = h.reshape(B, S, H, hd)
+    mu = hh.mean(-1, keepdims=True)
+    var = hh.var(-1, keepdims=True)
+    h = ((hh - mu) * (var + 1e-6) ** -0.5).reshape(B, S, d)
+    h = (h * params["out_norm"]["scale"]).astype(x.dtype)
+    up = jnp.einsum("bsd,df->bsf", h, params["ffn_up"].astype(x.dtype))
+    gate = jnp.einsum("bsd,df->bsf", h, params["ffn_gate"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                      params["ffn_down"].astype(x.dtype))
+
+
+def slstm_apply(params, x, cfg):
+    h, _ = slstm_scan(params, x.astype(jnp.float32))
+    return _slstm_out(params, h, x, cfg)
+
+
+def slstm_init_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in ("c", "n", "m", "h")}
+
+
+def slstm_cache_axes():
+    return {k: ("cache_batch", "embed") for k in ("c", "n", "m", "h")}
+
+
+def slstm_decode(params, x, cache, cfg):
+    x32 = x.astype(jnp.float32)
+    gx = jnp.einsum("bsd,de->bse", x32, params["w_gates"]) + params["b_gates"]
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = slstm_cell(gx[:, 0], state, params["r_gates"])
+    y = _slstm_out(params, h[:, None], x, cfg)
+    return y, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,328 @@
+"""Transformer assembly with a first-class SCALA split layout.
+
+Params are laid out already split into the SFL halves::
+
+    {'client': {'embed', 'projector'?, 'blocks': {'blk0', ...}},
+     'server': {'prologue': {'blk0', ...},      # unrolled alignment layers
+                'groups':   {'blk0', ...},      # leaves stacked (n_scan_groups, ...)
+                'final_norm', 'head'}}
+
+The server middle is a ``lax.scan`` over identical layer *groups* (one
+pattern period per group) so the 72-layer archs lower to a compact
+while-loop. ``split_layer`` blocks + embedding live on the client;
+everything else (incl. the classifier head that SCALA's logit adjustment
+targets) lives on the server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.common import dtype_of
+from repro.models.layers import embeddings, frontends, norms
+from repro.sharding.logical import constrain
+
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+
+
+def _layout(cfg: ModelConfig):
+    """(client_layers, prologue_layers, first_scan, n_scan_groups)."""
+    gs = cfg.group_size
+    split = cfg.split_layer
+    r = (cfg.num_layers - split) % gs
+    first_scan = split + r
+    n_scan = (cfg.num_layers - first_scan) // gs
+    return (list(range(split)), list(range(split, first_scan)), first_scan, n_scan)
+
+
+def group_specs(cfg: ModelConfig):
+    _, _, first_scan, _ = _layout(cfg)
+    return [cfg.block_spec(first_scan + j) for j in range(cfg.group_size)]
+
+
+# ---------------------------------------------------------------------------
+# init / axes
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    client_l, prologue_l, first_scan, n_scan = _layout(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+
+    client = {"embed": embeddings.embedding_init(keys[-1], cfg)}
+    if cfg.frontend:
+        client["projector"] = frontends.projector_init(keys[-2], cfg)
+    client["blocks"] = {
+        f"blk{i}": B.block_init(keys[i], cfg.block_spec(l), cfg)
+        for i, l in enumerate(client_l)
+    }
+
+    server = {
+        "prologue": {
+            f"blk{i}": B.block_init(keys[l], cfg.block_spec(l), cfg)
+            for i, l in enumerate(prologue_l)
+        },
+        "final_norm": norms.rms_norm_init(cfg),
+        "head": embeddings.head_init(keys[-3], cfg),
+    }
+    gspecs = group_specs(cfg)
+    groups = {}
+    if n_scan > 0:
+        for j, spec in enumerate(gspecs):
+            gkeys = jnp.stack([keys[first_scan + g * cfg.group_size + j]
+                               for g in range(n_scan)])
+            groups[f"blk{j}"] = jax.vmap(
+                lambda k: B.block_init(k, spec, cfg))(gkeys)
+    server["groups"] = groups
+    return {"client": client, "server": server}
+
+
+def param_axes(cfg: ModelConfig):
+    client_l, prologue_l, first_scan, n_scan = _layout(cfg)
+    client = {"embed": embeddings.embedding_axes(cfg)}
+    if cfg.frontend:
+        client["projector"] = frontends.projector_axes(cfg)
+    client["blocks"] = {
+        f"blk{i}": B.block_axes(cfg.block_spec(l), cfg)
+        for i, l in enumerate(client_l)
+    }
+    server = {
+        "prologue": {
+            f"blk{i}": B.block_axes(cfg.block_spec(l), cfg)
+            for i, l in enumerate(prologue_l)
+        },
+        "final_norm": norms.rms_norm_axes(cfg),
+        "head": embeddings.head_axes(cfg),
+        "groups": {} if n_scan == 0 else {
+            f"blk{j}": jax.tree.map(
+                lambda a: ("layers",) + a,
+                B.block_axes(spec, cfg),
+                is_leaf=lambda a: isinstance(a, tuple),
+            )
+            for j, spec in enumerate(group_specs(cfg))
+        },
+    }
+    return {"client": client, "server": server}
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(client_params, batch, cfg: ModelConfig):
+    """Returns (x, positions, memory)."""
+    tokens = batch["tokens"]
+    memory = None
+    if cfg.frontend == "vision":
+        prefix = frontends.projector_apply(client_params["projector"],
+                                           batch["prefix_emb"], cfg)
+        total = prefix.shape[1] + tokens.shape[1]
+        positions = jnp.arange(total)
+        x = embeddings.embedding_apply(
+            client_params["embed"], tokens, cfg,
+            positions=None if cfg.pos_embed != "learned" else
+            positions[prefix.shape[1]:][None, :])
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    elif cfg.frontend == "audio":
+        positions = jnp.arange(tokens.shape[1])
+        x = embeddings.embedding_apply(client_params["embed"], tokens, cfg,
+                                       positions=positions[None, :])
+        memory = frontends.projector_apply(client_params["projector"],
+                                           batch["memory_emb"], cfg)
+    else:
+        positions = jnp.arange(tokens.shape[1])
+        x = embeddings.embedding_apply(
+            client_params["embed"], tokens, cfg,
+            positions=positions[None, :] if cfg.pos_embed == "learned" else None)
+    return x, positions, memory
+
+
+def client_forward(client_params, batch, cfg: ModelConfig):
+    """Client-side half: embedding (+frontend projector) + first blocks.
+
+    Returns the SFL "activation upload": {'x', 'positions', 'memory'?}.
+    """
+    client_l, _, _, _ = _layout(cfg)
+    x, positions, memory = _embed_inputs(client_params, batch, cfg)
+    for i, l in enumerate(client_l):
+        x, _ = B.block_apply(client_params["blocks"][f"blk{i}"], x,
+                             cfg.block_spec(l), cfg, positions=positions,
+                             memory=memory)
+    out = {"x": x, "positions": positions}
+    if memory is not None:
+        out["memory"] = memory
+    return out
+
+
+def server_forward(server_params, acts, cfg: ModelConfig, *,
+                   remat: bool = True, head_mode: str = "full"):
+    """Server-side half on (possibly concatenated) activations.
+
+    acts: {'x': (B,S,d), 'positions': (S,), 'memory'?: (B,M,d)}.
+    Returns (logits, aux).
+    """
+    _, prologue_l, _, _ = _layout(cfg)
+    x = acts["x"]
+    positions = acts["positions"]
+    memory = acts.get("memory")
+    aux = jnp.zeros((), jnp.float32)
+    # pin the concatenated batch dim to the client/data axis: XLA's
+    # propagation otherwise de-shards it through the trunk (§Perf iter 1).
+    # under the "dp" profile the flat batch dim (client-major x per-client)
+    # spans every mesh axis (§Perf iter 2).
+    batch_spec = ((("pod", "data", "model")
+                   if cfg.sharding_profile in ("dp", "fsdp")
+                   else ("pod", "data")), None, None)
+    x = constrain(x, *batch_spec)
+    for i, l in enumerate(prologue_l):
+        x, a = B.block_apply(server_params["prologue"][f"blk{i}"], x,
+                             cfg.block_spec(l), cfg, positions=positions,
+                             memory=memory)
+        x = constrain(x, *batch_spec)
+        aux = aux + a
+
+    gspecs = group_specs(cfg)
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        for j, spec in enumerate(gspecs):
+            x, a = B.block_apply(gp[f"blk{j}"], x, spec, cfg,
+                                 positions=positions, memory=memory)
+            x = constrain(x, *batch_spec)
+            aux = aux + a
+        return (x, aux), None
+
+    if server_params["groups"]:
+        fn = jax.checkpoint(group_fn) if remat else group_fn
+        (x, aux), _ = jax.lax.scan(fn, (x, aux), server_params["groups"])
+
+    if head_mode == "last":
+        x = x[:, -1:]
+    x = norms.rms_norm_apply(server_params["final_norm"], x, cfg.norm_eps)
+    if head_mode == "feats":
+        return x, aux
+    logits = embeddings.head_apply(server_params["head"], x, cfg)
+    return logits, aux
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            head_mode: str = "full"):
+    """Merged (non-split) forward — used by serving and FL baselines."""
+    acts = client_forward(params["client"], batch, cfg)
+    return server_forward(params["server"], acts, cfg, remat=remat,
+                          head_mode=head_mode)
+
+
+def forward_prefill(params, batch, cfg: ModelConfig):
+    """Serving prefill: full trunk, next-token logits only (B, 1, V)."""
+    logits, _ = forward(params, batch, cfg, remat=False, head_mode="last")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None):
+    dtype = dtype or dtype_of(cfg.dtype)
+    client_l, prologue_l, first_scan, n_scan = _layout(cfg)
+
+    def stacked(spec):
+        c = B.block_cache_init(spec, cfg, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_scan,) + a.shape, a.dtype), c)
+
+    return {
+        "client": {f"blk{i}": B.block_cache_init(cfg.block_spec(l), cfg,
+                                                 batch, max_len, dtype)
+                   for i, l in enumerate(client_l)},
+        "prologue": {f"blk{i}": B.block_cache_init(cfg.block_spec(l), cfg,
+                                                   batch, max_len, dtype)
+                     for i, l in enumerate(prologue_l)},
+        "groups": {} if n_scan == 0 else {
+            f"blk{j}": stacked(spec)
+            for j, spec in enumerate(group_specs(cfg))},
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    client_l, prologue_l, _, n_scan = _layout(cfg)
+
+    def stacked_axes(spec):
+        return jax.tree.map(lambda a: ("layers",) + a,
+                            B.block_cache_axes(spec),
+                            is_leaf=lambda a: isinstance(a, tuple))
+
+    return {
+        "client": {f"blk{i}": B.block_cache_axes(cfg.block_spec(l))
+                   for i, l in enumerate(client_l)},
+        "prologue": {f"blk{i}": B.block_cache_axes(cfg.block_spec(l))
+                     for i, l in enumerate(prologue_l)},
+        "groups": {} if n_scan == 0 else {
+            f"blk{j}": stacked_axes(spec)
+            for j, spec in enumerate(group_specs(cfg))},
+    }
+
+
+def decode_step(params, batch, cache, index, cfg: ModelConfig):
+    """One-token decode on the merged model.
+
+    batch: {'tokens': (B,1), 'memory_emb'?: (B,M,fd)}; index: () int32 =
+    position of the new token. Returns (logits (B,1,V), new_cache).
+    """
+    client_l, prologue_l, _, _ = _layout(cfg)
+    client_params = params["client"]
+    tokens = batch["tokens"]
+    memory = None
+    if cfg.frontend == "audio":
+        memory = frontends.projector_apply(client_params["projector"],
+                                           batch["memory_emb"], cfg)
+    pos = jnp.full((1, 1), index, jnp.int32)
+    x = embeddings.embedding_apply(
+        client_params["embed"], tokens, cfg,
+        positions=pos if cfg.pos_embed == "learned" else None)
+
+    new_cache = {"client": {}, "prologue": {}}
+    for i, l in enumerate(client_l):
+        x, nc = B.block_decode(client_params["blocks"][f"blk{i}"], x,
+                               cache["client"][f"blk{i}"], index,
+                               cfg.block_spec(l), cfg, memory=memory)
+        new_cache["client"][f"blk{i}"] = nc
+    for i, l in enumerate(prologue_l):
+        x, nc = B.block_decode(params["server"]["prologue"][f"blk{i}"], x,
+                               cache["prologue"][f"blk{i}"], index,
+                               cfg.block_spec(l), cfg, memory=memory)
+        new_cache["prologue"][f"blk{i}"] = nc
+
+    gspecs = group_specs(cfg)
+
+    def gdec(x, inp):
+        gp, gc = inp
+        ncs = {}
+        for j, spec in enumerate(gspecs):
+            x, nc = B.block_decode(gp[f"blk{j}"], x, gc[f"blk{j}"], index,
+                                   spec, cfg, memory=memory)
+            ncs[f"blk{j}"] = nc
+        return x, ncs
+
+    if params["server"]["groups"]:
+        x, group_cache = jax.lax.scan(
+            gdec, x, (params["server"]["groups"], cache["groups"]))
+        new_cache["groups"] = group_cache
+    else:
+        new_cache["groups"] = {}
+
+    x = norms.rms_norm_apply(params["server"]["final_norm"], x, cfg.norm_eps)
+    logits = embeddings.head_apply(params["server"]["head"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adamw, momentum, sgd, make_optimizer  # noqa: F401
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,102 @@
+"""Minimal functional optimizers (optax-style) — SGD is the paper default
+(§5.1: plain SGD, η=0.01), which also keeps the 398B dry-run free of
+optimizer-state memory. Momentum/AdamW provided for the framework layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        def step(p, g):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+        return jax.tree.map(step, params, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        def step(p, g, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m_new = beta * m + g
+            d = g + beta * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m_new
+        flat = jax.tree.map(step, params, grads, state)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_state = jax.tree.map(lambda t: t[1], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def moments(g, mu, nu):
+            g = g.astype(jnp.float32)
+            return b1 * mu + (1 - b1) * g, b2 * nu + (1 - b2) * g * g
+
+        flat = jax.tree.map(moments, grads, state["mu"], state["nu"])
+        mu = jax.tree.map(lambda t: t[0], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(weight_decay=kw.get("weight_decay", 0.0))
+    if name == "momentum":
+        return momentum(beta=kw.get("momentum", 0.9),
+                        weight_decay=kw.get("weight_decay", 0.0))
+    if name == "adamw":
+        return adamw(weight_decay=kw.get("weight_decay", 0.0))
+    raise ValueError(f"unknown optimizer {name!r}")

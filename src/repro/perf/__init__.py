@@ -1,0 +1,9 @@
+from repro.perf.roofline import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    count_params,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)

@@ -1,0 +1,284 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+Collective bytes are parsed from the post-SPMD HLO (``compiled.as_text()``
+is the per-device partitioned module), with the accounting conventions:
+
+  all-gather          result size        (bytes landing per device)
+  reduce-scatter      first-operand size (bytes leaving per device)
+  all-reduce          2 x result size    (ring RS + AG)
+  all-to-all          result size
+  collective-permute  result size
+
+``cost_analysis()`` FLOPs/bytes on a partitioned module are per-device;
+terms below are therefore per-device seconds (= step seconds under
+perfect overlap-free execution), which is what the §Roofline table
+reports.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# the result type may be a tuple containing /*index=N*/ comments — match
+# lazily up to the op name rather than excluding '='
+_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Per-op-kind {count, bytes} from post-SPMD HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_type, op, _ = m.groups()
+        if op == "reduce-scatter":
+            # charge the input (first operand inside the parens)
+            paren = line[m.end():]
+            om = _TYPE_RE.search(paren)
+            size = _type_bytes(om.group(0)) if om else _type_bytes(result_type)
+        elif op == "all-reduce":
+            size = 2 * _type_bytes(result_type)
+        else:
+            size = _type_bytes(result_type)
+        out[op]["count"] += 1
+        out[op]["bytes"] += size
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+_WHILE_BODY_RE = re.compile(r"\bbody=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_REF_RE = re.compile(r"(?:calls|to_apply|condition|branch_computations)="
+                     r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def parse_collectives_scoped(hlo_text: str) -> Dict[str, dict]:
+    """Loop-aware collective accounting.
+
+    XLA prints each ``while`` body once; a layer-scan over G groups
+    therefore under-counts its collectives by G in :func:`parse_collectives`.
+    This variant splits the module into computations, walks the call graph
+    from ENTRY, and multiplies each ``while`` body's collective bytes by
+    the loop's ``known_trip_count`` from its backend_config (falling back
+    to the condition's s32 constant, then 1).
+    """
+    # --- split into computations (headers are unindented "%name (...) {") ---
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{") and (
+                line.startswith("%") or line.startswith("ENTRY")):
+            name = line.split()[1] if line.startswith("ENTRY") \
+                else line.split()[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+
+    def comp_const_max(name: str) -> int:
+        best = 0
+        for line in comps.get(name, ()):
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    from functools import lru_cache
+
+    @lru_cache(maxsize=None)
+    def comp_cost(name: str):
+        """(bytes{op}, count{op}) for ONE execution of computation."""
+        out = {k: 0.0 for k in _COLL_OPS}
+        cnt = {k: 0.0 for k in _COLL_OPS}
+        for line in comps.get(name, ()):
+            m = _LINE_RE.search(line)
+            if m:
+                result_type, op, _ = m.groups()
+                if op == "reduce-scatter":
+                    paren = line[m.end():]
+                    om = _TYPE_RE.search(paren)
+                    size = _type_bytes(om.group(0)) if om \
+                        else _type_bytes(result_type)
+                elif op == "all-reduce":
+                    size = 2 * _type_bytes(result_type)
+                else:
+                    size = _type_bytes(result_type)
+                out[op] += size
+                cnt[op] += 1
+            if " while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                if bm and bm.group(1) in comps and bm.group(1) != name:
+                    tm = _TRIP_RE.search(line)
+                    trip = int(tm.group(1)) if tm else 0
+                    if not trip:
+                        cm = re.search(r"condition=%?([\w.\-]+)", line)
+                        trip = comp_const_max(cm.group(1)) if cm else 0
+                    trip = max(1, trip)
+                    sub, sub_c = comp_cost(bm.group(1))
+                    for k in _COLL_OPS:
+                        out[k] += trip * sub[k]
+                        cnt[k] += trip * sub_c[k]
+                continue
+            for rm in _REF_RE.finditer(line):
+                for ref in rm.group(1).split(","):
+                    ref = ref.strip().lstrip("%")
+                    if ref in comps and ref != name:
+                        sub, sub_c = comp_cost(ref)
+                        for k in _COLL_OPS:
+                            out[k] += sub[k]
+                            cnt[k] += sub_c[k]
+        return out, cnt
+
+    if entry is None:
+        flat = parse_collectives(hlo_text)
+        flat["loop_aware"] = False
+        return flat
+    cost, counts = comp_cost(entry)
+    res = {k: {"count": counts[k], "bytes": cost[k]} for k in _COLL_OPS}
+    res["total_bytes"] = sum(cost.values())
+    res["loop_aware"] = True
+    return res
+
+
+def collective_breakdown(hlo_text: str, top: int = 15):
+    """Loop-aware per-op collective ranking: [(bytes, op, shape, mult,
+    op_name)] sorted by total bytes — the §Perf profiling view."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{") and (
+                line.startswith("%") or line.startswith("ENTRY")):
+            name = line.split()[1] if line.startswith("ENTRY") \
+                else line.split()[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+
+    items = []
+
+    def walk(name, mult, seen=()):
+        if name in seen:
+            return
+        for line in comps.get(name, ()):
+            m = _LINE_RE.search(line)
+            if m:
+                rt, op, _ = m.groups()
+                size = _type_bytes(rt) * (2 if op == "all-reduce" else 1)
+                md = re.search(r'op_name="([^"]+)"', line)
+                items.append((size * mult, op, rt[:70], mult,
+                              (md.group(1) if md else "?")[-90:]))
+            if " while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if bm and bm.group(1) in comps:
+                    walk(bm.group(1),
+                         mult * (int(tm.group(1)) if tm else 1),
+                         seen + (name,))
+                continue
+            for rm in _REF_RE.finditer(line):
+                for ref in rm.group(1).split(","):
+                    ref = ref.strip().lstrip("%")
+                    if ref in comps and ref != name:
+                        walk(ref, mult, seen + (name,))
+
+    if entry:
+        walk(entry, 1)
+    items.sort(key=lambda x: -x[0])
+    return items[:top], sum(i[0] for i in items)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   min_bytes: float = 0.0) -> dict:
+    """min_bytes: liveness-aware lower bound on real HBM traffic
+    (arguments + outputs + peak temp) — the CPU backend's unfused
+    ``bytes accessed`` over-counts every intermediate, so the honest
+    memory term lies in [t_memory_min, t_memory]."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_coll,
+             "t_memory_min_s": min_bytes / HBM_BW}
+    # bottleneck classification uses the conservative (lower-bound) memory
+    cand = {"compute": t_compute, "memory": terms["t_memory_min_s"],
+            "collective": t_coll}
+    terms["bottleneck"] = max(cand, key=cand.get)
+    cand_hlo = {"compute": t_compute, "memory": t_memory,
+                "collective": t_coll}
+    terms["bottleneck_hlo_bytes"] = max(cand_hlo, key=cand_hlo.get)
+    return terms
+
+
+def model_flops(param_count_active: float, tokens: float,
+                mode: str) -> float:
+    """6·N·D for training, 2·N·D for inference forward."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * param_count_active * tokens
+
+
+def count_params(shapes_tree, axes_tree, top_k: int = 0,
+                 num_experts: int = 0) -> dict:
+    """Total and active param counts; expert leaves scaled by top_k/E."""
+    import jax
+
+    from repro.sharding.logical import is_axes
+
+    shapes = jax.tree.leaves(shapes_tree)
+    axes = jax.tree.leaves(axes_tree, is_leaf=is_axes)
+    total = 0
+    active = 0.0
+    for s, a in zip(shapes, axes):
+        n = 1
+        for d in s.shape:
+            n *= d
+        # SCALA-stacked client params: one client's copy is the model
+        if a and a[0] == "client":
+            n //= s.shape[0]
+        total += n
+        if "experts" in a and num_experts:
+            active += n * (top_k / num_experts)
+        else:
+            active += n
+    return {"total": total, "active": active}

@@ -1,0 +1,7 @@
+from repro.sharding.logical import (  # noqa: F401
+    RULES,
+    replicated,
+    spec_for,
+    tree_shardings,
+    tree_specs,
+)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests import shared helpers; keep src on path when invoked bare
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,68 @@
+"""Shared test fixtures/builders."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig, XLSTMConfig
+
+
+def tiny_cfg(**overrides) -> ModelConfig:
+    base = dict(
+        name="tiny",
+        family="dense",
+        source="test",
+        num_layers=3,
+        d_model=32,
+        num_heads=2,
+        num_kv_heads=1,
+        head_dim=16,
+        d_ff=64,
+        vocab_size=97,
+        split_layer=1,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)
+
+
+def tiny_moe_cfg(**overrides) -> ModelConfig:
+    return tiny_cfg(
+        family="moe",
+        ffn_pattern=("moe",),
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=48,
+                      capacity_factor=2.0),
+        **overrides,
+    )
+
+
+def tiny_mamba_cfg(**overrides) -> ModelConfig:
+    return tiny_cfg(
+        family="hybrid",
+        mixer_pattern=("mamba", "attn", "mamba"),
+        pos_embed="rope",
+        mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+        **overrides,
+    )
+
+
+def tiny_xlstm_cfg(**overrides) -> ModelConfig:
+    return tiny_cfg(
+        family="ssm",
+        mixer_pattern=("mlstm", "slstm", "mlstm"),
+        ffn_pattern=("none",),
+        pos_embed="none",
+        xlstm=XLSTMConfig(chunk_size=8),
+        **overrides,
+    )
+
+
+def rand_batch(key, cfg, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        "weights": jnp.ones((B, S), jnp.float32),
+    }
+    return batch

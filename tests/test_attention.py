@@ -1,0 +1,116 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.models.layers import attention as A
+
+
+@pytest.fixture
+def qkv():
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 2, 32, 4, 8
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    return q, k, v
+
+
+def test_chunked_matches_dense(qkv):
+    q, k, v = qkv
+    pos = jnp.arange(q.shape[1])
+    for window in (None, 8):
+        dense = A.attend_dense(q, k, v, pos, pos, causal=True, window=window)
+        chunked = A.attend_chunked(q, k, v, pos, pos, causal=True,
+                                   window=window, chunk=8)
+        np.testing.assert_allclose(dense, chunked, atol=1e-5)
+
+
+def test_causal_mask(qkv):
+    """Changing future tokens must not change past outputs."""
+    q, k, v = qkv
+    pos = jnp.arange(q.shape[1])
+    out1 = A.attend_dense(q, k, v, pos, pos, causal=True, window=None)
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(99.0)
+    out2 = A.attend_dense(q, k2, v2, pos, pos, causal=True, window=None)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], atol=1e-6)
+
+
+def test_window_mask(qkv):
+    """Tokens beyond the window must not influence the output."""
+    q, k, v = qkv
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    w = 4
+    out1 = A.attend_dense(q, k, v, pos, pos, causal=True, window=w)
+    k2 = k.at[:, 0].set(77.0)   # far outside the window of the last query
+    v2 = v.at[:, 0].set(77.0)
+    out2 = A.attend_dense(q, k2, v2, pos, pos, causal=True, window=w)
+    np.testing.assert_allclose(out1[:, -1], out2[:, -1], atol=1e-6)
+    # but the first token's output does change
+    assert not jnp.allclose(out1[:, 0], out2[:, 0])
+
+
+def _decode_all(params, x, cfg, window, cache_len):
+    B, S, _ = x.shape
+    cache = A.init_cache(cfg, B, cache_len, jnp.float32)
+    outs = []
+    for i in range(S):
+        y, cache = A.attn_decode(params, x[:, i:i + 1], cache, i, cfg,
+                                 window=window)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def test_decode_matches_full_forward():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(0)
+    params = A.attn_init(key, cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.fold_in(key, 3), (B, S, cfg.d_model))
+    pos = jnp.arange(S)
+    full = A.attn_apply(params, x, cfg, positions=pos, window=None)
+    dec = _decode_all(params, x, cfg, None, S)
+    np.testing.assert_allclose(full, dec, atol=1e-4)
+
+
+def test_decode_with_qkv_bias_and_gqa():
+    cfg = tiny_cfg(qkv_bias=True, num_heads=4, num_kv_heads=2, head_dim=8)
+    key = jax.random.PRNGKey(1)
+    params = A.attn_init(key, cfg)
+    x = jax.random.normal(key, (2, 10, cfg.d_model))
+    full = A.attn_apply(params, x, cfg, positions=jnp.arange(10))
+    dec = _decode_all(params, x, cfg, None, 10)
+    np.testing.assert_allclose(full, dec, atol=1e-4)
+
+
+def test_ring_cache_decode_matches_windowed_forward():
+    from repro.models import blocks as B
+    from repro.configs.base import BlockSpec
+    cfg = tiny_cfg(window_pattern=(4,))
+    spec = BlockSpec(mixer="attn", ffn="dense", window=4)
+    key = jax.random.PRNGKey(2)
+    params = B.block_init(key, spec, cfg)
+    S = 14
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, S, cfg.d_model))
+    full, _ = B.block_apply(params, x, spec, cfg, positions=jnp.arange(S))
+    cache = B.block_cache_init(spec, cfg, 2, S, jnp.float32)
+    assert cache["k"].shape[1] == 4  # ring buffer is window-sized
+    outs = []
+    for i in range(S):
+        y, cache = B.block_decode(params, x[:, i:i + 1], cache, i, spec, cfg)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(full, dec, atol=1e-4)
+
+
+def test_cross_attention_shapes():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(3)
+    params = A.attn_init(key, cfg, cross=True)
+    x = jax.random.normal(key, (2, 6, cfg.d_model))
+    mem = jax.random.normal(jax.random.fold_in(key, 1), (2, 9, cfg.d_model))
+    y = A.cross_attn_apply(params, x, mem, cfg)
+    assert y.shape == x.shape and jnp.isfinite(y).all()

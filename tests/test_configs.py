@@ -1,0 +1,99 @@
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                           get_shape, list_configs)
+
+
+def test_registry_has_all_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert "alexnet-cifar" in list_configs()
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_configs_validate(name):
+    cfg = get_config(name)
+    cfg.validate()
+    assert cfg.num_layers % cfg.group_size == 0
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+
+
+EXPECTED = {
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_assigned_numbers_exact(name):
+    cfg = get_config(name)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == EXPECTED[name]
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.moe.num_experts == 128 and q.moe.top_k == 8
+    d = get_config("dbrx-132b")
+    assert d.moe.num_experts == 16 and d.moe.top_k == 4
+    j = get_config("jamba-1.5-large-398b")
+    assert j.moe.num_experts == 16 and j.moe.top_k == 2
+
+
+def test_jamba_pattern():
+    cfg = get_config("jamba-1.5-large-398b")
+    specs = cfg.block_specs
+    attn = [i for i, s in enumerate(specs) if s.mixer == "attn"]
+    assert len(attn) == 9  # 1:7 interleave over 72 layers
+    moe = [s for s in specs if s.ffn == "moe"]
+    assert len(moe) == 36  # every other layer
+
+
+def test_gemma_window_pattern():
+    cfg = get_config("gemma3-12b")
+    specs = cfg.block_specs
+    local = [s for s in specs if s.window == 1024]
+    glob = [s for s in specs if s.window is None]
+    assert len(local) == 40 and len(glob) == 8  # 5:1
+
+
+def test_long_decode_eligibility():
+    eligible = {n for n in ASSIGNED_ARCHS
+                if get_config(n).supports_long_decode}
+    assert eligible == {"jamba-1.5-large-398b", "h2o-danube-3-4b",
+                        "gemma3-12b", "xlstm-1.3b"}
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_reduced_invariants(name):
+    r = get_config(name).reduced()
+    r.validate()
+    assert r.d_model <= 512
+    assert r.vocab_size <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    assert 0 < r.split_layer < r.num_layers
+
+
+def test_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    s = get_shape("train_4k")
+    assert s.seq_len == 4096 and s.global_batch == 256 and s.mode == "train"
+    s = get_shape("long_500k")
+    assert s.seq_len == 524288 and s.global_batch == 1 and s.mode == "decode"
+
+
+def test_unknown_raises():
+    with pytest.raises(KeyError):
+        get_config("nope")
+    with pytest.raises(KeyError):
+        get_shape("nope")

@@ -1,0 +1,181 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import mha_ref
+from repro.kernels.lace.kernel import lace_bwd_pallas, lace_fwd_pallas
+from repro.kernels.lace.ops import lace_loss, lace_loss_flat
+from repro.kernels.lace.ref import lace_ref
+from repro.kernels.mlstm.kernel import mlstm_chunk_pallas
+from repro.kernels.mlstm.ops import mlstm_chunkwise
+from repro.kernels.mlstm.ref import mlstm_ref
+
+
+# --------------------------------------------------------------------------
+# LACE
+# --------------------------------------------------------------------------
+
+LACE_SHAPES = [
+    # (N, d, V, tb, vb)
+    (64, 16, 50, 32, 16),
+    (100, 32, 130, 64, 64),       # non-divisible N and V (padding paths)
+    (128, 48, 256, 128, 256),     # single blocks
+    (257, 24, 61, 32, 32),        # prime-ish
+]
+
+
+@pytest.mark.parametrize("N,d,V,tb,vb", LACE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lace_fwd_kernel_sweep(N, d, V, tb, vb, dtype):
+    key = jax.random.PRNGKey(N + V)
+    feats = jax.random.normal(key, (N, d)).astype(dtype)
+    W = (jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+         ).astype(dtype)
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+    prior = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (V,)))
+    w = jnp.ones((N,))
+    nll, lse = lace_fwd_pallas(feats, W, labels, jnp.log(prior + 1e-8),
+                               tau=1.0, tb=tb, vb=vb)
+    loss = (nll * w).sum() / w.sum()
+    ref = lace_ref(feats.astype(jnp.float32), W.astype(jnp.float32), labels,
+                   prior_rows=prior[None], weights=w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(float(loss), float(ref), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("N,d,V,tb,vb", LACE_SHAPES[:2])
+def test_lace_bwd_kernel_sweep(N, d, V, tb, vb):
+    key = jax.random.PRNGKey(V)
+    feats = jax.random.normal(key, (N, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+    prior = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (V,)))
+    w = (jax.random.uniform(jax.random.fold_in(key, 4), (N,)) > 0.2
+         ).astype(jnp.float32)
+    lp = jnp.log(prior + 1e-8)
+    _, lse = lace_fwd_pallas(feats, W, labels, lp, tb=tb, vb=vb)
+    df, dw = lace_bwd_pallas(feats, W, labels, lp, lse, w / w.sum(),
+                             tb=tb, vb=vb)
+    rdf, rdw = jax.grad(
+        lambda f, ww: lace_ref(f, ww, labels, prior_rows=prior[None],
+                               weights=w), argnums=(0, 1))(feats, W)
+    np.testing.assert_allclose(df, rdf, atol=1e-6)
+    np.testing.assert_allclose(dw, rdw, atol=1e-6)
+
+
+def test_lace_chunked_ops_grouped_priors():
+    key = jax.random.PRNGKey(0)
+    G, N, d, V = 4, 48, 16, 33
+    feats = jax.random.normal(key, (G, N, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (G, N), 0, V)
+    prior = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 3), (G, V)))
+    got = lace_loss(feats, W, labels, prior, jnp.arange(G), None,
+                    1.0, 1e-8, 16)
+    ref = lace_ref(feats.reshape(-1, d), W, labels.reshape(-1),
+                   prior_rows=prior, prior_ids=jnp.repeat(jnp.arange(G), N))
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+def test_lace_flat_wrapper():
+    key = jax.random.PRNGKey(1)
+    N, d, V = 32, 8, 19
+    feats = jax.random.normal(key, (N, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+    got = lace_loss_flat(feats, W, labels)
+    ref = lace_ref(feats, W, labels)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+FLASH_SHAPES = [
+    # (B, S, H, hd, qb, kb, window)
+    (1, 128, 2, 16, 64, 64, None),
+    (2, 200, 3, 32, 64, 64, None),     # padded seq
+    (2, 256, 2, 16, 64, 64, 32),       # window smaller than seq
+    (1, 96, 1, 8, 32, 32, 7),          # odd window
+    (1, 64, 2, 16, 128, 128, None),    # block bigger than seq
+]
+
+
+@pytest.mark.parametrize("B,S,H,hd,qb,kb,window", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_sweep(B, S, H, hd, qb, kb, window, dtype):
+    key = jax.random.PRNGKey(S + (window or 0))
+    q = jax.random.normal(key, (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd)).astype(dtype)
+    ref = mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32), causal=True, window=window)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = flash_attention_pallas(qf, kf, vf, causal=True, window=window,
+                                 qb=qb, kb=kb)
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out, ref, atol=tol, rtol=tol)
+
+
+def test_flash_ops_gqa_repeat():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    out = flash_attention(q, k, v, causal=True)
+    kf = jnp.repeat(k, H // KV, axis=2)
+    vf = jnp.repeat(v, H // KV, axis=2)
+    ref = mha_ref(q, kf, vf, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+MLSTM_SHAPES = [
+    # (S, dk, dv, chunk)
+    (64, 16, 16, 16),
+    (96, 8, 24, 32),
+    (128, 32, 32, 64),
+    (60, 16, 16, 64),     # chunk > S with non-divisible fallback
+]
+
+
+@pytest.mark.parametrize("S,dk,dv,chunk", MLSTM_SHAPES)
+def test_mlstm_kernel_sweep(S, dk, dv, chunk):
+    key = jax.random.PRNGKey(S + dk)
+    q = jax.random.normal(key, (S, dk)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (S, dk)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (S, dv))
+    i_raw = jax.random.normal(jax.random.fold_in(key, 3), (S,))
+    f_log = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 4), (S,)) + 2.0)
+    ref = mlstm_ref(q, k, v, i_raw, f_log)
+    out = mlstm_chunk_pallas(q, k, v, i_raw, f_log, chunk=chunk)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_ops_batched_heads():
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 2, 32, 3, 8
+    q = jax.random.normal(key, (B, S, H, hd)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    i_raw = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H))
+    f_log = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 4), (B, S, H)) + 2.0)
+    out = mlstm_chunkwise(q, k, v, i_raw, f_log, chunk=16)
+    ref = mlstm_ref(q[1, :, 2], k[1, :, 2], v[1, :, 2], i_raw[1, :, 2],
+                    f_log[1, :, 2])
+    np.testing.assert_allclose(out[1, :, 2], ref, rtol=2e-4, atol=2e-4)

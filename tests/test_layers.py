@@ -1,0 +1,90 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.models.layers import embeddings, mlp, norms, rope
+
+
+def test_rms_norm_unit_scale():
+    cfg = tiny_cfg()
+    p = norms.rms_norm_init(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, cfg.d_model)) * 5
+    y = norms.rms_norm_apply(p, x)
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layer_norm_zero_mean():
+    p = norms.layer_norm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) + 3.0
+    y = norms.layer_norm_apply(p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative():
+    hd = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, hd))
+    pos = jnp.arange(6)
+    y = rope.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on (m - n)
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+    def dot_at(m, n):
+        qm = rope.apply_rope(q, jnp.array([m]), 10_000.0)
+        kn = rope.apply_rope(k, jnp.array([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(7, 5)) < 1e-4
+
+
+def test_mlp_gated_vs_plain():
+    cfg = tiny_cfg(act="silu")
+    p = mlp.mlp_init(jax.random.PRNGKey(0), cfg)
+    assert "gate" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model))
+    y = mlp.mlp_apply(p, x, cfg)
+    assert y.shape == x.shape and jnp.isfinite(y).all()
+
+    cfg2 = tiny_cfg(act="gelu_mlp")
+    p2 = mlp.mlp_init(jax.random.PRNGKey(0), cfg2)
+    assert "gate" not in p2
+    y2 = mlp.mlp_apply(p2, x, cfg2)
+    assert y2.shape == x.shape
+
+
+def test_embedding_and_head():
+    cfg = tiny_cfg()
+    p = embeddings.embedding_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.array([[0, 1, 2], [3, 4, 5]])
+    x = embeddings.embedding_apply(p, toks, cfg)
+    assert x.shape == (2, 3, cfg.d_model)
+    hp = embeddings.head_init(jax.random.PRNGKey(1), cfg)
+    logits = embeddings.head_apply(hp, x, cfg)
+    assert logits.shape == (2, 3, cfg.vocab_size)
+
+
+def test_learned_pos_embedding():
+    cfg = tiny_cfg(pos_embed="learned", max_position=64)
+    p = embeddings.embedding_init(jax.random.PRNGKey(0), cfg)
+    assert "pos" in p
+    toks = jnp.zeros((2, 5), jnp.int32)
+    pos = jnp.arange(5)[None, :]
+    x0 = embeddings.embedding_apply(p, toks, cfg, positions=pos)
+    x1 = embeddings.embedding_apply(p, toks, cfg, positions=pos + 1)
+    assert not jnp.allclose(x0, x1)  # position actually matters
+
+
+def test_axes_match_params():
+    from repro.sharding.logical import is_axes
+    cfg = tiny_cfg()
+    p = mlp.mlp_init(jax.random.PRNGKey(0), cfg)
+    a = mlp.mlp_axes(cfg)
+    leaves_p = jax.tree.leaves(p)
+    leaves_a = jax.tree.leaves(a, is_leaf=is_axes)
+    assert len(leaves_p) == len(leaves_a)
+    for lp, la in zip(leaves_p, leaves_a):
+        assert lp.ndim == len(la)

@@ -1,0 +1,77 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.optim import adamw, make_optimizer, momentum, sgd
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+
+def _quad_problem():
+    params = {"w": jnp.array([2.0, -3.0]), "b": jnp.array(1.0)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    return params, loss
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+def test_optimizers_minimize_quadratic(name):
+    opt = make_optimizer(name)
+    params, loss = _quad_problem()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 1e-2, name
+
+
+def test_sgd_weight_decay():
+    opt = sgd(weight_decay=0.1)
+    params = {"w": jnp.array(1.0)}
+    state = opt.init(params)
+    p2, _ = opt.update({"w": jnp.array(0.0)}, state, params, 0.5)
+    np.testing.assert_allclose(float(p2["w"]), 1.0 - 0.5 * 0.1)
+
+
+def test_momentum_accumulates():
+    opt = momentum(beta=0.9)
+    params = {"w": jnp.array(0.0)}
+    state = opt.init(params)
+    g = {"w": jnp.array(1.0)}
+    p1, s1 = opt.update(g, state, params, 1.0)
+    p2, _ = opt.update(g, s1, p1, 1.0)
+    # second step is larger due to momentum
+    assert abs(float(p2["w"] - p1["w"])) > abs(float(p1["w"]))
+
+
+def test_schedules():
+    assert float(constant(0.1)(100)) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.1, abs=1e-3)
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(5)) == pytest.approx(0.5)
+    assert float(wc(10)) == pytest.approx(1.0, abs=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.array([1, 2, 3], jnp.int32)},
+            "d": [jnp.zeros(4), jnp.ones(2)]}
+    d = str(tmp_path / "ckpt")
+    save(d, 3, tree)
+    save(d, 7, jax.tree.map(lambda a: a + 1, tree))
+    assert latest_step(d) == 7
+    r3 = restore(d, tree, step=3)
+    for a, b in zip(jax.tree.leaves(r3), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(a, b)
+    r7 = restore(d, tree)
+    np.testing.assert_allclose(r7["a"], tree["a"] + 1)
+
+
+def test_checkpoint_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path / "none"), {"a": jnp.zeros(1)})

@@ -1,0 +1,153 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import label_stats, losses
+from repro.core.split import client_minibatch_sizes, fedavg
+from repro.data.partition import quantity_skew
+from repro.models.layers import rope
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=200))
+def test_prior_is_distribution(labels):
+    p = label_stats.prior(label_stats.histogram(jnp.array(labels), 10))
+    assert float(p.sum()) == np.testing.assert_allclose(
+        float(p.sum()), 1.0, atol=1e-5) or True
+    assert (np.asarray(p) >= 0).all()
+
+
+@given(st.lists(st.integers(0, 4), min_size=2, max_size=50),
+       st.floats(0.1, 10.0))
+def test_histogram_weight_scaling(labels, scale):
+    """Scaling all weights leaves the prior unchanged."""
+    lab = jnp.array(labels)
+    w = jnp.ones_like(lab, jnp.float32)
+    p1 = label_stats.prior(label_stats.histogram(lab, 5, w))
+    p2 = label_stats.prior(label_stats.histogram(lab, 5, w * scale))
+    np.testing.assert_allclose(p1, p2, atol=1e-5)
+
+
+@given(st.integers(2, 64), st.integers(2, 12))
+def test_xent_shift_invariance(n, v):
+    """softmax CE is invariant to adding a constant to all logits."""
+    key = jax.random.PRNGKey(n * 13 + v)
+    logits = jax.random.normal(key, (n, v))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, v)
+    l1 = losses.softmax_xent(logits, labels)
+    l2 = losses.softmax_xent(logits + 3.7, labels)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+@given(st.integers(2, 10))
+def test_uniform_prior_adjustment_is_noop(v):
+    """eq. (14) with uniform P(y) == plain CE (up to the constant shift)."""
+    key = jax.random.PRNGKey(v)
+    logits = jax.random.normal(key, (8, v))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (8,), 0, v)
+    uniform = jnp.full((v,), 1.0 / v)
+    l1 = losses.softmax_xent(logits, labels)
+    l2 = losses.softmax_xent(logits, labels, prior=uniform)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=8))
+def test_fedavg_convexity(sizes):
+    """Weighted average lies within [min, max] of client values."""
+    C = len(sizes)
+    key = jax.random.PRNGKey(C)
+    vals = jax.random.normal(key, (C, 5))
+    avg = fedavg({"w": vals}, jnp.array(sizes))["w"]
+    assert (np.asarray(avg) <= np.asarray(vals.max(0)) + 1e-5).all()
+    assert (np.asarray(avg) >= np.asarray(vals.min(0)) - 1e-5).all()
+
+
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=10),
+       st.integers(8, 512))
+def test_minibatch_sizes_bounds(sizes, B):
+    """eq. (3): every B_k >= 1 and sum <= B + C (flooring slack)."""
+    bks = client_minibatch_sizes(sizes, B)
+    assert (bks >= 1).all()
+    assert bks.sum() <= B + len(sizes)
+
+
+@given(st.integers(2, 8), st.integers(1, 4))
+def test_quantity_skew_class_cap(num_classes, alpha):
+    rng = np.random.default_rng(0)
+    labels = np.repeat(np.arange(num_classes), 40)
+    parts = quantity_skew(labels, 6, alpha, num_classes, rng)
+    for p in parts:
+        assert len(np.unique(labels[p])) <= max(1, alpha)
+
+
+@given(st.integers(2, 32), st.integers(1, 60))
+def test_rope_norm_preserving(half_pairs, pos):
+    hd = half_pairs * 2
+    key = jax.random.PRNGKey(hd + pos)
+    x = jax.random.normal(key, (1, 3, 2, hd))
+    y = rope.apply_rope(x, jnp.full((3,), pos), 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(2, 6))
+def test_lace_equals_ref_property(g, n_chunks, v):
+    """Chunked LACE == materialized-logits reference for random shapes."""
+    from repro.kernels.lace.ops import lace_loss
+    from repro.kernels.lace.ref import lace_ref
+    N = n_chunks * 4
+    d = 8
+    key = jax.random.PRNGKey(g * 100 + N + v)
+    feats = jax.random.normal(key, (g, N, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, v)) * 0.2
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (g, N), 0, v)
+    got = lace_loss(feats, W, labels, None, None, None, 1.0, 1e-8, 4)
+    ref = lace_ref(feats.reshape(-1, d), W, labels.reshape(-1))
+    np.testing.assert_allclose(float(got), float(ref), rtol=2e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4), st.floats(1.0, 4.0))
+def test_moe_dispatch_conserves_tokens(seed, top_k, cap_factor):
+    """With ample capacity, every routed token lands in exactly one
+    expert slot per assignment (the vmapped per-group scatter must not
+    drop or duplicate) and the combine weights sum to 1 per token."""
+    from helpers import tiny_moe_cfg
+    from repro.configs.base import MoEConfig
+    from repro.models.layers import moe
+
+    import dataclasses
+    cfg = dataclasses.replace(
+        tiny_moe_cfg(), moe=MoEConfig(num_experts=4, top_k=top_k,
+                                      d_expert=16,
+                                      capacity_factor=float(cap_factor)))
+    key = jax.random.PRNGKey(seed)
+    params = moe.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    y, aux = moe.moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.0
+    # capacity_factor >= top_k guarantees no drops for <=8 tokens/group:
+    # then output equals the dense brute-force reference
+    if cap_factor >= 2.0:
+        m = cfg.moe
+        logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                            params["router"])
+        gates = jax.nn.softmax(logits, -1)
+        top_w, top_i = jax.lax.top_k(gates, m.top_k)
+        top_w = top_w / top_w.sum(-1, keepdims=True)
+        ref = jnp.zeros_like(x)
+        for e in range(m.num_experts):
+            h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["gate"][e])) \
+                * jnp.einsum("bsd,df->bsf", x, params["up"][e])
+            y_e = jnp.einsum("bsf,fd->bsd", h, params["down"][e])
+            w_e = jnp.where(top_i == e, top_w, 0.0).sum(-1)
+            ref = ref + y_e * w_e[..., None].astype(x.dtype)
+        cap = moe.capacity(8, m)
+        if cap >= 8 * m.top_k // m.num_experts + 8:  # truly ample only
+            np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                       rtol=2e-2, atol=2e-2)

@@ -1,0 +1,101 @@
+"""Unit tests for the roofline HLO-collective parsers."""
+import pytest
+
+from repro.perf.roofline import (parse_collectives, parse_collectives_scoped,
+                                 roofline_terms)
+
+# minimal post-SPMD-shaped module: an entry with one direct all-gather and
+# a while loop (trip 8) whose body holds one all-reduce, nested through a
+# fusion that holds a collective-permute.
+HLO = """\
+HloModule jit_step, is_scheduled=true, num_partitions=16
+
+%fused_inner (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  ROOT %cp = f32[128]{0} collective-permute(%p0), channel_id=3, source_target_pairs={{0,1}}
+}
+
+%body (arg: (s32[], f32[1024])) -> (s32[], f32[1024]) {
+  %arg = (s32[], f32[1024]{0}) parameter(0)
+  %gte = f32[1024]{0} get-tuple-element(%arg), index=1
+  %ar = f32[1024]{0} all-reduce(%gte), channel_id=1, to_apply=%add
+  %fus = f32[128]{0} fusion(%gte), kind=kLoop, calls=%fused_inner
+  ROOT %t = (s32[], f32[1024]{0}) tuple(%gte, %ar)
+}
+
+%cond (arg: (s32[], f32[1024])) -> pred[] {
+  %arg = (s32[], f32[1024]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+ENTRY %main_spmd (p: f32[2048]) -> f32[2048] {
+  %p = f32[2048]{0} parameter(0)
+  %ag = f32[2048]{0} all-gather(%p), channel_id=2, dimensions={0}
+  %t0 = (s32[], f32[1024]{0}) tuple(%zero, %half)
+  %w = (s32[], f32[1024]{0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"},"known_init_step":{"init":"0","step":"1"}}
+  ROOT %out = f32[2048]{0} add(%ag, %ag)
+}
+"""
+
+
+def test_flat_counts_each_op_once():
+    c = parse_collectives(HLO)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-reduce"]["count"] == 1
+    assert c["collective-permute"]["count"] == 1
+    # AR charged 2x result size (ring RS+AG): 2*1024*4
+    assert c["all-reduce"]["bytes"] == 2 * 1024 * 4
+    assert c["all-gather"]["bytes"] == 2048 * 4
+
+
+def test_scoped_multiplies_loop_bodies_by_trip_count():
+    c = parse_collectives_scoped(HLO)
+    assert c["loop_aware"] is True
+    # body runs 8x: AR and the fusion-nested permute both scale by 8
+    assert c["all-reduce"]["count"] == 8
+    assert c["all-reduce"]["bytes"] == 8 * 2 * 1024 * 4
+    assert c["collective-permute"]["count"] == 8
+    assert c["collective-permute"]["bytes"] == 8 * 128 * 4
+    # entry-level all-gather still counted once
+    assert c["all-gather"]["count"] == 1
+    assert c["total_bytes"] == (8 * 2 * 1024 * 4 + 8 * 128 * 4 + 2048 * 4)
+
+
+def test_scoped_falls_back_to_condition_constant():
+    hlo = HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"8"},'
+        '"known_init_step":{"init":"0","step":"1"}}', "")
+    c = parse_collectives_scoped(hlo)
+    assert c["all-reduce"]["count"] == 8  # from `constant(8)` in %cond
+
+
+def test_tuple_all_reduce_with_index_comments_is_counted():
+    # XLA prints tuple types with /*index=N*/ comments past 5 elements —
+    # the parser must not stop at the '='
+    line = ("  %all-reduce.1 = (f32[1024]{0}, f32[8,4]{1,0}, f32[2]{0}, "
+            "f32[2]{0}, f32[2]{0}, /*index=5*/f32[16]{0}) "
+            "all-reduce(%a, %b, %c, %d, %e, %f), channel_id=1, "
+            "replica_groups={{0,1}}, to_apply=%add")
+    mod = "ENTRY %m (p: f32[2]) -> f32[2] {\n" + line + "\n}\n"
+    c = parse_collectives(mod)
+    expected = 2 * 4 * (1024 + 32 + 2 + 2 + 2 + 16)
+    assert c["all-reduce"]["bytes"] == expected
+    sc = parse_collectives_scoped(mod)
+    assert sc["all-reduce"]["bytes"] == expected
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(flops=197e12, hbm_bytes=0.0, coll_bytes=50e9 * 2,
+                       min_bytes=819e9 * 0.5)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(2.0)
+    assert t["t_memory_min_s"] == pytest.approx(0.5)
+    assert t["bottleneck"] == "collective"

@@ -1,0 +1,217 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import rand_batch, tiny_cfg
+from repro.configs import ScalaConfig
+from repro.core import label_stats, logit_adjust, losses
+from repro.core.scala import (init_scala_params, scala_aggregate,
+                              scala_local_step, scala_local_step_fused,
+                              transformer_split_model)
+from repro.core.split import client_minibatch_sizes, fedavg, stack_client_params
+from repro.models import transformer as T
+
+
+# --------------------------------------------------------------------------
+# label statistics (eqs. 5-6 concat semantics)
+# --------------------------------------------------------------------------
+
+
+def test_histogram_and_prior():
+    labels = jnp.array([0, 1, 1, 2, 2, 2])
+    h = label_stats.histogram(labels, 4)
+    np.testing.assert_allclose(h, [1, 2, 3, 0])
+    p = label_stats.prior(h)
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-6)
+    np.testing.assert_allclose(p, [1/6, 2/6, 3/6, 0])
+
+
+def test_histogram_respects_weights_and_invalid():
+    labels = jnp.array([0, 1, -1, 7])
+    w = jnp.array([1.0, 0.5, 1.0, 1.0])
+    h = label_stats.histogram(labels, 3, w)  # -1 and 7 out of range
+    np.testing.assert_allclose(h, [1.0, 0.5, 0.0])
+
+
+def test_concat_prior_is_weighted_by_client_size():
+    """P_s must be the histogram of the union batch, not mean of P_k."""
+    labels = jnp.array([[0, 0, 0, 0], [1, 2, 0, 0]])
+    w = jnp.array([[1, 1, 1, 1], [1, 1, 0, 0]], jnp.float32)
+    p_k, p_s = label_stats.client_and_concat_priors(labels, 3, w)
+    np.testing.assert_allclose(p_k[0], [1, 0, 0], atol=1e-6)
+    np.testing.assert_allclose(p_k[1], [0, .5, .5], atol=1e-6)
+    # union: 4x class0? client0 has 4 zeros, client1 has {1,2}
+    np.testing.assert_allclose(p_s, [4/6, 1/6, 1/6], atol=1e-6)
+
+
+def test_empty_histogram_gives_uniform_prior():
+    p = label_stats.prior(jnp.zeros(5))
+    np.testing.assert_allclose(p, 0.2)
+
+
+# --------------------------------------------------------------------------
+# logit adjustment (eqs. 13-15, Lemma/Theorem behaviour)
+# --------------------------------------------------------------------------
+
+
+def test_adjusted_loss_penalizes_frequent_class_less_confident():
+    """With adjustment, predicting the frequent class yields HIGHER loss
+    (its logit gets inflated by log P inside the CE)."""
+    logits = jnp.array([[2.0, 0.0, 0.0]])
+    labels = jnp.array([1])
+    prior = jnp.array([0.8, 0.1, 0.1])
+    plain = losses.softmax_xent(logits, labels)
+    adjusted = losses.softmax_xent(logits, labels, prior=prior)
+    assert float(adjusted) > float(plain)
+
+
+def test_balanced_prediction_shifts_to_rare_class():
+    logits = jnp.array([[1.0, 0.9]])
+    prior = jnp.array([0.99, 0.01])
+    plain = int(jnp.argmax(logits, -1)[0])
+    bal = int(logit_adjust.balanced_prediction(logits, prior)[0])
+    assert plain == 0 and bal == 1
+
+
+def test_classifier_update_lemma():
+    """Lemma 4.2 vs 4.3: with plain CE the rare-class classifier barely
+    updates; logit adjustment revives it (Theorem 4.4)."""
+    key = jax.random.PRNGKey(0)
+    N, d = 4, 8
+    # orthogonal features per class (Assumption 4.1)
+    feats_basis = jnp.eye(N, d)
+    counts = jnp.array([1000, 1000, 1000, 1])       # class 3 is rare
+    labels = jnp.repeat(jnp.arange(N), counts)
+    x = feats_basis[labels]
+    prior = counts / counts.sum()
+    W = jax.random.normal(key, (d, N)) * 0.01
+
+    def grad_for(prior_arg):
+        def loss(w):
+            return losses.softmax_xent(x @ w, labels, prior=prior_arg)
+        return jax.grad(loss)(W)
+
+    g_plain = grad_for(None)
+    g_adj = grad_for(prior)
+    # logit update for rare class y: -g[:, y] . feat_y
+    upd_plain = float(-(g_plain[:, 3] @ feats_basis[3]))
+    upd_adj = float(-(g_adj[:, 3] @ feats_basis[3]))
+    assert upd_adj > upd_plain  # eq. (18)
+
+
+# --------------------------------------------------------------------------
+# aggregation (eqs. 3, 10)
+# --------------------------------------------------------------------------
+
+
+def test_minibatch_sizes_eq3():
+    sizes = client_minibatch_sizes([100, 300], 40)
+    assert list(sizes) == [10, 30]
+    sizes = client_minibatch_sizes([1, 1000], 32)
+    assert sizes[0] >= 1  # floor at 1
+
+
+def test_fedavg_weighted():
+    stacked = {"w": jnp.array([[0.0], [10.0]])}
+    avg = fedavg(stacked, jnp.array([3.0, 1.0]))
+    np.testing.assert_allclose(avg["w"], [2.5])
+
+
+def test_stack_and_aggregate_roundtrip():
+    p = {"a": jnp.arange(4.0)}
+    stacked = stack_client_params(p, 3)
+    assert stacked["a"].shape == (3, 4)
+    agg = scala_aggregate({"client": stacked, "server": p})
+    np.testing.assert_allclose(agg["client"]["a"][0], p["a"])
+
+
+# --------------------------------------------------------------------------
+# the SCALA step itself
+# --------------------------------------------------------------------------
+
+
+def _setup(key, cfg, C=3, Bk=2, S=8):
+    model = transformer_split_model(cfg)
+    params = init_scala_params(
+        key, lambda k: T.init_params(k, cfg)["client"],
+        lambda k: T.init_params(k, cfg)["server"], C)
+    b = rand_batch(key, cfg, Bk, S)
+    batch = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), b)
+    # make labels differ per client (label skew)
+    batch = dict(batch)
+    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 9),
+                                         (C, Bk, S), 0, cfg.vocab_size)
+    return model, params, batch
+
+
+def test_fused_step_matches_reference_step():
+    """scala_local_step_fused (LACE) == scala_local_step (materialized
+    logits) — same new params and losses."""
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(0)
+    model, params, batch = _setup(key, cfg)
+    sc = ScalaConfig(lr=0.05)
+    p_ref, m_ref = scala_local_step(model, params, batch, sc)
+    p_fused, m_fused = scala_local_step_fused(model, params, batch, sc,
+                                              ce_chunk=8)
+    np.testing.assert_allclose(m_ref["loss_server"], m_fused["loss_server"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(m_ref["loss_client"], m_fused["loss_client"],
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_fused)):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+def test_scala_step_decreases_loss():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(1)
+    model, params, batch = _setup(key, cfg)
+    sc = ScalaConfig(lr=0.05)
+    step = jax.jit(lambda p, b: scala_local_step_fused(model, p, b, sc))
+    losses_seq = []
+    for _ in range(5):
+        params, m = step(params, batch)
+        losses_seq.append(float(m["loss_server"]))
+    assert losses_seq[-1] < losses_seq[0]
+
+
+def test_clients_diverge_then_aggregate():
+    """During local iterations client models diverge; eq. (10) re-unifies."""
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(2)
+    model, params, batch = _setup(key, cfg)
+    sc = ScalaConfig(lr=0.05)
+    params, _ = scala_local_step_fused(model, params, batch, sc)
+    emb = params["client"]["embed"]["tok"]
+    assert not jnp.allclose(emb[0], emb[1])       # diverged
+    agg = scala_aggregate(params)
+    emb2 = agg["client"]["embed"]["tok"]
+    np.testing.assert_allclose(emb2[0], emb2[1])  # re-unified
+
+
+def test_adjust_flags_change_updates():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(3)
+    model, params, batch = _setup(key, cfg)
+    p1, _ = scala_local_step_fused(model, params, batch,
+                                   ScalaConfig(lr=0.05))
+    p2, _ = scala_local_step_fused(
+        model, params, batch,
+        ScalaConfig(lr=0.05, adjust_server=False, adjust_client=False))
+    a = p1["server"]["head"]["out"]
+    b = p2["server"]["head"]["out"]
+    assert not jnp.allclose(a, b)
+
+
+def test_server_updates_every_local_iteration():
+    """SCALA's server updates each local step (vs. SFL's per-round)."""
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(4)
+    model, params, batch = _setup(key, cfg)
+    sc = ScalaConfig(lr=0.05)
+    p1, _ = scala_local_step_fused(model, params, batch, sc)
+    s0 = jax.tree.leaves(params["server"])
+    s1 = jax.tree.leaves(p1["server"])
+    moved = sum(float(jnp.abs(a - b).max()) > 0 for a, b in zip(s0, s1))
+    assert moved > len(s0) // 2

@@ -1,0 +1,178 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import rand_batch, tiny_cfg, tiny_mamba_cfg, tiny_moe_cfg, tiny_xlstm_cfg
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as T
+
+
+# --------------------------------------------------------------------------
+# per-arch smoke tests (deliverable f): reduced variant of the same family,
+# one forward/train step on CPU, output shapes + no NaNs
+# --------------------------------------------------------------------------
+
+
+def _batch_for(cfg, key, B=2, S=12):
+    batch = rand_batch(key, cfg, B, S)
+    if cfg.frontend == "vision":
+        batch["prefix_emb"] = jax.random.normal(
+            key, (B, cfg.num_prefix_tokens, cfg.frontend_dim)) * 0.1
+        batch["labels"] = jax.random.randint(
+            key, (B, cfg.num_prefix_tokens + S), 0, cfg.vocab_size)
+        batch["weights"] = jnp.concatenate(
+            [jnp.zeros((B, cfg.num_prefix_tokens)), jnp.ones((B, S))], 1)
+    if cfg.frontend == "audio":
+        batch["memory_emb"] = jax.random.normal(
+            key, (B, cfg.num_prefix_tokens, cfg.frontend_dim)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_arch_smoke_forward(name):
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = _batch_for(cfg, key)
+    logits, aux = T.forward(params, batch, cfg)
+    S_total = batch["labels"].shape[1]
+    assert logits.shape == (2, S_total, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_arch_smoke_train_step(name):
+    """One SCALA train step per reduced arch: params move, no NaNs."""
+    from repro.configs import ScalaConfig
+    from repro.core.scala import (init_scala_params, scala_local_step_fused,
+                                  transformer_split_model)
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(0)
+    C, Bk, S = 2, 2, 8
+    model = transformer_split_model(cfg)
+    params = init_scala_params(
+        key, lambda k: T.init_params(k, cfg)["client"],
+        lambda k: T.init_params(k, cfg)["server"], C)
+    b1 = _batch_for(cfg, key, B=Bk, S=S)
+    batch = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (C,) + a.shape),
+                         b1)
+    sc = ScalaConfig(lr=0.01)
+    new_params, metrics = jax.jit(
+        lambda p, b: scala_local_step_fused(model, p, b, sc))(params, batch)
+    assert jnp.isfinite(metrics["loss_server"])
+    assert jnp.isfinite(metrics["loss_client"])
+    # server head must have moved (eq. 7)
+    before = params["server"]["head"]["out"]
+    after = new_params["server"]["head"]["out"]
+    assert not jnp.allclose(before, after)
+    # client embed must have moved (eq. 9)
+    assert not jnp.allclose(params["client"]["embed"]["tok"],
+                            new_params["client"]["embed"]["tok"])
+    for leaf in jax.tree.leaves(new_params):
+        assert not jnp.isnan(leaf).any()
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_arch_smoke_decode_step(name):
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B = 2
+    cache = T.init_decode_cache(cfg, B, 16)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.frontend == "audio":
+        batch["memory_emb"] = jnp.zeros((B, cfg.num_prefix_tokens,
+                                         cfg.frontend_dim))
+    logits, new_cache = T.decode_step(params, batch, cache, jnp.int32(0), cfg)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+# --------------------------------------------------------------------------
+# structural tests
+# --------------------------------------------------------------------------
+
+
+def test_split_consistency():
+    """client_forward + server_forward == forward."""
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = rand_batch(key, cfg)
+    acts = T.client_forward(params["client"], batch, cfg)
+    logits1, _ = T.server_forward(params["server"], acts, cfg)
+    logits2, _ = T.forward(params, batch, cfg)
+    np.testing.assert_allclose(logits1, logits2, atol=1e-6)
+
+
+def test_decode_matches_forward_tiny():
+    cfg = tiny_cfg(num_layers=2, split_layer=1)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B, S = 2, 10
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full, _ = T.forward(params, {"tokens": toks}, cfg, remat=False)
+    cache = T.init_decode_cache(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, cache = T.decode_step(params, {"tokens": toks[:, i:i + 1]},
+                                  cache, jnp.int32(i), cfg)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(logits_full, logits_dec, atol=2e-3, rtol=1e-3)
+
+
+def test_decode_matches_forward_hybrid():
+    cfg = tiny_mamba_cfg(num_layers=3, split_layer=1)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B, S = 1, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full, _ = T.forward(params, {"tokens": toks}, cfg, remat=False)
+    cache = T.init_decode_cache(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, cache = T.decode_step(params, {"tokens": toks[:, i:i + 1]},
+                                  cache, jnp.int32(i), cfg)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(logits_full, logits_dec, atol=2e-3, rtol=1e-3)
+
+
+def test_forward_prefill_last_only():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = rand_batch(key, cfg)
+    full, _ = T.forward(params, batch, cfg, remat=False)
+    last = T.forward_prefill(params, batch, cfg)
+    np.testing.assert_allclose(full[:, -1:], last, atol=1e-5)
+
+
+def test_param_axes_structure_matches():
+    from repro.sharding.logical import is_axes
+    for make in (tiny_cfg, tiny_moe_cfg, tiny_mamba_cfg, tiny_xlstm_cfg):
+        cfg = make()
+        params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+        axes = T.param_axes(cfg)
+        lp = jax.tree.leaves(params)
+        la = jax.tree.leaves(axes, is_leaf=is_axes)
+        assert len(lp) == len(la), cfg.name
+        for p, a in zip(lp, la):
+            assert len(p.shape) == len(a), (cfg.name, p.shape, a)
+
+
+def test_cache_axes_structure_matches():
+    from repro.sharding.logical import is_axes
+    cfg = tiny_mamba_cfg()
+    cache = jax.eval_shape(lambda: T.init_decode_cache(cfg, 2, 8))
+    axes = T.cache_axes(cfg)
+    lc = jax.tree.leaves(cache)
+    la = jax.tree.leaves(axes, is_leaf=is_axes)
+    assert len(lc) == len(la)
+    for c, a in zip(lc, la):
+        assert len(c.shape) == len(a)
