@@ -17,8 +17,10 @@ import numpy as np
 
 from repro.configs import ScalaConfig
 from repro.core import baselines as B
+from repro.core import engine
+from repro.core.engine import SplitModel
 from repro.core.losses import accuracy, per_class_accuracy
-from repro.core.scala import (SplitModel, scala_aggregate, scala_local_step)
+from repro import optim
 from repro.data.loader import FederatedData, round_batches, sample_clients
 from repro.data.partition import partition
 from repro.data.synthetic import gaussian_images
@@ -96,17 +98,22 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
         params = {"client": jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
             "server": ws}
-        step = jax.jit(lambda p, b: scala_local_step(model, p, b, sc))
+        # engine round runner: T local iterations + FedAvg in ONE scanned
+        # XLA program (backend "logits": AlexNet materializes its 10-way
+        # logits; no trunk/head split needed). Full unroll: XLA:CPU runs
+        # rolled-loop bodies with reduced parallelism (benchmarks/round_loop).
+        state = engine.init_train_state(params, optim.sgd())
+        round_fn = jax.jit(engine.make_round_runner(model, sc,
+                                                    backend="logits",
+                                                    unroll=True))
         for _ in range(rounds):
             sel = sample_clients(K, C, rng)
             rb = round_batches(data, sel, server_batch, T, rng)
             sizes = jnp.asarray(rb.pop("sizes"))
-            for t in range(T):
-                batch = {k: jnp.asarray(v[t]) for k, v in rb.items()}
-                params, _ = step(params, batch)
-            params = scala_aggregate(params, sizes)
-        wc0 = jax.tree.map(lambda a: a[0], params["client"])
-        merged = A.merge_params(wc0, params["server"])
+            batches = {k: jnp.asarray(v) for k, v in rb.items()}
+            state, _ = round_fn(state, batches, sizes)
+        wc0 = jax.tree.map(lambda a: a[0], state.params["client"])
+        merged = A.merge_params(wc0, state.params["server"])
         return finish(lambda xs: A.forward(merged, xs, split))
 
     if method in B.FL_METHODS:

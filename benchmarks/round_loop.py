@@ -1,0 +1,129 @@
+"""Round-loop benchmark: Python-loop dispatch vs the engine's
+scan-compiled round (`engine.make_round_runner`).
+
+All variants run the identical SCALA math (logits backend, plain SGD) on
+the paper's width-scaled AlexNet; the only difference is dispatch:
+
+  python_loop    T jitted step calls + FedAvg per round (legacy driver)
+  scan           ONE jitted program per round, rolled lax.scan (small HLO
+                 — the production setting for the deep archs; note
+                 XLA:CPU executes while-loop bodies with reduced
+                 parallelism, so this loses on CPU at toy scale)
+  scan_unrolled  ONE jitted program per round, scan fully unrolled —
+                 single dispatch AND no loop serialization
+
+Reports steps/sec and writes ``BENCH_round_loop.json`` next to this file
+(or to ``--out``).
+
+  PYTHONPATH=src python -m benchmarks.round_loop [--rounds 20] [--T 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.core.scala import alexnet_split_model, scala_round
+from repro.models import alexnet as A
+
+
+def _setup(C: int, Bk: int, T: int, num_classes: int = 10, width: float = 0.125,
+           seed: int = 0):
+    model = alexnet_split_model("s2", num_classes=num_classes)
+    full = A.init_params(jax.random.PRNGKey(seed), num_classes=num_classes,
+                         width=width)
+    wc, ws = A.split_params(full, "s2")
+    params = {"client": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+        "server": ws}
+    rng = np.random.default_rng(seed)
+    rb = {
+        "x": jnp.asarray(rng.normal(size=(T, C, Bk, 32, 32, 3)),
+                         jnp.float32),
+        "labels": jnp.asarray(rng.integers(0, num_classes, (T, C, Bk)),
+                              jnp.int32),
+        "weights": jnp.ones((T, C, Bk), jnp.float32),
+    }
+    sizes = jnp.ones((C,), jnp.float32)
+    return model, params, rb, sizes
+
+
+def bench_round_loop(rounds: int = 20, C: int = 4, Bk: int = 16, T: int = 5,
+                     lr: float = 0.05):
+    """Returns the result dict (also printed/serialized by main)."""
+    model, params, rb, sizes = _setup(C, Bk, T)
+    sc = ScalaConfig(num_clients=C, participation=1.0, local_iters=T, lr=lr)
+
+    # --- baseline: Python loop, one jitted dispatch per local step ---
+    from repro.core.scala import scala_local_step
+    step = jax.jit(lambda p, b: scala_local_step(model, p, b, sc))
+    p0, _ = scala_round(model, params, rb, sc, sizes, local_step=step)  # warm
+    jax.block_until_ready(jax.tree.leaves(p0)[0])
+    t0 = time.perf_counter()
+    p_loop = params
+    for _ in range(rounds):
+        p_loop, _ = scala_round(model, p_loop, rb, sc, sizes, local_step=step)
+    jax.block_until_ready(jax.tree.leaves(p_loop)[0])
+    t_loop = time.perf_counter() - t0
+
+    # --- engine: T local iterations + FedAvg in one scanned program ---
+    state = engine.init_train_state(params, optim.sgd())
+    steps = rounds * T
+    res = {
+        "bench": "round_loop",
+        "config": {"rounds": rounds, "clients": C, "per_client_batch": Bk,
+                   "local_iters": T, "lr": lr, "model": "alexnet-w0.125"},
+        "python_loop": {"seconds": round(t_loop, 4),
+                        "steps_per_sec": round(steps / t_loop, 2)},
+        "backend": jax.default_backend(),
+    }
+    for name, unroll in (("scan", 1), ("scan_unrolled", True)):
+        round_fn = jax.jit(engine.make_round_runner(model, sc,
+                                                    backend="logits",
+                                                    unroll=unroll))
+        s0, _ = round_fn(state, rb, sizes)                              # warm
+        jax.block_until_ready(jax.tree.leaves(s0.params)[0])
+        t0 = time.perf_counter()
+        s = state
+        for _ in range(rounds):
+            s, _ = round_fn(s, rb, sizes)
+        jax.block_until_ready(jax.tree.leaves(s.params)[0])
+        t = time.perf_counter() - t0
+        # sanity: every driver lands on the same params
+        drift = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(p_loop), jax.tree.leaves(s.params)))
+        res[name] = {"seconds": round(t, 4),
+                     "steps_per_sec": round(steps / t, 2),
+                     "speedup_vs_loop": round(t_loop / t, 3),
+                     "max_param_drift": drift}
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--T", type=int, default=5)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_round_loop.json"))
+    args = ap.parse_args()
+
+    res = bench_round_loop(rounds=args.rounds, C=args.clients, Bk=args.batch,
+                           T=args.T)
+    print(json.dumps(res, indent=2))
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

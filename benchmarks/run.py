@@ -154,6 +154,21 @@ def bench_roofline(_quick: bool) -> None:
               f"{'' if ufr is None else f'{ufr:.3f}'}", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Round-loop dispatch benchmark (engine scan vs Python loop; no paper
+# table — backs the split-step engine's fused round program).
+# ---------------------------------------------------------------------------
+
+def bench_round_loop(quick: bool) -> None:
+    from benchmarks.round_loop import bench_round_loop as _bench
+
+    res = _bench(rounds=5 if quick else 20)
+    for variant in ("python_loop", "scan", "scan_unrolled"):
+        print(f"round_loop,steps_per_sec,{variant},"
+              f"{res[variant]['steps_per_sec']},,"
+              f"{res[variant]['seconds']}", flush=True)
+
+
 TABLES = {
     "t1": bench_table1,
     "t2": bench_table2,
@@ -161,6 +176,7 @@ TABLES = {
     "t5": bench_table5,
     "t7": bench_table7,
     "t8": bench_table8,
+    "round_loop": bench_round_loop,
     "roofline": bench_roofline,
 }
 

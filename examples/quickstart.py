@@ -3,7 +3,9 @@
 Runs the exact Algorithm-2 loop at toy scale: K=8 clients with
 quantity-skewed (alpha=2 -> missing classes) synthetic CIFAR-shaped
 data, C=4 participating, T=3 local iterations with concatenated
-activations + dual logit-adjusted losses, then the FedAvg phase.
+activations + dual logit-adjusted losses, then the FedAvg phase — the
+whole round compiled as ONE program by the split-step engine's
+round runner (:func:`repro.core.engine.make_round_runner`).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,9 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import optim
 from repro.configs import ScalaConfig
-from repro.core.scala import (alexnet_split_model, scala_aggregate,
-                              scala_local_step)
+from repro.core import engine
+from repro.core.scala import alexnet_split_model
 from repro.data.loader import FederatedData, round_batches, sample_clients
 from repro.data.partition import partition
 from repro.data.synthetic import gaussian_images
@@ -36,19 +39,21 @@ params = {"client": jax.tree.map(
 
 sc = ScalaConfig(num_clients=K, participation=C / K, local_iters=T,
                  server_batch=B, lr=0.05)
-step = jax.jit(lambda p, b: scala_local_step(model, p, b, sc))
+# T local iterations (eqs. 4-9) + FedAvg (eq. 10) in one scanned program
+state = engine.init_train_state(params, optim.sgd())
+round_fn = jax.jit(engine.make_round_runner(model, sc, backend="logits",
+                                            unroll=True))
 rng = np.random.default_rng(0)
 
 for rnd in range(ROUNDS):
     sel = sample_clients(K, C, rng)                     # partial participation
     rb = round_batches(data, sel, B, T, rng)            # eq. (3) batch sizing
     sizes = jnp.asarray(rb.pop("sizes"))
-    for t in range(T):
-        batch = {k: jnp.asarray(v[t]) for k, v in rb.items()}
-        params, metrics = step(params, batch)           # eqs. (4)-(9)
-    params = scala_aggregate(params, sizes)             # eq. (10)
-    merged = A.merge_params(jax.tree.map(lambda a: a[0], params["client"]),
-                            params["server"])
+    batches = {k: jnp.asarray(v) for k, v in rb.items()}
+    state, metrics = round_fn(state, batches, sizes)
+    merged = A.merge_params(jax.tree.map(lambda a: a[0],
+                                         state.params["client"]),
+                            state.params["server"])
     logits = A.forward(merged, x_test, "s2")
     acc = float((jnp.argmax(logits, -1) == y_test).mean())
     print(f"round {rnd}: server_loss={float(metrics['loss_server']):.3f} "

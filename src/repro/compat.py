@@ -1,0 +1,109 @@
+"""JAX version-compat shims.
+
+The framework targets the newer mesh-context API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.shard_map(check_vma=...)``)
+but must run on the baked-in toolchain (jax 0.4.x), where those names
+live elsewhere or do not exist. Everything that touches an ambient mesh
+or ``shard_map`` goes through this module:
+
+* :func:`set_mesh` — context manager making ``mesh`` ambient. On new JAX
+  it is ``jax.set_mesh``; on 0.4.x it enters the legacy resource-env
+  (``with mesh:``, so ``with_sharding_constraint`` accepts bare
+  ``PartitionSpec``) and records the mesh in a thread-local that
+  :func:`ambient_mesh` reads.
+* :func:`ambient_mesh` — the mesh made ambient by :func:`set_mesh`, or
+  ``None``. Replaces ``jax.sharding.get_abstract_mesh()`` callers.
+* :func:`in_shard_map` — True while tracing the body of a
+  :func:`shard_map` from this module. Replaces the ``axis_types ==
+  Manual`` test: inside a shard body all data is already device-local, so
+  sharding constraints / ambient-mesh collectives must be skipped.
+* :func:`shard_map` — ``jax.shard_map`` when present, else the
+  ``jax.experimental.shard_map`` fallback (``check_vma`` mapped to
+  ``check_rep``); either way the body is wrapped so :func:`in_shard_map`
+  is visible to model code called from inside it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_HAS_NATIVE_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+_tls = threading.local()
+
+
+def in_shard_map() -> bool:
+    """True while tracing the body of a :func:`shard_map` call."""
+    return getattr(_tls, "in_shard_map", False)
+
+
+def ambient_mesh():
+    """The mesh made ambient by :func:`set_mesh`, or ``None``."""
+    if _HAS_NATIVE_SET_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        return m if m is not None and m.axis_names else None
+    return getattr(_tls, "mesh", None)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Make ``mesh`` the ambient mesh (compat for ``jax.set_mesh``)."""
+    if _HAS_NATIVE_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _tls.mesh = prev
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` compat wrapper (maps ``check_vma``->``check_rep``
+    on old JAX) that also flags :func:`in_shard_map` during body tracing."""
+
+    def body(*args, **kwargs):
+        prev = getattr(_tls, "in_shard_map", False)
+        _tls.in_shard_map = True
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _tls.in_shard_map = prev
+
+    if _HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the constructor API change
+    (new JAX: ``(sizes, names)``; 0.4.x: one tuple of (name, size) pairs)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def manual_axis_names(mesh) -> set:
+    """Mesh axes currently in Manual (shard_map) mode. On old JAX the
+    per-axis types do not exist; :func:`in_shard_map` covers the use."""
+    types = getattr(mesh, "axis_types", None)
+    if types is None:
+        return set(mesh.axis_names) if in_shard_map() else set()
+    try:
+        return {n for n, t in zip(mesh.axis_names, types)
+                if str(t) == "Manual"}
+    except TypeError:
+        return set()

@@ -1,9 +1,17 @@
-from repro.core import baselines, label_stats, logit_adjust, losses, scala, split  # noqa: F401
-from repro.core.scala import (  # noqa: F401
+from repro.core import baselines, engine, label_stats, logit_adjust, losses, scala, split  # noqa: F401
+from repro.core.engine import (  # noqa: F401
     SplitModel,
-    alexnet_split_model,
+    TrainState,
     init_scala_params,
+    init_train_state,
+    make_round_runner,
+    make_split_step,
     scala_aggregate,
+    scala_round_scan,
+    split_step_grads,
+)
+from repro.core.scala import (  # noqa: F401
+    alexnet_split_model,
     scala_local_step,
     scala_local_step_fused,
     scala_round,

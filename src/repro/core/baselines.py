@@ -11,20 +11,26 @@ SFL family (split model):
   sfl_localloss (auxiliary client head; no server->client gradients).
 
 All baselines run at CPU scale (the paper's AlexNet / MLP experiments);
-SCALA itself additionally scales to the production mesh via core.scala.
+SCALA itself additionally scales to the production mesh via the split-step
+engine (:mod:`repro.core.engine`). The split forward/loss and the
+parameter updates are shared with the engine: local objectives go through
+:func:`engine.split_ce` and every update is an
+:class:`repro.optim.Optimizer` (plain SGD by default — the paper's
+setting) with state threaded through the local-iteration scans.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses
+from repro.core import engine, losses
+from repro.core.engine import SplitModel
 from repro.core.label_stats import histogram, prior
-from repro.core.scala import SplitModel
 from repro.core.split import fedavg
+from repro.optim import optimizers
 
 FL_METHODS = ("fedavg", "fedprox", "feddyn", "feddecorr", "fedlogit", "fedla")
 SFL_METHODS = ("splitfed_v1", "splitfed_v2", "splitfed_v3", "sfl_localloss")
@@ -117,18 +123,27 @@ def make_local_loss(method: str, model: FedModel, *, mu: float = 0.01,
 # ---------------------------------------------------------------------------
 
 
-def fl_local_round(loss_fn, w_global, batches, ctx, lr: float):
-    """T local SGD steps from w_global. batches leaves: (T, Bk, ...)."""
+def fl_local_round(loss_fn, w_global, batches, ctx, lr: float,
+                   optimizer: Optional[optimizers.Optimizer] = None):
+    """T local optimizer steps from w_global. batches leaves: (T, Bk, ...).
 
-    def step(w, batch):
+    ``optimizer`` is any :class:`repro.optim.Optimizer` (default: plain
+    SGD, the paper's setting); its state starts fresh each round, as every
+    client restarts from the aggregated model.
+    """
+    opt = optimizer if optimizer is not None else optimizers.sgd()
+
+    def step(carry, batch):
+        w, st = carry
         g = jax.grad(loss_fn)(w, batch, ctx)
-        return jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype), w, g), None
+        return opt.update(g, st, w, lr), None
 
-    w, _ = jax.lax.scan(step, w_global, batches)
+    (w, _), _ = jax.lax.scan(step, (w_global, opt.init(w_global)), batches)
     return w
 
 
-def make_fl_round(method: str, model: FedModel, lr: float, **kw):
+def make_fl_round(method: str, model: FedModel, lr: float,
+                  optimizer: Optional[optimizers.Optimizer] = None, **kw):
     """Returns round(w_global, round_batches, client_labels_counts, state)
     -> (w_global', state'). round_batches leaves: (C, T, Bk, ...).
     """
@@ -145,7 +160,8 @@ def make_fl_round(method: str, model: FedModel, lr: float, **kw):
         def one_client(batches_k, counts_k, pk_k, h_k):
             ctx = {"w_global": w_global, "p_k": pk_k, "counts_k": counts_k,
                    "h_k": h_k}
-            return fl_local_round(loss_fn, w_global, batches_k, ctx, lr)
+            return fl_local_round(loss_fn, w_global, batches_k, ctx, lr,
+                                  optimizer)
 
         if method == "feddyn":
             h = state["h"]
@@ -176,30 +192,31 @@ def init_fl_state(method: str, w_global, num_clients: int):
 # ---------------------------------------------------------------------------
 
 
-def _ce_through_split(model: SplitModel, wc, ws, batch):
-    acts = model.client_fwd(wc, batch)
-    logits, aux = model.server_fwd(ws, acts)
-    return losses.softmax_xent(logits, batch["labels"]) + aux
-
-
 def make_sfl_round(method: str, model: SplitModel, lr: float,
-                   aux_head_fwd=None):
+                   aux_head_fwd=None,
+                   optimizer: Optional[optimizers.Optimizer] = None):
     """SFL-family round functions.
 
     State layout: {'wc': stacked (C,...) or shared, 'ws': ..., 'aux': ...}.
-    round_batches leaves: (C, T, Bk, ...).
+    round_batches leaves: (C, T, Bk, ...). The local objective is the
+    engine's :func:`repro.core.engine.split_ce`; updates come from
+    ``optimizer`` (default plain SGD) with state threaded through the
+    local scans and reset at each round boundary (clients restart from
+    the aggregated model).
     """
+    opt = optimizer if optimizer is not None else optimizers.sgd()
 
     def local_steps_pair(wc, ws, batches_k):
         def step(carry, batch):
-            wc, ws = carry
+            wc, ws, st_c, st_s = carry
             gc, gs = jax.grad(
-                lambda a, b: _ce_through_split(model, a, b, batch),
+                lambda a, b: engine.split_ce(model, a, b, batch),
                 argnums=(0, 1))(wc, ws)
-            wc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), wc, gc)
-            ws = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), ws, gs)
-            return (wc, ws), None
-        (wc, ws), _ = jax.lax.scan(step, (wc, ws), batches_k)
+            wc, st_c = opt.update(gc, st_c, wc, lr)
+            ws, st_s = opt.update(gs, st_s, ws, lr)
+            return (wc, ws, st_c, st_s), None
+        (wc, ws, _, _), _ = jax.lax.scan(
+            step, (wc, ws, opt.init(wc), opt.init(ws)), batches_k)
         return wc, ws
 
     if method in ("splitfed_v1", "splitfed_v3"):
@@ -228,26 +245,29 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
             T = jax.tree.leaves(round_batches)[0].shape[1]
 
             def local_step(carry, t):
-                wc_stack, ws = carry
+                wc_stack, ws, st_c, st_s = carry
 
                 def per_client(carry_ws, k):
-                    ws = carry_ws
+                    ws, st_s = carry_ws
                     batch = jax.tree.map(lambda a: a[k, t], round_batches)
                     wc = jax.tree.map(lambda a: a[k], wc_stack)
                     gc, gs = jax.grad(
-                        lambda a, b: _ce_through_split(model, a, b, batch),
+                        lambda a, b: engine.split_ce(model, a, b, batch),
                         argnums=(0, 1))(wc, ws)
-                    ws = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
-                                      ws, gs)
-                    return ws, gc
+                    ws, st_s = opt.update(gs, st_s, ws, lr)
+                    return (ws, st_s), gc
 
-                ws, gcs = jax.lax.scan(per_client, ws, jnp.arange(C))
-                wc_stack = jax.tree.map(
-                    lambda p, g: p - lr * g.astype(p.dtype), wc_stack, gcs)
-                return (wc_stack, ws), None
+                (ws, st_s), gcs = jax.lax.scan(per_client, (ws, st_s),
+                                               jnp.arange(C))
+                wc_stack, st_c = jax.vmap(
+                    lambda g, s, p: opt.update(g, s, p, lr))(
+                    gcs, st_c, wc_stack)
+                return (wc_stack, ws, st_c, st_s), None
 
-            (wc_stack, ws), _ = jax.lax.scan(
-                local_step, (wc_stack, ws), jnp.arange(T))
+            (wc_stack, ws, _, _), _ = jax.lax.scan(
+                local_step,
+                (wc_stack, ws, jax.vmap(opt.init)(wc_stack), opt.init(ws)),
+                jnp.arange(T))
             new_wc_avg = fedavg(wc_stack, data_sizes)
             new_wc = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), new_wc_avg)
@@ -261,15 +281,15 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
 
             def one_client(wc, aux_p, batches_k):
                 def step(carry, batch):
-                    wc, aux_p, ws_l = carry
+                    wc, aux_p, ws_l, st_c, st_a, st_s = carry
                     # client: local auxiliary loss only
                     def closs(wc_, aux_):
                         acts = model.client_fwd(wc_, batch)
                         lg = aux_head_fwd(aux_, acts["x"])
                         return losses.softmax_xent(lg, batch["labels"])
                     gc, ga = jax.grad(closs, argnums=(0, 1))(wc, aux_p)
-                    wc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), wc, gc)
-                    aux_p = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), aux_p, ga)
+                    wc, st_c = opt.update(gc, st_c, wc, lr)
+                    aux_p, st_a = opt.update(ga, st_a, aux_p, lr)
                     # server: trains on (detached) activations
                     acts = model.client_fwd(wc, batch)
                     acts = jax.tree.map(jax.lax.stop_gradient, acts)
@@ -277,9 +297,13 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
                         lg, aux = model.server_fwd(ws_, acts)
                         return losses.softmax_xent(lg, batch["labels"]) + aux
                     gs = jax.grad(sloss)(ws_l)
-                    ws_l = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), ws_l, gs)
-                    return (wc, aux_p, ws_l), None
-                (wc, aux_p, ws_l), _ = jax.lax.scan(step, (wc, aux_p, ws), batches_k)
+                    ws_l, st_s = opt.update(gs, st_s, ws_l, lr)
+                    return (wc, aux_p, ws_l, st_c, st_a, st_s), None
+                (wc, aux_p, ws_l, _, _, _), _ = jax.lax.scan(
+                    step,
+                    (wc, aux_p, ws, opt.init(wc), opt.init(aux_p),
+                     opt.init(ws)),
+                    batches_k)
                 return wc, aux_p, ws_l
 
             wc_k, aux_k, ws_k = jax.vmap(one_client)(wc_stack, aux_stack,

@@ -1,0 +1,620 @@
+"""The split-step engine: ONE implementation of the SCALA local iteration.
+
+Every SCALA step — naive, fused-LACE, manual-SPMD — is the same five-stage
+pipeline (paper Alg. 2 lines 9-20); this module implements it once and
+parameterizes the two points where the variants actually differ:
+
+  stage 1  label priors        P_k per client, P_s concatenated (eqs. 5-6,
+                               the log-prior terms of eqs. 14-15)
+  stage 2  client forward      vmap over the stacked client axis (eq. 4;
+                               client-parallel on the mesh)
+  stage 3  server forward+vjp  one forward of the server half (eq. 6), one
+                               linearization reused by both losses
+  stage 4  dual pullbacks      P_s-adjusted loss -> d w_s (eqs. 14, 7);
+                               P_k-adjusted loss -> G_k -> d w_k via each
+                               client's chain rule (eqs. 15, 8-9)
+  stage 5  parameter update    an :class:`repro.optim.Optimizer` with lr
+                               from :mod:`repro.optim.schedules` (the paper
+                               uses plain SGD, eq. 7/9; the engine threads
+                               any optimizer state through the params tree)
+
+The variation points:
+
+* **loss backend** (stage 3-4 flavor):
+
+  - ``"logits"``  — materialize full (tokens, V) logits through
+    ``model.server_fwd`` and use :func:`repro.core.losses.softmax_xent`.
+    Reference semantics; fine for CIFAR-scale heads.
+  - ``"lace"``    — run ``model.server_trunk`` to features and fuse
+    head-matmul + adjusted CE with the chunked LACE op
+    (:mod:`repro.kernels.lace`), never materializing logits; required for
+    the 262k-vocab archs.
+  - ``"lace_dp"`` — the replicated-weight manual-SPMD profile: the whole
+    step runs inside one ``shard_map`` and the engine inserts the minimal
+    collective schedule (histogram psums for the priors, two scalar loss
+    psums, ONE psum of the server grad tree, one per-client grad psum over
+    the inner axis), keeping the per-step wire cost at the DDP lower bound
+    of 2x|w_s| + 2x|w_c|.
+
+* **optimizer / schedule** (stage 5): any :class:`repro.optim.Optimizer`;
+  client state is vmapped per client so every state leaf carries the
+  stacked (C, ...) axis and shards exactly like the client params.
+
+On top of the per-step engine, :func:`make_round_runner` /
+:func:`scala_round_scan` compile T local iterations *plus* the FedAvg
+phase (eq. 10) into a single ``lax.scan``-based XLA program — one
+dispatch per round instead of T+1.
+
+The legacy entry points in :mod:`repro.core.scala` are thin wrappers over
+:func:`local_step` with plain SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import ScalaConfig
+from repro.core import losses
+from repro.core.label_stats import client_and_concat_priors, histogram
+from repro.core.split import redistribute, stack_client_params
+from repro.optim import optimizers, schedules
+
+BACKENDS = ("logits", "lace", "lace_dp")
+
+
+# ---------------------------------------------------------------------------
+# model adapter
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SplitModel:
+    """Functional adapter: the two halves of a split model.
+
+    client_fwd(wc, batch) -> acts dict with key 'x' (+ optional 'memory',
+    'positions'); server_fwd(ws, acts) -> (logits, aux_loss).
+
+    For the fused (LACE) backends, additionally:
+    server_trunk(ws, acts) -> (features, aux) — everything *except* the
+    classifier head — and head_weight(ws) -> (d, V) so the loss can fuse
+    head-matmul + adjusted CE without materializing logits.
+    """
+
+    client_fwd: Callable[[Any, Dict[str, Any]], Dict[str, Any]]
+    server_fwd: Callable[[Any, Dict[str, Any]], Any]
+    num_classes: int
+    server_trunk: Optional[Callable[[Any, Dict[str, Any]], Any]] = None
+    head_weight: Optional[Callable[[Any], Any]] = None
+    head_grad_merge: Optional[Callable[[Any, Any], Any]] = None
+    # replicated-head ("dp") profile: route the fused loss through the
+    # shard_map LACE so the head grad is psummed once (§Perf iteration 3)
+    dp_loss: bool = False
+
+
+# ---------------------------------------------------------------------------
+# small shared pieces
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Mesh-axis roles for the manual-SPMD ("lace_dp") backend: the client
+    axis is sharded over ``client``, each client's batch over ``inner``."""
+
+    client: Tuple[str, ...] = ()
+    inner: Tuple[str, ...] = ()
+
+    @property
+    def all(self) -> Tuple[str, ...]:
+        return self.client + self.inner
+
+
+def mesh_axes(mesh) -> MeshAxes:
+    names = set(mesh.axis_names)
+    return MeshAxes(client=tuple(a for a in ("pod", "data") if a in names),
+                    inner=tuple(a for a in ("model",) if a in names))
+
+
+def _flat(a):
+    return a.reshape((-1,) + a.shape[2:])
+
+
+def _prior_for_tokens(p, labels_shape):
+    """Broadcast a (..., N) prior against token labels (...,) -> (..., 1s, N)."""
+    extra = len(labels_shape) - (p.ndim - 1)
+    return p.reshape(p.shape[:-1] + (1,) * extra + (p.shape[-1],))
+
+
+def default_ce_chunk(num_classes: int) -> int:
+    # larger chunks -> fewer head-grad all-reduce trips in the chunked
+    # CE loop (the gW partial is re-reduced every trip); cap the global
+    # chunk so logits stay ~2^32 elements (§Perf iteration 3)
+    return max(4096, (1 << 32) // max(1, num_classes))
+
+
+def _priors(labels, weights, N, scala: ScalaConfig, axes: Optional[MeshAxes]):
+    """Stage 1: (P_k (C,N), P_s (N,)) — local stats, or psummed on a mesh."""
+    if axes is None:
+        return client_and_concat_priors(labels, N, weights,
+                                        eps=scala.prior_eps)
+    # manual-SPMD: local histogram -> psums (paper eq. 14/15)
+    C_l = labels.shape[0]
+    hist_k = jax.vmap(lambda l, w: histogram(l, N, w))(
+        labels.reshape(C_l, -1),
+        (jnp.ones((C_l, labels[0].size), jnp.float32) if weights is None
+         else weights.reshape(C_l, -1)))                   # (C_l, N)
+    if axes.inner:
+        hist_k = jax.lax.psum(hist_k, axes.inner)          # full client hist
+    hist_s = jax.lax.psum(hist_k.sum(0), axes.client) \
+        if axes.client else hist_k.sum(0)
+    p_k = hist_k / jnp.maximum(hist_k.sum(-1, keepdims=True), 1e-8)
+    p_s = hist_s / jnp.maximum(hist_s.sum(), 1e-8)
+    return p_k, p_s
+
+
+def _server_vjp(fwd, ws, acts):
+    """Stage 3: linearize the server fn (server_fwd or server_trunk) wrt
+    (w_s, x[, memory]) with positions closed over. Returns
+    ((out, aux), vjp, has_mem)."""
+    x = acts["x"]
+    has_mem = "memory" in acts
+    positions = acts["positions"][0] if "positions" in acts else None
+
+    if has_mem:
+        def f(ws, xf, memf):
+            a = {"x": xf, "memory": memf}
+            if positions is not None:
+                a["positions"] = positions
+            return fwd(ws, a)
+        out, vjp = jax.vjp(f, ws, _flat(x), _flat(acts["memory"]))
+    else:
+        def f(ws, xf):
+            a = {"x": xf}
+            if positions is not None:
+                a["positions"] = positions
+            return fwd(ws, a)
+        out, vjp = jax.vjp(f, ws, _flat(x))
+    return out, vjp, has_mem
+
+
+def _dual_pullbacks(vjp, g_s, g_k, aux_dtype, has_mem):
+    """Stage 4a: one pullback per loss — P_s cotangent charges w_s (the aux
+    loss rides with it), P_k cotangent yields the activation grads G_k."""
+    one = jnp.ones((), aux_dtype)
+    zero = jnp.zeros((), aux_dtype)
+    if has_mem:
+        d_ws, _, _ = vjp((g_s, one))
+        _, g_x, g_mem = vjp((g_k, zero))
+    else:
+        d_ws, _ = vjp((g_s, one))
+        _, g_x = vjp((g_k, zero))
+        g_mem = None
+    return d_ws, g_x, g_mem
+
+
+def _client_pullback(model: SplitModel, wc, batch, acts, g_x, g_mem, has_mem):
+    """Stage 4b (eq. 9): each client backprops its own G_k through its half."""
+    g_x = g_x.reshape(acts["x"].shape)
+    if g_mem is not None:
+        g_mem = g_mem.reshape(acts["memory"].shape)
+
+    def one(w, b, gx_k, gmem_k):
+        def f(wk):
+            a = model.client_fwd(wk, b)
+            if has_mem:
+                return a["x"], a["memory"]
+            return a["x"]
+        _, cvjp = jax.vjp(f, w)
+        ct = (gx_k, gmem_k) if has_mem else gx_k
+        return cvjp(ct)[0]
+
+    if has_mem:
+        return jax.vmap(one)(wc, batch, g_x, g_mem)
+    return jax.vmap(lambda w, b, g: one(w, b, g, None))(wc, batch, g_x)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline: stages 1-4 -> raw gradients
+# ---------------------------------------------------------------------------
+
+
+def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
+                     backend: str = "logits",
+                     ce_chunk: Optional[int] = None,
+                     axes: Optional[MeshAxes] = None):
+    """Stages 1-4 of the SCALA local iteration for any loss backend.
+
+    params: {'client': stacked (C,...), 'server': ...}; batch leaves
+    (C, B_k, ...). Returns (grads, metrics) with grads mirroring params —
+    no parameter update applied. ``axes`` must be set iff
+    ``backend == "lace_dp"`` (the caller wraps this in ``shard_map``).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if (backend == "lace_dp") != (axes is not None):
+        raise ValueError("backend 'lace_dp' requires mesh axes (and only it)")
+    if backend != "logits" and model.server_trunk is None:
+        raise ValueError(f"backend {backend!r} needs model.server_trunk/"
+                         "head_weight (fused LACE path)")
+
+    N = model.num_classes
+    labels = batch["labels"]
+    weights = batch.get("weights")
+    C = labels.shape[0]
+
+    # --- stage 1: label statistics (clients upload Y_k with A_k) ---
+    p_k, p_s = _priors(labels, weights, N, scala, axes)
+
+    # --- stage 2: parallel client forward (client-parallel == vmap) ---
+    acts = jax.vmap(lambda w, b: model.client_fwd(w, b))(params["client"],
+                                                         batch)
+    x = acts["x"]                                   # (C, B_k, ..., d)
+
+    # --- stages 3-4: backend-specific dual losses over a shared vjp ---
+    if backend == "logits":
+        (logits, aux), vjp, has_mem = _server_vjp(model.server_fwd,
+                                                  params["server"], acts)
+        labels_f = _flat(labels)
+        weights_f = _flat(weights) if weights is not None else None
+
+        def server_loss(lg):
+            return losses.softmax_xent(
+                lg, labels_f, weights=weights_f,
+                prior=p_s if scala.adjust_server else None,
+                tau=scala.tau, label_smoothing=scala.label_smoothing,
+                prior_eps=scala.prior_eps)
+
+        loss_s, g_s = jax.value_and_grad(server_loss)(logits)
+
+        # per-client prior, broadcast over each client's token dims (eq. 15)
+        pk_tok = _prior_for_tokens(p_k, labels.shape)        # (C,1..,N)
+        pk_flat = _flat(jnp.broadcast_to(
+            pk_tok, labels.shape[:2] + (1,) * (labels.ndim - 2) + (N,)))
+
+        def client_loss(lg):
+            return losses.softmax_xent(
+                lg, labels_f, weights=weights_f,
+                prior=pk_flat if scala.adjust_client else None,
+                tau=scala.tau, label_smoothing=scala.label_smoothing,
+                prior_eps=scala.prior_eps)
+
+        loss_k, g_k = jax.value_and_grad(client_loss)(logits)
+
+        d_ws, g_x, g_mem = _dual_pullbacks(vjp, g_s, g_k, aux.dtype, has_mem)
+        metrics = {"loss_server": loss_s, "loss_client": loss_k, "aux": aux,
+                   "accuracy": losses.accuracy(logits, labels_f, weights_f)}
+    else:
+        from repro.kernels.lace.ops import (lace_loss, lace_loss_dp,
+                                            lace_nll_sum)
+
+        if ce_chunk is None:
+            ce_chunk = default_ce_chunk(N)
+        (feats, aux), vjp, has_mem = _server_vjp(model.server_trunk,
+                                                 params["server"], acts)
+        d = feats.shape[-1]
+        feats_g = feats.reshape(C, -1, d)           # (C, bk*s_out, d)
+        labels_g = labels.reshape(C, -1)
+        weights_g = None if weights is None else weights.reshape(C, -1)
+        w_head = model.head_weight(params["server"])
+
+        if backend == "lace":
+            lace = lace_loss_dp if model.dp_loss else lace_loss
+
+            # eq. (14): concatenated prior P_s for the server update
+            def loss_s_fn(fg, wh):
+                return lace(fg, wh, labels_g,
+                            p_s[None] if scala.adjust_server else None,
+                            None, weights_g, scala.tau, scala.prior_eps,
+                            ce_chunk)
+
+            loss_s, (gf_s, gW_s) = jax.value_and_grad(
+                loss_s_fn, argnums=(0, 1))(feats_g, w_head)
+
+            # eq. (15): per-client priors P_k for the gradients G_k
+            def loss_k_fn(fg):
+                return lace(fg, w_head, labels_g,
+                            p_k if scala.adjust_client else None,
+                            jnp.arange(C) if scala.adjust_client else None,
+                            weights_g, scala.tau, scala.prior_eps, ce_chunk)
+
+            loss_k, gf_k = jax.value_and_grad(loss_k_fn)(feats_g)
+        else:                                        # "lace_dp"
+            # differentiate LOCAL nll sums only (never through a psum: with
+            # vma checking off, the psum transpose would re-reduce an
+            # already-replicated cotangent and over-count by |axes|); the
+            # global normalization is applied to values/grads afterwards.
+            wsum_local = (jnp.sum(weights_g) if weights_g is not None
+                          else jnp.float32(labels_g.size))
+            w_global = jnp.maximum(jax.lax.psum(
+                jnp.asarray(wsum_local, jnp.float32), axes.all), 1e-8)
+
+            def nll_s_fn(fg, wh):
+                return lace_nll_sum(fg, wh, labels_g,
+                                    p_s[None] if scala.adjust_server else None,
+                                    None, weights_g, scala.tau,
+                                    scala.prior_eps, ce_chunk)
+
+            nll_s, (gf_s, gW_s) = jax.value_and_grad(
+                nll_s_fn, argnums=(0, 1))(feats_g, w_head)
+            loss_s = jax.lax.psum(nll_s, axes.all) / w_global
+            gf_s = gf_s / w_global
+            gW_s = gW_s / w_global
+
+            def nll_k_fn(fg):
+                return lace_nll_sum(fg, w_head, labels_g,
+                                    p_k if scala.adjust_client else None,
+                                    jnp.arange(C) if scala.adjust_client
+                                    else None, weights_g, scala.tau,
+                                    scala.prior_eps, ce_chunk)
+
+            nll_k, gf_k = jax.value_and_grad(nll_k_fn)(feats_g)
+            loss_k = jax.lax.psum(nll_k, axes.all) / w_global
+            gf_k = gf_k / w_global
+
+        gf_s_t = gf_s.reshape(feats.shape).astype(feats.dtype)
+        gf_k_t = gf_k.reshape(feats.shape).astype(feats.dtype)
+        d_ws, g_x, g_mem = _dual_pullbacks(vjp, gf_s_t, gf_k_t, aux.dtype,
+                                           has_mem)
+        d_ws = model.head_grad_merge(d_ws, gW_s)
+        metrics = {"loss_server": loss_s, "loss_client": loss_k, "aux": aux}
+
+    # --- stage 4 reductions (manual-SPMD only) ---
+    rdt = (jnp.dtype(scala.grad_reduce_dtype)
+           if axes is not None and scala.grad_reduce_dtype else None)
+    if axes is not None:
+        # the ONE server-grad reduction: every leaf is a local partial
+        # (the psum transpose passes the global cotangent through, so
+        # grads wrt replicated weights are per-shard contributions);
+        # optionally compressed to bf16 (halves the remaining wire traffic).
+        if rdt is not None:
+            d_ws = jax.tree.map(lambda g: g.astype(rdt), d_ws)
+        d_ws = jax.lax.psum(d_ws, axes.all)
+
+    d_wc = _client_pullback(model, params["client"], batch, acts, g_x, g_mem,
+                            has_mem)
+    if axes is not None and axes.inner:
+        # each client's batch is itself sharded over the inner axis
+        if rdt is not None:
+            d_wc = jax.tree.map(lambda g: g.astype(rdt), d_wc)
+        d_wc = jax.lax.psum(d_wc, axes.inner)
+    if axes is not None:
+        metrics["aux"] = jax.lax.pmean(metrics["aux"], axes.all)
+
+    return {"client": d_wc, "server": d_ws}, metrics
+
+
+# ---------------------------------------------------------------------------
+# stage 5: updates — plain-SGD compat and real optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd_apply(params, grads, lr):
+    """The paper's eq. (7)/(9) update, in param dtype (legacy-exact)."""
+    return jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
+                        params, grads)
+
+
+@dataclass(frozen=True)
+class TrainState:
+    """Engine state threaded through steps/rounds: params, per-half
+    optimizer state (client state vmapped so every leaf carries the
+    stacked (C, ...) axis), and the global step driving the lr schedule."""
+
+    params: Any
+    opt_state: Any
+    step: Any
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=("params", "opt_state", "step"), meta_fields=())
+
+
+def init_train_state(params, optimizer: optimizers.Optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state={"client": jax.vmap(optimizer.init)(params["client"]),
+                   "server": optimizer.init(params["server"])},
+        step=jnp.zeros((), jnp.int32))
+
+
+def _apply_updates(opt: optimizers.Optimizer, state: TrainState, grads,
+                   lr) -> TrainState:
+    new_s, st_s = opt.update(grads["server"], state.opt_state["server"],
+                             state.params["server"], lr)
+    new_c, st_c = jax.vmap(lambda g, s, p: opt.update(g, s, p, lr))(
+        grads["client"], state.opt_state["client"], state.params["client"])
+    return TrainState(params={"client": new_c, "server": new_s},
+                      opt_state={"client": st_c, "server": st_s},
+                      step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _dp_specs(mesh, axes: MeshAxes, tree):
+    """Client-half leaves are sharded over the client axes, server-half
+    (and scalars) replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    return {"client": jax.tree.map(lambda _: P(axes.client or None),
+                                   tree["client"]),
+            "server": jax.tree.map(lambda _: P(), tree["server"])}
+
+
+def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
+               backend: str = "logits", lr: Optional[float] = None,
+               ce_chunk: Optional[int] = None, mesh=None, batch_specs=None):
+    """One stateless SCALA local iteration with plain SGD (eqs. 7/9) —
+    the legacy-shaped entry point behind :mod:`repro.core.scala`.
+
+    Returns (new_params, metrics). For ``backend="lace_dp"`` pass the mesh
+    and a PartitionSpec pytree matching ``batch``; the whole step
+    (gradients + update) then runs inside one ``shard_map``.
+    """
+    lr = scala.lr if lr is None else lr
+
+    if backend == "lace_dp":
+        from jax.sharding import PartitionSpec as P
+
+        if mesh is None or batch_specs is None:
+            raise ValueError("backend 'lace_dp' needs mesh and batch_specs")
+        axes = mesh_axes(mesh)
+        p_specs = _dp_specs(mesh, axes, params)
+        m_specs = {"loss_server": P(), "loss_client": P(), "aux": P()}
+
+        def body(p, b):
+            grads, metrics = split_step_grads(model, p, b, scala,
+                                              backend="lace_dp",
+                                              ce_chunk=ce_chunk, axes=axes)
+            return sgd_apply(p, grads, lr), metrics
+
+        fn = compat.shard_map(body, mesh=mesh,
+                              in_specs=(p_specs, batch_specs),
+                              out_specs=(p_specs, m_specs), check_vma=False)
+        return fn(params, batch)
+
+    grads, metrics = split_step_grads(model, params, batch, scala,
+                                      backend=backend, ce_chunk=ce_chunk)
+    return sgd_apply(params, grads, lr), metrics
+
+
+def make_split_step(model: SplitModel, scala: ScalaConfig, *,
+                    backend: str = "lace",
+                    optimizer: Optional[optimizers.Optimizer] = None,
+                    schedule: Optional[Callable] = None,
+                    ce_chunk: Optional[int] = None,
+                    mesh=None, batch_specs=None):
+    """Build the stateful engine step: (TrainState, batch) ->
+    (TrainState, metrics), jit/scan-compatible.
+
+    ``optimizer`` defaults to plain SGD (the paper's eq. 7/9) and
+    ``schedule`` to a constant ``scala.lr``; any combination from
+    :mod:`repro.optim` works, with the lr driven by ``state.step`` (one
+    increment per local iteration).
+    """
+    opt = optimizer if optimizer is not None else optimizers.sgd()
+    sched = schedule if schedule is not None else schedules.constant(scala.lr)
+
+    if backend == "lace_dp":
+        from jax.sharding import PartitionSpec as P
+
+        if mesh is None or batch_specs is None:
+            raise ValueError("backend 'lace_dp' needs mesh and batch_specs")
+        axes = mesh_axes(mesh)
+
+        def step(state: TrainState, batch):
+            p_specs = _dp_specs(mesh, axes, state.params)
+            # vmapped client opt state carries the (C, ...) axis on every
+            # leaf, so it shards exactly like the client params
+            s_specs = TrainState(
+                params=p_specs,
+                opt_state=_dp_specs(mesh, axes, state.opt_state),
+                step=P())
+            m_specs = {"loss_server": P(), "loss_client": P(), "aux": P()}
+
+            def body(st, b):
+                grads, metrics = split_step_grads(
+                    model, st.params, b, scala, backend="lace_dp",
+                    ce_chunk=ce_chunk, axes=axes)
+                return _apply_updates(opt, st, grads, sched(st.step)), metrics
+
+            fn = compat.shard_map(body, mesh=mesh,
+                                  in_specs=(s_specs, batch_specs),
+                                  out_specs=(s_specs, m_specs),
+                                  check_vma=False)
+            return fn(state, batch)
+
+        return step
+
+    def step(state: TrainState, batch):
+        grads, metrics = split_step_grads(model, state.params, batch, scala,
+                                          backend=backend, ce_chunk=ce_chunk)
+        return _apply_updates(opt, state, grads, sched(state.step)), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# FL phase + the scan-compiled round
+# ---------------------------------------------------------------------------
+
+
+def scala_aggregate(params, data_sizes=None):
+    """FL phase (eq. 10): FedAvg the client halves, redistribute."""
+    return {"client": redistribute(params["client"], data_sizes),
+            "server": params["server"]}
+
+
+def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
+                      backend: str = "logits",
+                      optimizer: Optional[optimizers.Optimizer] = None,
+                      schedule: Optional[Callable] = None,
+                      ce_chunk: Optional[int] = None,
+                      aggregate: bool = True,
+                      unroll=1):
+    """Build the fused round program: T local iterations (``lax.scan``
+    over the engine step) + the FedAvg phase, all in one jittable fn.
+
+    Returns round_fn(state, round_batches, data_sizes=None) ->
+    (TrainState, last-step metrics); round_batches leaves (T, C, Bk, ...).
+    Optimizer state is carried across local iterations and (like the
+    server half) is NOT re-averaged by the FL phase — only the client
+    params are FedAvg'd/redistributed (eq. 10).
+
+    ``unroll`` is forwarded to ``lax.scan``. The default (1) keeps the
+    HLO small — right for the deep production archs. XLA:CPU executes
+    while-loop bodies with reduced parallelism, so for CPU-scale models
+    pass ``unroll=True`` (full unroll): still one dispatch per round,
+    no loop serialization (see benchmarks/round_loop.py).
+    """
+    step = make_split_step(model, scala, backend=backend, optimizer=optimizer,
+                           schedule=schedule, ce_chunk=ce_chunk)
+
+    def round_fn(state: TrainState, round_batches, data_sizes=None):
+        state, ms = jax.lax.scan(step, state, round_batches, unroll=unroll)
+        metrics = jax.tree.map(lambda a: a[-1], ms)
+        if aggregate:
+            state = dataclasses.replace(
+                state, params=scala_aggregate(state.params, data_sizes))
+        return state, metrics
+
+    return round_fn
+
+
+def scala_round_scan(model: SplitModel, state: TrainState, round_batches,
+                     scala: ScalaConfig, data_sizes=None, *,
+                     backend: str = "logits",
+                     optimizer: Optional[optimizers.Optimizer] = None,
+                     schedule: Optional[Callable] = None,
+                     ce_chunk: Optional[int] = None,
+                     unroll=1):
+    """One-shot convenience over :func:`make_round_runner`: T local
+    iterations + aggregation as a single scanned program. For a training
+    loop, build the runner once and jit it instead."""
+    runner = make_round_runner(model, scala, backend=backend,
+                               optimizer=optimizer, schedule=schedule,
+                               ce_chunk=ce_chunk, unroll=unroll)
+    return runner(state, round_batches, data_sizes)
+
+
+def split_ce(model: SplitModel, wc, ws, batch):
+    """Plain CE through the split — ONE client's forward into the server
+    half, no concatenation and no logit adjustment. The local objective
+    shared by the SFL baseline family (:mod:`repro.core.baselines`)."""
+    acts = model.client_fwd(wc, batch)
+    logits, aux = model.server_fwd(ws, acts)
+    return losses.softmax_xent(logits, batch["labels"]) + aux
+
+
+def init_scala_params(key, init_client, init_server, num_clients: int):
+    """Build the stacked-client SCALA param layout from per-half inits."""
+    kc, ks = jax.random.split(key)
+    return {"client": stack_client_params(init_client(kc), num_clients),
+            "server": init_server(ks)}

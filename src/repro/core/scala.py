@@ -1,179 +1,51 @@
-"""SCALA: the paper's algorithm (Alg. 2) as a composable JAX module.
+"""SCALA legacy API — a thin compatibility layer over the split-step
+engine (:mod:`repro.core.engine`).
 
-One *local iteration* (paper lines 9-20) is :func:`scala_local_step`:
+The three historical step variants are now *names for engine loss
+backends*; each wrapper below is a one-line delegation to
+:func:`repro.core.engine.local_step` with the paper's plain-SGD update:
 
-1. every participating client runs its client-side forward (vmapped over
-   the stacked client axis — client-parallel on the mesh),
-2. the server consumes the **concatenated** activations (eqs. 5-6; on the
-   mesh the concat is the client-sharded batch dimension itself),
-3. the server loss uses logits adjusted by the concatenated prior P_s
-   (eq. 14) and updates w_s (eq. 7),
-4. the gradients returned to client k come from a *second* pullback with
-   the client-local prior P_k (eqs. 15, 8),
-5. each client applies its chain-rule update (eq. 9).
+  ===========================  ==================  =======================
+  legacy entry point           engine backend      semantics
+  ===========================  ==================  =======================
+  scala_local_step             ``"logits"``        materialized logits
+  scala_local_step_fused       ``"lace"``          fused chunked head+CE
+  scala_local_step_fused_dp    ``"lace_dp"``       manual-SPMD shard_map
+  ===========================  ==================  =======================
 
-The FL phase (eq. 10) is :func:`scala_aggregate`. Both are pure functions
-of (params, batch) so they jit/pjit directly; the launcher supplies mesh
-shardings.
-
-Models plug in through :class:`SplitModel` — a pair of pure functions for
-the two halves. Adapters for the transformer stack and the paper's
-AlexNet live at the bottom.
+New code should use the engine directly: :func:`engine.make_split_step`
+for optimizer/schedule support and :func:`engine.scala_round_scan` /
+:func:`engine.make_round_runner` for the scan-compiled round (T local
+iterations + FedAvg in one XLA program). The model adapters
+(:func:`transformer_split_model`, :func:`alexnet_split_model`) and the
+param/aggregation helpers remain here and are re-exported unchanged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ScalaConfig
-from repro.core import losses
-from repro.core.label_stats import client_and_concat_priors
-from repro.core.split import fedavg, redistribute, stack_client_params
-
-
-@dataclass(frozen=True)
-class SplitModel:
-    """Functional adapter: the two halves of a split model.
-
-    client_fwd(wc, batch) -> acts dict with key 'x' (+ optional 'memory',
-    'positions'); server_fwd(ws, acts) -> (logits, aux_loss).
-
-    For the fused (LACE) production path, additionally:
-    server_trunk(ws, acts) -> (features, aux) — everything *except* the
-    classifier head — and head_weight(ws) -> (d, V) so the loss can fuse
-    head-matmul + adjusted CE without materializing logits.
-    """
-
-    client_fwd: Callable[[Any, Dict[str, Any]], Dict[str, Any]]
-    server_fwd: Callable[[Any, Dict[str, Any]], Any]
-    num_classes: int
-    server_trunk: Optional[Callable[[Any, Dict[str, Any]], Any]] = None
-    head_weight: Optional[Callable[[Any], Any]] = None
-    head_grad_merge: Optional[Callable[[Any, Any], Any]] = None
-    # replicated-head ("dp") profile: route the fused loss through the
-    # shard_map LACE so the head grad is psummed once (§Perf iteration 3)
-    dp_loss: bool = False
-
-
-def _prior_for_tokens(p, labels_shape):
-    """Broadcast a (..., N) prior against token labels (...,) -> (..., 1s, N)."""
-    extra = len(labels_shape) - (p.ndim - 1)
-    return p.reshape(p.shape[:-1] + (1,) * extra + (p.shape[-1],))
+from repro.core import engine
+from repro.core.engine import (  # noqa: F401  (compat re-exports)
+    SplitModel,
+    init_scala_params,
+    scala_aggregate,
+    scala_round_scan,
+)
 
 
 def scala_local_step(model: SplitModel, params, batch, scala: ScalaConfig,
                      *, lr: Optional[float] = None):
-    """One SCALA local iteration. params: {'client': stacked (C,...),
-    'server': ...}; batch leaves: (C, B_k, ...). Returns (params, metrics).
+    """One SCALA local iteration, materialized-logits backend.
+
+    params: {'client': stacked (C,...), 'server': ...}; batch leaves:
+    (C, B_k, ...). Returns (params, metrics).
     """
-    lr = scala.lr if lr is None else lr
-    N = model.num_classes
-    labels = batch["labels"]
-    weights = batch.get("weights")
-    C = labels.shape[0]
-
-    # --- label statistics (paper: clients upload Y_k with A_k) ---
-    p_k, p_s = client_and_concat_priors(labels, N, weights,
-                                        eps=scala.prior_eps)
-
-    # --- parallel client forward (client-parallel == vmap over C) ---
-    acts = jax.vmap(lambda w, b: model.client_fwd(w, b))(params["client"], batch)
-    x = acts["x"]                                   # (C, B_k, ..., d)
-    has_mem = "memory" in acts
-    flat = lambda a: a.reshape((-1,) + a.shape[2:])
-    labels_f = flat(labels)
-    weights_f = flat(weights) if weights is not None else None
-
-    positions = acts["positions"][0] if "positions" in acts else None
-
-    # --- server forward once; two pullbacks (eq. 14 for w_s, eq. 15 for G_k)
-    if has_mem:
-        def srv(ws, xf, memf):
-            a = {"x": xf, "memory": memf}
-            if positions is not None:
-                a["positions"] = positions
-            return model.server_fwd(ws, a)
-        (logits, aux), vjp = jax.vjp(srv, params["server"], flat(x),
-                                     flat(acts["memory"]))
-    else:
-        def srv(ws, xf):
-            a = {"x": xf}
-            if positions is not None:
-                a["positions"] = positions
-            return model.server_fwd(ws, a)
-        (logits, aux), vjp = jax.vjp(srv, params["server"], flat(x))
-
-    def server_loss(lg):
-        return losses.softmax_xent(
-            lg, labels_f, weights=weights_f,
-            prior=p_s if scala.adjust_server else None,
-            tau=scala.tau, label_smoothing=scala.label_smoothing,
-            prior_eps=scala.prior_eps)
-
-    loss_s, g_s = jax.value_and_grad(server_loss)(logits)
-
-    # per-client prior, broadcast over each client's token dims (eq. 15)
-    pk_tok = _prior_for_tokens(p_k, labels.shape)            # (C,1..,N)
-    pk_flat = flat(jnp.broadcast_to(
-        pk_tok, labels.shape[:2] + (1,) * (labels.ndim - 2) + (N,)))
-
-    def client_loss(lg):
-        return losses.softmax_xent(
-            lg, labels_f, weights=weights_f,
-            prior=pk_flat if scala.adjust_client else None,
-            tau=scala.tau, label_smoothing=scala.label_smoothing,
-            prior_eps=scala.prior_eps)
-
-    loss_k, g_k = jax.value_and_grad(client_loss)(logits)
-
-    one = jnp.ones((), aux.dtype)
-    zero = jnp.zeros((), aux.dtype)
-    if has_mem:
-        d_ws, _, _ = vjp((g_s, one))
-        _, g_x, g_mem = vjp((g_k, zero))
-    else:
-        d_ws, _ = vjp((g_s, one))
-        _, g_x = vjp((g_k, zero))
-        g_mem = None
-
-    # --- eq. (7): server SGD update every local iteration ---
-    new_server = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                              params["server"], d_ws)
-
-    # --- eq. (9): per-client backward + update ---
-    g_x = g_x.reshape(x.shape)
-    if g_mem is not None:
-        g_mem = g_mem.reshape(acts["memory"].shape)
-
-    def client_grad(wc, b, gx_k, gmem_k):
-        def f(w):
-            a = model.client_fwd(w, b)
-            if has_mem:
-                return a["x"], a["memory"]
-            return a["x"]
-        _, cvjp = jax.vjp(f, wc)
-        ct = (gx_k, gmem_k) if has_mem else gx_k
-        return cvjp(ct)[0]
-
-    if has_mem:
-        d_wc = jax.vmap(client_grad)(params["client"], batch, g_x, g_mem)
-    else:
-        d_wc = jax.vmap(lambda w, b, g: client_grad(w, b, g, None))(
-            params["client"], batch, g_x)
-
-    new_client = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                              params["client"], d_wc)
-
-    metrics = {
-        "loss_server": loss_s,
-        "loss_client": loss_k,
-        "aux": aux,
-        "accuracy": losses.accuracy(logits, labels_f, weights_f),
-    }
-    return {"client": new_client, "server": new_server}, metrics
+    return engine.local_step(model, params, batch, scala, backend="logits",
+                             lr=lr)
 
 
 def scala_local_step_fused(model: SplitModel, params, batch,
@@ -186,117 +58,8 @@ def scala_local_step_fused(model: SplitModel, params, batch,
     (:mod:`repro.kernels.lace`), so full-vocab logits are never
     materialized — required for the 262k-vocab archs at 1M tokens/step.
     """
-    from repro.kernels.lace.ops import lace_loss, lace_loss_dp
-
-    if model.dp_loss:
-        lace = lace_loss_dp
-    else:
-        lace = lace_loss
-    lr = scala.lr if lr is None else lr
-    N = model.num_classes
-    if ce_chunk is None:
-        # larger chunks -> fewer head-grad all-reduce trips in the chunked
-        # CE loop (the gW partial is re-reduced every trip); cap the global
-        # chunk so logits stay ~2^32 elements (§Perf iteration 3)
-        ce_chunk = max(4096, (1 << 32) // max(1, N))
-    labels = batch["labels"]
-    weights = batch.get("weights")
-    C = labels.shape[0]
-
-    p_k, p_s = client_and_concat_priors(labels, N, weights,
-                                        eps=scala.prior_eps)
-
-    acts = jax.vmap(lambda w, b: model.client_fwd(w, b))(params["client"], batch)
-    x = acts["x"]                                    # (C, Bk, S, d)
-    has_mem = "memory" in acts
-    flat = lambda a: a.reshape((-1,) + a.shape[2:])
-    positions = acts["positions"][0] if "positions" in acts else None
-
-    # --- server trunk once, vjp shared by both losses ---
-    if has_mem:
-        def trunk(ws, xf, memf):
-            a = {"x": xf, "memory": memf}
-            if positions is not None:
-                a["positions"] = positions
-            return model.server_trunk(ws, a)
-        (feats, aux), vjp = jax.vjp(trunk, params["server"], flat(x),
-                                    flat(acts["memory"]))
-    else:
-        def trunk(ws, xf):
-            a = {"x": xf}
-            if positions is not None:
-                a["positions"] = positions
-            return model.server_trunk(ws, a)
-        (feats, aux), vjp = jax.vjp(trunk, params["server"], flat(x))
-
-    d = feats.shape[-1]
-    bk, s_out = x.shape[1], feats.shape[1]
-    feats_g = feats.reshape(C, bk * s_out, d)
-    labels_g = labels.reshape(C, -1)
-    weights_g = None if weights is None else weights.reshape(C, -1)
-    w_head = model.head_weight(params["server"])
-
-    # eq. (14): concatenated prior P_s for the server update
-    def loss_s_fn(fg, wh):
-        return lace(fg, wh, labels_g,
-                         p_s[None] if scala.adjust_server else None,
-                         None, weights_g, scala.tau, scala.prior_eps,
-                         ce_chunk)
-
-    loss_s, (gf_s, gW_s) = jax.value_and_grad(loss_s_fn, argnums=(0, 1))(
-        feats_g, w_head)
-
-    # eq. (15): per-client priors P_k for the gradients G_k sent back
-    def loss_k_fn(fg):
-        return lace(fg, w_head, labels_g,
-                         p_k if scala.adjust_client else None,
-                         jnp.arange(C) if scala.adjust_client else None,
-                         weights_g, scala.tau, scala.prior_eps, ce_chunk)
-
-    loss_k, gf_k = jax.value_and_grad(loss_k_fn)(feats_g)
-
-    one = jnp.ones((), aux.dtype)
-    zero = jnp.zeros((), aux.dtype)
-    gf_s_t = gf_s.reshape(feats.shape)
-    gf_k_t = gf_k.reshape(feats.shape)
-    if has_mem:
-        d_ws, _, _ = vjp((gf_s_t, one))
-        _, g_x, g_mem = vjp((gf_k_t, zero))
-    else:
-        d_ws, _ = vjp((gf_s_t, one))
-        _, g_x = vjp((gf_k_t, zero))
-        g_mem = None
-
-    d_ws = model.head_grad_merge(d_ws, gW_s)
-
-    new_server = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                              params["server"], d_ws)
-
-    g_x = g_x.reshape(x.shape)
-    if g_mem is not None:
-        g_mem = g_mem.reshape(acts["memory"].shape)
-
-    def client_grad(wc, b, gx_k, gmem_k):
-        def f(w):
-            a = model.client_fwd(w, b)
-            if has_mem:
-                return a["x"], a["memory"]
-            return a["x"]
-        _, cvjp = jax.vjp(f, wc)
-        ct = (gx_k, gmem_k) if has_mem else gx_k
-        return cvjp(ct)[0]
-
-    if has_mem:
-        d_wc = jax.vmap(client_grad)(params["client"], batch, g_x, g_mem)
-    else:
-        d_wc = jax.vmap(lambda w, b, g: client_grad(w, b, g, None))(
-            params["client"], batch, g_x)
-
-    new_client = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                              params["client"], d_wc)
-
-    metrics = {"loss_server": loss_s, "loss_client": loss_k, "aux": aux}
-    return {"client": new_client, "server": new_server}, metrics
+    return engine.local_step(model, params, batch, scala, backend="lace",
+                             lr=lr, ce_chunk=ce_chunk)
 
 
 def scala_local_step_fused_dp(model: SplitModel, params, batch,
@@ -304,202 +67,16 @@ def scala_local_step_fused_dp(model: SplitModel, params, batch,
                               *, lr: Optional[float] = None,
                               ce_chunk: Optional[int] = None):
     """Manual-SPMD SCALA local iteration for the replicated-weight ("dp")
-    profile — the whole step runs inside one ``shard_map``.
-
-    Layout: client axis over ``("pod","data")``, per-client batch over
-    ``("model",)``, every weight replicated. Inside the shard: all model
-    math is local; the only collectives are (a) label-histogram psums for
-    P_k (over "model") and P_s (over all axes), (b) two scalar loss
-    psums, (c) ONE psum of the server-side gradient tree, (d) a psum over
-    "model" of each client's own gradient. Under GSPMD the same step
-    re-all-reduces weight-gradient partials on every chunk of every
-    internal scan (mLSTM chunkwise, CE chunking) — this variant makes the
-    per-step wire cost exactly 2x|w_s| + 2x|w_c|, the DDP lower bound
+    profile — the whole step runs inside one ``shard_map`` and the
+    per-step wire cost is exactly 2x|w_s| + 2x|w_c|, the DDP lower bound
     (EXPERIMENTS.md §Perf).
 
     batch_specs: PartitionSpec pytree matching ``batch`` (the same
     logical->mesh resolution the launcher uses for in_shardings).
     """
-    from jax.sharding import PartitionSpec as P
-
-    lr = scala.lr if lr is None else lr
-    N = model.num_classes
-    if ce_chunk is None:
-        ce_chunk = max(4096, (1 << 32) // max(1, N))
-
-    names = set(mesh.axis_names)
-    client_axes = tuple(a for a in ("pod", "data") if a in names)
-    inner_axes = tuple(a for a in ("model",) if a in names)
-    all_axes = client_axes + inner_axes
-
-    # params: client leaves carry a leading stacked-client dim; server
-    # leaves replicated.
-    p_specs = {
-        "client": jax.tree.map(lambda _: P(client_axes or None),
-                               params["client"]),
-        "server": jax.tree.map(lambda _: P(), params["server"]),
-    }
-    b_specs = batch_specs
-
-    def local_step(p, b):
-        labels = b["labels"]                      # (C_l, Bk_l, S)
-        weights = b.get("weights")
-        C_l = labels.shape[0]
-
-        # --- label stats: local histogram -> psums (paper eq. 14/15) ---
-        from repro.core.label_stats import histogram
-        hist_k = jax.vmap(
-            lambda l, w: histogram(l, N, w))(
-            labels.reshape(C_l, -1),
-            (jnp.ones((C_l, labels[0].size), jnp.float32) if weights is None
-             else weights.reshape(C_l, -1)))               # (C_l, N)
-        if inner_axes:
-            hist_k = jax.lax.psum(hist_k, inner_axes)      # full client hist
-        hist_s = jax.lax.psum(hist_k.sum(0), client_axes) \
-            if client_axes else hist_k.sum(0)
-        p_k = hist_k / jnp.maximum(hist_k.sum(-1, keepdims=True), 1e-8)
-        p_s = hist_s / jnp.maximum(hist_s.sum(), 1e-8)
-
-        # --- client forward (local client shard) ---
-        acts = jax.vmap(lambda w, bb: model.client_fwd(w, bb))(
-            p["client"], b)
-        x = acts["x"]
-        has_mem = "memory" in acts
-        flat = lambda a: a.reshape((-1,) + a.shape[2:])
-        positions = acts["positions"][0] if "positions" in acts else None
-
-        if has_mem:
-            def trunk(ws, xf, memf):
-                a = {"x": xf, "memory": memf}
-                if positions is not None:
-                    a["positions"] = positions
-                return model.server_trunk(ws, a)
-            (feats, aux), vjp = jax.vjp(trunk, p["server"], flat(x),
-                                        flat(acts["memory"]))
-        else:
-            def trunk(ws, xf):
-                a = {"x": xf}
-                if positions is not None:
-                    a["positions"] = positions
-                return model.server_trunk(ws, a)
-            (feats, aux), vjp = jax.vjp(trunk, p["server"], flat(x))
-
-        d = feats.shape[-1]
-        bk, s_out = x.shape[1], feats.shape[1]
-        feats_g = feats.reshape(C_l, bk * s_out, d)
-        labels_g = labels.reshape(C_l, -1)
-        weights_g = None if weights is None else weights.reshape(C_l, -1)
-        w_head = model.head_weight(p["server"])
-
-        from repro.kernels.lace.ops import lace_nll_sum
-
-        # differentiate LOCAL nll sums only (never through a psum: with
-        # vma checking off, the psum transpose would re-reduce an
-        # already-replicated cotangent and over-count by |axes|); the
-        # global normalization is applied to values/grads afterwards.
-        wsum_local = (jnp.sum(weights_g) if weights_g is not None
-                      else jnp.float32(labels_g.size))
-        w_global = jnp.maximum(jax.lax.psum(
-            jnp.asarray(wsum_local, jnp.float32), all_axes), 1e-8)
-
-        # eq. (14): concatenated prior P_s
-        def nll_s_fn(fg, wh):
-            return lace_nll_sum(fg, wh, labels_g,
-                                p_s[None] if scala.adjust_server else None,
-                                None, weights_g, scala.tau,
-                                scala.prior_eps, ce_chunk)
-
-        nll_s, (gf_s, gW_s) = jax.value_and_grad(
-            nll_s_fn, argnums=(0, 1))(feats_g, w_head)
-        loss_s = jax.lax.psum(nll_s, all_axes) / w_global
-        gf_s = gf_s / w_global
-        gW_s = gW_s / w_global
-
-        # eq. (15): per-client priors P_k
-        def nll_k_fn(fg):
-            return lace_nll_sum(fg, w_head, labels_g,
-                                p_k if scala.adjust_client else None,
-                                jnp.arange(C_l) if scala.adjust_client
-                                else None, weights_g, scala.tau,
-                                scala.prior_eps, ce_chunk)
-
-        nll_k, gf_k = jax.value_and_grad(nll_k_fn)(feats_g)
-        loss_k = jax.lax.psum(nll_k, all_axes) / w_global
-        gf_k = gf_k / w_global
-
-        one = jnp.ones((), aux.dtype)
-        zero = jnp.zeros((), aux.dtype)
-        gf_s_t = gf_s.reshape(feats.shape).astype(feats.dtype)
-        gf_k_t = gf_k.reshape(feats.shape).astype(feats.dtype)
-        if has_mem:
-            d_ws, _, _ = vjp((gf_s_t, one))
-            _, g_x, g_mem = vjp((gf_k_t, zero))
-        else:
-            d_ws, _ = vjp((gf_s_t, one))
-            _, g_x = vjp((gf_k_t, zero))
-            g_mem = None
-
-        d_ws = model.head_grad_merge(d_ws, gW_s)
-        # the ONE server-grad reduction: every leaf is a local partial
-        # (the psum transpose passes the global cotangent through, so
-        # grads wrt replicated weights are per-shard contributions).
-        # optionally compress the reduction to bf16 (halves the only
-        # remaining wire traffic and its buffers).
-        rdt = (jnp.dtype(scala.grad_reduce_dtype)
-               if scala.grad_reduce_dtype else None)
-        if rdt is not None:
-            d_ws = jax.tree.map(lambda g: g.astype(rdt), d_ws)
-        d_ws = jax.lax.psum(d_ws, all_axes)
-
-        new_server = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                                  p["server"], d_ws)
-
-        g_x = g_x.reshape(x.shape)
-        if g_mem is not None:
-            g_mem = g_mem.reshape(acts["memory"].shape)
-
-        def client_grad(wc, bb, gx_k, gmem_k):
-            def f(w):
-                a = model.client_fwd(w, bb)
-                if has_mem:
-                    return a["x"], a["memory"]
-                return a["x"]
-            _, cvjp = jax.vjp(f, wc)
-            ct = (gx_k, gmem_k) if has_mem else gx_k
-            return cvjp(ct)[0]
-
-        if has_mem:
-            d_wc = jax.vmap(client_grad)(p["client"], b, g_x, g_mem)
-        else:
-            d_wc = jax.vmap(lambda w, bb, g: client_grad(w, bb, g, None))(
-                p["client"], b, g_x)
-        if inner_axes:
-            # each client's batch is itself sharded over `model`
-            if rdt is not None:
-                d_wc = jax.tree.map(lambda g: g.astype(rdt), d_wc)
-            d_wc = jax.lax.psum(d_wc, inner_axes)
-
-        new_client = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
-                                  p["client"], d_wc)
-
-        metrics = {"loss_server": loss_s, "loss_client": loss_k,
-                   "aux": jax.lax.pmean(aux, all_axes)}
-        return {"client": new_client, "server": new_server}, metrics
-
-    fn = jax.shard_map(
-        local_step, mesh=mesh,
-        in_specs=(p_specs, b_specs),
-        out_specs=(p_specs, jax.tree.map(lambda _: P(), {"loss_server": 0,
-                                                         "loss_client": 0,
-                                                         "aux": 0})),
-        check_vma=False)
-    return fn(params, batch)
-
-
-def scala_aggregate(params, data_sizes=None):
-    """FL phase (eq. 10): FedAvg the client halves, redistribute."""
-    return {"client": redistribute(params["client"], data_sizes),
-            "server": params["server"]}
+    return engine.local_step(model, params, batch, scala, backend="lace_dp",
+                             lr=lr, ce_chunk=ce_chunk, mesh=mesh,
+                             batch_specs=batch_specs)
 
 
 def scala_round(model: SplitModel, params, round_batches, scala: ScalaConfig,
@@ -507,7 +84,8 @@ def scala_round(model: SplitModel, params, round_batches, scala: ScalaConfig,
     """T local iterations + aggregation. round_batches: leaves (T, C, Bk, ...).
 
     Python loop (each step separately jitted by the caller via
-    ``local_step``); used by the CPU-scale examples/benchmarks.
+    ``local_step``). Prefer :func:`engine.scala_round_scan`, which fuses
+    the T iterations + FedAvg into one compiled program.
     """
     step = local_step or (lambda p, b: scala_local_step(model, p, b, scala))
     T = jax.tree.leaves(round_batches)[0].shape[0]
@@ -516,13 +94,6 @@ def scala_round(model: SplitModel, params, round_batches, scala: ScalaConfig,
         batch_t = jax.tree.map(lambda a: a[t], round_batches)
         params, metrics = step(params, batch_t)
     return scala_aggregate(params, data_sizes), metrics
-
-
-def init_scala_params(key, init_client, init_server, num_clients: int):
-    """Build the stacked-client SCALA param layout from per-half inits."""
-    kc, ks = jax.random.split(key)
-    return {"client": stack_client_params(init_client(kc), num_clients),
-            "server": init_server(ks)}
 
 
 # ---------------------------------------------------------------------------

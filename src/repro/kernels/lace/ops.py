@@ -186,11 +186,13 @@ def lace_loss_dp(feats, w_head, labels, prior_rows, prior_ids, weights,
     ``token_axes``; w_head replicated. Falls back to ``lace_loss`` when
     there is no ambient mesh (CPU tests / host training).
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    present = lambda axes: tuple(a for a in axes if a in mesh.axis_names)
-    if mesh is None or not mesh.axis_names:
+    from repro import compat
+
+    mesh = compat.ambient_mesh()
+    if mesh is None or not mesh.axis_names or compat.in_shard_map():
         return lace_loss(feats, w_head, labels, prior_rows, prior_ids,
                          weights, tau, eps, chunk)
+    present = lambda axes: tuple(a for a in axes if a in mesh.axis_names)
     grp = present(group_axes)
     tok = present(token_axes)
     red = grp + tok
@@ -217,7 +219,7 @@ def lace_loss_dp(feats, w_head, labels, prior_rows, prior_ids, weights,
     in_specs = (gtd, P(None, None), gt,
                 pr_spec if prior_rows is not None else P(),
                 gt if weights is not None else P())
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda f, w, l, pr, wt: local(
             f, w, l, pr if prior_rows is not None else None,
             wt if weights is not None else None),

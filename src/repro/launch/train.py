@@ -5,12 +5,21 @@ participation, eq. (3) batch sizing, T local iterations with concatenated
 activations + dual logit-adjusted losses, FedAvg every round — on
 synthetic domain-skewed token data.
 
+Built on the split-step engine (:mod:`repro.core.engine`): the fused-LACE
+loss backend, a real optimizer from :mod:`repro.optim` (SGD default, the
+paper's setting), an lr schedule driven by the global step counter, and
+the whole round (T local iterations + FedAvg) compiled into ONE XLA
+program via ``scala_round_scan`` — one dispatch per round instead of T+1
+(``--no-scan`` falls back to the per-step Python loop for A/B timing).
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
-      --rounds 20 --clients 16 --participation 0.25 --seq 128
+      --rounds 20 --clients 16 --participation 0.25 --seq 128 \
+      --optimizer momentum --schedule cosine --warmup 10
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,11 +28,12 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.configs import ScalaConfig, get_config
-from repro.core.scala import (init_scala_params, scala_aggregate,
-                              scala_local_step_fused, transformer_split_model)
+from repro.core import engine
+from repro.core.scala import transformer_split_model
 from repro.data.loader import lm_round_batches, sample_clients
 from repro.data.synthetic import token_stream
 from repro.models import transformer as T
+from repro.optim import make_optimizer, schedules
 
 
 def build_data(cfg, num_clients: int, docs_per_client: int, seq: int,
@@ -44,6 +54,13 @@ def build_data(cfg, num_clients: int, docs_per_client: int, seq: int,
     return by_client
 
 
+def build_schedule(args, total_steps: int):
+    if args.schedule == "cosine":
+        return schedules.linear_warmup_cosine(args.lr, args.warmup,
+                                              total_steps)
+    return schedules.constant(args.lr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -56,9 +73,25 @@ def main():
     ap.add_argument("--server-batch", type=int, default=16)
     ap.add_argument("--docs-per-client", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=("sgd", "momentum", "adamw"))
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--schedule", default="constant",
+                    choices=("constant", "cosine"))
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="warmup steps (local iterations) for --schedule cosine")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-adjust", action="store_true",
                     help="ablation: plain SFL (no logit adjustments)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="per-step Python round loop instead of the fused "
+                         "scan program (A/B baseline)")
+    ap.add_argument("--unroll", type=int, default=-1,
+                    help="scan unroll factor: -1 = auto (full unroll on "
+                         "CPU, where XLA runs while-loop bodies with "
+                         "reduced parallelism; rolled elsewhere to keep "
+                         "the HLO small), 0 = full unroll, N = factor")
     ap.add_argument("--checkpoint-dir", default="")
     args = ap.parse_args()
 
@@ -80,15 +113,31 @@ def main():
     model = transformer_split_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     C = sc.clients_per_round
-    params = init_scala_params(
+    params = engine.init_scala_params(
         key,
         lambda k: T.init_params(k, cfg)["client"],
         lambda k: T.init_params(k, cfg)["server"],
         C)
     n_params = sum(x.size for x in jax.tree.leaves(params["server"]))
-    print(f"server params: {n_params/1e6:.1f}M, clients/round: {C}")
+    print(f"server params: {n_params/1e6:.1f}M, clients/round: {C}, "
+          f"optimizer: {args.optimizer}, schedule: {args.schedule}")
 
-    step = jax.jit(lambda p, b: scala_local_step_fused(model, p, b, sc))
+    opt = make_optimizer(args.optimizer, momentum=args.momentum,
+                         weight_decay=args.weight_decay)
+    sched = build_schedule(args, args.rounds * sc.local_iters)
+    state = engine.init_train_state(params, opt)
+
+    if args.no_scan:
+        step = jax.jit(engine.make_split_step(model, sc, backend="lace",
+                                              optimizer=opt, schedule=sched))
+    else:
+        if args.unroll == -1:
+            unroll = True if jax.default_backend() == "cpu" else 1
+        else:
+            unroll = True if args.unroll == 0 else args.unroll
+        round_fn = jax.jit(engine.make_round_runner(
+            model, sc, backend="lace", optimizer=opt, schedule=sched,
+            unroll=unroll))
     rng = np.random.default_rng(args.seed)
 
     for rnd in range(args.rounds):
@@ -97,20 +146,25 @@ def main():
         batches = lm_round_batches(data, selected, sc.server_batch,
                                    sc.local_iters, rng)
         sizes = jnp.asarray(batches.pop("sizes"))
-        metrics = None
-        for t in range(sc.local_iters):
-            batch_t = {k: jnp.asarray(v[t]) for k, v in batches.items()}
-            params, metrics = step(params, batch_t)
-        params = scala_aggregate(params, sizes)
+        if args.no_scan:
+            metrics = None
+            for t in range(sc.local_iters):
+                batch_t = {k: jnp.asarray(v[t]) for k, v in batches.items()}
+                state, metrics = step(state, batch_t)
+            state = dataclasses.replace(
+                state, params=engine.scala_aggregate(state.params, sizes))
+        else:
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            state, metrics = round_fn(state, batches, sizes)
         dt = time.time() - t0
         print(f"round {rnd:3d} loss_s={float(metrics['loss_server']):.4f} "
               f"loss_c={float(metrics['loss_client']):.4f} ({dt:.1f}s)",
               flush=True)
         if args.checkpoint_dir:
-            save(args.checkpoint_dir, rnd, params)
+            save(args.checkpoint_dir, rnd, state.params)
 
     print("done")
-    return params
+    return state.params
 
 
 if __name__ == "__main__":

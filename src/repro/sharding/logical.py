@@ -170,11 +170,12 @@ def constrain(x, *axes):
     """
     if not CONSTRAIN:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return x
-    manual = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-              if str(t) == "Manual"}   # inside shard_map: already local
+    manual = compat.manual_axis_names(mesh)  # inside shard_map: already local
     sizes = {k: v for k, v in dict(mesh.shape).items() if k not in manual}
     spec = []
     for a, dim in zip(axes, x.shape):

@@ -1,0 +1,348 @@
+"""Equivalence + behavior tests for the unified split-step engine.
+
+Every legacy step variant must be reproduced by the corresponding engine
+backend (the legacy entry points are now thin wrappers, so these tests
+pin the *stateful* optimizer path against the stateless plain-SGD path),
+and the scan-compiled round must match the Python-loop round.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import rand_batch, tiny_cfg
+from repro import optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.core.scala import (alexnet_split_model, scala_local_step,
+                              scala_local_step_fused, scala_round,
+                              transformer_split_model)
+from repro.models import alexnet as A
+from repro.models import transformer as T
+
+
+def _tree_allclose(a, b, atol=2e-5, rtol=1e-4):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(x, y, atol=atol, rtol=rtol)
+
+
+def _setup_transformer(key, cfg, C=3, Bk=2, S=8):
+    model = transformer_split_model(cfg)
+    params = engine.init_scala_params(
+        key, lambda k: T.init_params(k, cfg)["client"],
+        lambda k: T.init_params(k, cfg)["server"], C)
+    b = rand_batch(key, cfg, Bk, S)
+    batch = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), b)
+    batch = dict(batch)
+    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 9),
+                                         (C, Bk, S), 0, cfg.vocab_size)
+    return model, params, batch
+
+
+def _setup_alexnet(key, C=3, Bk=4, num_classes=10):
+    model = alexnet_split_model("s2", num_classes=num_classes)
+    full = A.init_params(key, num_classes=num_classes, width=0.125)
+    wc, ws = A.split_params(full, "s2")
+    params = {"client": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+        "server": ws}
+    kx, ky = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"x": jax.random.normal(kx, (C, Bk, 32, 32, 3)),
+             "labels": jax.random.randint(ky, (C, Bk), 0, num_classes),
+             "weights": jnp.ones((C, Bk), jnp.float32)}
+    return model, params, batch
+
+
+# --------------------------------------------------------------------------
+# per-backend equivalence: stateful engine step == legacy plain-SGD step
+# --------------------------------------------------------------------------
+
+
+def test_engine_logits_backend_matches_legacy_transformer():
+    cfg = tiny_cfg()
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(0), cfg)
+    sc = ScalaConfig(lr=0.05)
+    p_legacy, m_legacy = scala_local_step(model, params, batch, sc)
+
+    step = engine.make_split_step(model, sc, backend="logits")
+    state, m = step(engine.init_train_state(params, optim.sgd()), batch)
+    assert int(state.step) == 1
+    np.testing.assert_allclose(m["loss_server"], m_legacy["loss_server"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(m["loss_client"], m_legacy["loss_client"],
+                               rtol=1e-6)
+    _tree_allclose(state.params, p_legacy)
+
+
+def test_engine_lace_backend_matches_legacy_fused():
+    cfg = tiny_cfg()
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(1), cfg)
+    sc = ScalaConfig(lr=0.05)
+    p_legacy, m_legacy = scala_local_step_fused(model, params, batch, sc,
+                                                ce_chunk=8)
+    step = engine.make_split_step(model, sc, backend="lace", ce_chunk=8)
+    state, m = step(engine.init_train_state(params, optim.sgd()), batch)
+    np.testing.assert_allclose(m["loss_server"], m_legacy["loss_server"],
+                               rtol=1e-6)
+    _tree_allclose(state.params, p_legacy)
+
+
+def test_engine_logits_backend_matches_legacy_alexnet():
+    model, params, batch = _setup_alexnet(jax.random.PRNGKey(2))
+    sc = ScalaConfig(lr=0.05)
+    p_legacy, m_legacy = scala_local_step(model, params, batch, sc)
+    step = jax.jit(engine.make_split_step(model, sc, backend="logits"))
+    state, m = step(engine.init_train_state(params, optim.sgd()), batch)
+    np.testing.assert_allclose(m["loss_server"], m_legacy["loss_server"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(m["accuracy"], m_legacy["accuracy"],
+                               rtol=1e-6)
+    _tree_allclose(state.params, p_legacy)
+
+
+def test_lace_backend_requires_trunk():
+    model, params, batch = _setup_alexnet(jax.random.PRNGKey(3))
+    sc = ScalaConfig()
+    with pytest.raises(ValueError, match="server_trunk"):
+        engine.split_step_grads(model, params, batch, sc, backend="lace")
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.split_step_grads(model, params, batch, sc, backend="nope")
+
+
+# --------------------------------------------------------------------------
+# scan-compiled round == Python-loop round
+# --------------------------------------------------------------------------
+
+
+def _round_batches(key, cfg, T_steps, C, Bk, S):
+    ks = jax.random.split(key, 3)
+    return {
+        "tokens": jax.random.randint(ks[0], (T_steps, C, Bk, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (T_steps, C, Bk, S), 0,
+                                     cfg.vocab_size),
+        "weights": jnp.ones((T_steps, C, Bk, S), jnp.float32),
+    }
+
+
+def test_round_scan_matches_python_round():
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(4)
+    model, params, _ = _setup_transformer(key, cfg)
+    sc = ScalaConfig(lr=0.05)
+    rb = _round_batches(jax.random.fold_in(key, 5), cfg, 3, 3, 2, 8)
+    sizes = jnp.array([3.0, 1.0, 2.0])
+
+    p_ref, m_ref = scala_round(model, params, rb, sc, sizes)
+
+    state0 = engine.init_train_state(params, optim.sgd())
+    state, m = jax.jit(
+        engine.make_round_runner(model, sc, backend="logits"))(
+        state0, rb, sizes)
+    assert int(state.step) == 3
+    np.testing.assert_allclose(m["loss_server"], m_ref["loss_server"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(m["loss_client"], m_ref["loss_client"],
+                               rtol=1e-5)
+    _tree_allclose(state.params, p_ref)
+    # FL phase applied: all client slots re-unified
+    emb = state.params["client"]["embed"]["tok"]
+    np.testing.assert_allclose(emb[0], emb[1])
+
+
+def test_round_scan_convenience_wrapper():
+    cfg = tiny_cfg()
+    model, params, _ = _setup_transformer(jax.random.PRNGKey(6), cfg)
+    sc = ScalaConfig(lr=0.05)
+    rb = _round_batches(jax.random.PRNGKey(7), cfg, 2, 3, 2, 8)
+    state0 = engine.init_train_state(params, optim.sgd())
+    state, m = engine.scala_round_scan(model, state0, rb, sc,
+                                       backend="lace", ce_chunk=8)
+    assert int(state.step) == 2
+    assert np.isfinite(float(m["loss_server"]))
+
+
+# --------------------------------------------------------------------------
+# real optimizers + schedules through the engine
+# --------------------------------------------------------------------------
+
+
+def test_momentum_state_is_threaded_and_stacked_per_client():
+    cfg = tiny_cfg()
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(8), cfg)
+    sc = ScalaConfig(lr=0.05)
+    opt = optim.momentum(beta=0.9)
+    step = engine.make_split_step(model, sc, backend="logits", optimizer=opt)
+    state = engine.init_train_state(params, opt)
+    C = jax.tree.leaves(params["client"])[0].shape[0]
+    # every client opt-state leaf carries the stacked (C, ...) axis
+    for m_leaf, p_leaf in zip(jax.tree.leaves(state.opt_state["client"]),
+                              jax.tree.leaves(params["client"])):
+        assert m_leaf.shape == p_leaf.shape and m_leaf.shape[0] == C
+
+    state, _ = step(state, batch)
+    state, _ = step(state, batch)
+    assert int(state.step) == 2
+    moved = [float(jnp.abs(l).max()) > 0
+             for l in jax.tree.leaves(state.opt_state["server"])]
+    assert any(moved)
+
+    # momentum must differ from plain SGD after two steps
+    sgd_step = engine.make_split_step(model, sc, backend="logits")
+    s2 = engine.init_train_state(params, optim.sgd())
+    s2, _ = sgd_step(s2, batch)
+    s2, _ = sgd_step(s2, batch)
+    d = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(state.params), jax.tree.leaves(s2.params)))
+    assert d > 1e-6
+
+
+def test_adamw_count_advances_inside_scan():
+    cfg = tiny_cfg()
+    model, params, _ = _setup_transformer(jax.random.PRNGKey(9), cfg)
+    sc = ScalaConfig(lr=1e-3)
+    rb = _round_batches(jax.random.PRNGKey(10), cfg, 3, 3, 2, 8)
+    opt = optim.adamw()
+    runner = engine.make_round_runner(model, sc, backend="logits",
+                                      optimizer=opt)
+    state, _ = jax.jit(runner)(engine.init_train_state(params, opt), rb)
+    assert int(state.opt_state["server"]["count"]) == 3
+    np.testing.assert_array_equal(
+        np.asarray(state.opt_state["client"]["count"]), 3)
+
+
+def test_schedule_drives_lr_from_step_counter():
+    cfg = tiny_cfg()
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(11), cfg)
+    sc = ScalaConfig(lr=0.05)
+    # lr is 0.05 on step 0 and 0 afterwards: steps 2-3 must be no-ops
+    sched = lambda step: jnp.where(step < 1, 0.05, 0.0)
+    step = engine.make_split_step(model, sc, backend="logits",
+                                  schedule=sched)
+    s1, _ = step(engine.init_train_state(params, optim.sgd()), batch)
+    s2, _ = step(s1, batch)
+    _tree_allclose(s2.params, s1.params, atol=0, rtol=0)
+    assert int(s2.step) == 2
+
+    # constant-schedule default == legacy lr semantics
+    ref, _ = scala_local_step(model, params, batch, sc)
+    _tree_allclose(s1.params, ref)
+
+
+# --------------------------------------------------------------------------
+# "lace_dp" backend: stateful engine step inside shard_map
+# --------------------------------------------------------------------------
+
+_DP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import json
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ScalaConfig, get_config
+from repro.core import engine
+from repro.core.scala import transformer_split_model
+from repro.launch import input_specs as ispec
+from repro.models import transformer as T
+from repro.sharding.logical import RULES_DP, tree_specs
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+C, BK, S = 2, 2, 16
+model = transformer_split_model(cfg)
+key = jax.random.PRNGKey(0)
+full = T.init_params(key, cfg)
+params = {
+    "client": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), full["client"]),
+    "server": full["server"],
+}
+tokens = jax.random.randint(jax.random.PRNGKey(1), (C, BK, S), 0,
+                            cfg.vocab_size)
+batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=-1),
+         "weights": jnp.ones((C, BK, S), jnp.float32)}
+sc = ScalaConfig(num_clients=C, participation=1.0, lr=0.05,
+                 grad_reduce_dtype=None)
+opt = optim.momentum(beta=0.9)
+
+# reference: no mesh, stateful lace step with the same optimizer
+ref_step = jax.jit(engine.make_split_step(model, sc, backend="lace",
+                                          optimizer=opt))
+ref = engine.init_train_state(params, opt)
+for _ in range(2):
+    ref, ref_m = ref_step(ref, batch)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+from repro.configs.base import InputShape
+shape = InputShape(name="t", seq_len=S, global_batch=C * BK, mode="train")
+b_sh, b_ax = ispec.train_batch_specs(cfg, shape, C)
+b_specs = tree_specs(b_ax, b_sh, mesh, RULES_DP)
+dp_step = jax.jit(engine.make_split_step(model, sc, backend="lace_dp",
+                                         optimizer=opt, mesh=mesh,
+                                         batch_specs=b_specs))
+dp = engine.init_train_state(params, opt)
+for _ in range(2):
+    dp, dp_m = dp_step(dp, batch)
+
+err = {"step": int(dp.step)}
+for k in ("client", "server"):
+    a = jax.tree.leaves(ref.params[k]); b = jax.tree.leaves(dp.params[k])
+    err[k] = max(float(jnp.max(jnp.abs(x - y)) /
+                       (1e-8 + float(jnp.max(jnp.abs(x)))))
+                 for x, y in zip(a, b))
+err["opt"] = max(float(jnp.max(jnp.abs(x - y)))
+                 for x, y in zip(jax.tree.leaves(ref.opt_state),
+                                 jax.tree.leaves(dp.opt_state)))
+err["loss_server"] = abs(float(ref_m["loss_server"]) -
+                         float(dp_m["loss_server"]))
+print("RESULT " + json.dumps(err))
+"""
+
+
+@pytest.mark.slow
+def test_engine_dp_backend_matches_lace_with_optimizer_state():
+    """The stateful engine step with backend='lace_dp' (whole step — grads
+    AND optimizer update — inside one shard_map) matches backend='lace'
+    on a (data=2, model=2) mesh, momentum state included."""
+    import json as _json
+    import os as _os
+    import subprocess
+    import sys as _sys
+
+    env = dict(_os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([_sys.executable, "-c", _DP_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=_os.path.dirname(_os.path.dirname(
+                             _os.path.abspath(__file__))), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout[-2000:]
+    err = _json.loads(line[0][len("RESULT "):])
+    assert err["step"] == 2, err
+    assert err["loss_server"] < 1e-5, err
+    assert err["client"] < 5e-4, err
+    assert err["server"] < 5e-4, err
+    assert err["opt"] < 5e-4, err
+
+
+def test_aggregate_preserves_server_and_optimizer_state():
+    cfg = tiny_cfg()
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(12), cfg)
+    sc = ScalaConfig(lr=0.05)
+    opt = optim.momentum()
+    step = engine.make_split_step(model, sc, backend="logits", optimizer=opt)
+    state, _ = step(engine.init_train_state(params, opt), batch)
+    agg = dataclasses.replace(
+        state, params=engine.scala_aggregate(state.params))
+    _tree_allclose(agg.params["server"], state.params["server"], atol=0,
+                   rtol=0)
+    # opt state is untouched by the FL phase (only params are averaged)
+    _tree_allclose(agg.opt_state, state.opt_state, atol=0, rtol=0)

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'hypothesis' extra (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import label_stats, losses
 from repro.core.split import client_minibatch_sizes, fedavg
