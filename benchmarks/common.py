@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import fed
 from repro.configs import ScalaConfig
 from repro.core import baselines as B
 from repro.core import engine
@@ -64,8 +65,14 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
                    T: int = 5, rounds: int = 12, server_batch: int = 48,
                    lr: float = 0.05, width: float = 0.125,
                    num_classes: int = 10, n_train: int = 2000,
-                   split: str = "s2", seed: int = 0) -> Dict:
-    """Returns {'acc', 'balanced_acc', 'seconds'} on the held-out test set."""
+                   split: str = "s2", seed: int = 0,
+                   aggregator: Optional[str] = None,
+                   opt_state_policy: str = "carry") -> Dict:
+    """Returns {'acc', 'balanced_acc', 'seconds'} on the held-out test set.
+
+    ``aggregator``: optional :mod:`repro.fed` aggregator name for the FL
+    phase (None = legacy data-size FedAvg); ``opt_state_policy`` is the
+    SCALA engine's client opt-state round-boundary policy."""
     (x, y), (x_test, y_test) = make_dataset(n_train=n_train, seed=seed)
     parts = partition(y, K, alpha=alpha, beta=beta, num_classes=num_classes,
                       seed=seed)
@@ -73,6 +80,7 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
     rng = np.random.default_rng(seed + 7)
     key = jax.random.PRNGKey(seed)
     C = max(1, round(K * r))
+    agg = fed.make_aggregator(aggregator) if aggregator else None
     t0 = time.time()
 
     full = A.init_params(key, num_classes=num_classes, width=width)
@@ -102,10 +110,16 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
         # XLA program (backend "logits": AlexNet materializes its 10-way
         # logits; no trunk/head split needed). Full unroll: XLA:CPU runs
         # rolled-loop bodies with reduced parallelism (benchmarks/round_loop).
+        if agg is not None and agg.stateful:
+            # the runner re-stacks a freshly sampled subset every round,
+            # so per-slot aggregator state would not track clients
+            raise ValueError(f"aggregator {agg.name!r} is stateful; "
+                             "run_experiment's host-side subset sampling "
+                             "has no stable client identities")
         state = engine.init_train_state(params, optim.sgd())
-        round_fn = jax.jit(engine.make_round_runner(model, sc,
-                                                    backend="logits",
-                                                    unroll=True))
+        round_fn = jax.jit(engine.make_round_runner(
+            model, sc, backend="logits", unroll=True, aggregator=agg,
+            opt_state_policy=opt_state_policy))
         for _ in range(rounds):
             sel = sample_clients(K, C, rng)
             rb = round_batches(data, sel, server_batch, T, rng)
@@ -121,14 +135,16 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
         w = full
         state = B.init_fl_state(method, w, C)
         round_fn = jax.jit(
-            lambda wg, rb, ds, st: B.make_fl_round(method, model, lr=lr)(
-                wg, rb, ds, st))
+            lambda wg, rb, ds, st: B.make_fl_round(
+                method, model, lr=lr, aggregator=agg)(wg, rb, ds, st))
         for _ in range(rounds):
             sel = sample_clients(K, C, rng)
             rb = round_batches(data, sel, server_batch, T, rng)
             sizes = jnp.asarray(rb.pop("sizes"))
+            # 'weights' stays: the local losses ignore it, but the fed
+            # aggregation priors use it to exclude zero-padded rows
             batches = {k: jnp.asarray(v).swapaxes(0, 1)
-                       for k, v in rb.items() if k != "weights"}
+                       for k, v in rb.items()}
             w, state = round_fn(w, batches, sizes, state)
         return finish(lambda xs: A.forward(w, xs, split))
 
@@ -151,14 +167,15 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
                 return feats.reshape(feats.shape[0], -1) @ p["w"]
 
         round_fn = B.make_sfl_round(method, model, lr=lr,
-                                    aux_head_fwd=aux_head_fwd)
+                                    aux_head_fwd=aux_head_fwd,
+                                    aggregator=agg)
         round_fn = jax.jit(round_fn)
         for _ in range(rounds):
             sel = sample_clients(K, C, rng)
             rb = round_batches(data, sel, server_batch, T, rng)
             sizes = jnp.asarray(rb.pop("sizes"))
             batches = {k: jnp.asarray(v).swapaxes(0, 1)
-                       for k, v in rb.items() if k != "weights"}
+                       for k, v in rb.items()}
             state = round_fn(state, batches, sizes)
         wc0 = jax.tree.map(lambda a: a[0], state["wc"])
         merged = A.merge_params(wc0, state["ws"])

@@ -1,0 +1,122 @@
+"""Participation benchmark: round latency vs. participation fraction.
+
+The fed layer keeps the stacked client axis *static* and realizes
+partial participation as a per-round 0/1 mask inside the compiled round
+(:mod:`repro.fed.participation`), so the per-round compute is that of
+all K slots regardless of the fraction — this bench measures what that
+costs (and what the scan ``unroll`` setting does to it) against the
+host-side alternative of re-stacking only the participants.
+
+For each fraction r in the sweep, one scanned round program
+(`engine.make_round_runner` with ``participation=uniform(K, r)`` +
+``aggregator=fedavg``) is timed at unroll on/off on the width-scaled
+AlexNet; `masked_vs_subset` additionally times the r=0.5 subset
+physically re-stacked (C = r*K slots, no mask) as the lower bound.
+
+Reports rounds/sec and writes ``BENCH_participation.json`` next to this
+file (or to ``--out``).
+
+  PYTHONPATH=src python -m benchmarks.participation [--rounds 10] [--K 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.round_loop import _setup
+from repro import fed, optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+
+FRACTIONS = (0.25, 0.5, 1.0)
+
+
+def _time_rounds(round_fn, state, rb, sizes, fed_state, rounds: int):
+    """Warm once, then time; returns (seconds_total, final_state)."""
+    if fed_state is None:
+        s, _ = round_fn(state, rb, sizes)
+        jax.block_until_ready(jax.tree.leaves(s.params)[0])
+        t0 = time.perf_counter()
+        s = state
+        for _ in range(rounds):
+            s, _ = round_fn(s, rb, sizes)
+        jax.block_until_ready(jax.tree.leaves(s.params)[0])
+        return time.perf_counter() - t0, s
+    s, f, _ = round_fn(state, rb, sizes, fed_state)
+    jax.block_until_ready(jax.tree.leaves(s.params)[0])
+    t0 = time.perf_counter()
+    s, f = state, fed_state
+    for _ in range(rounds):
+        s, f, _ = round_fn(s, rb, sizes, f)
+    jax.block_until_ready(jax.tree.leaves(s.params)[0])
+    return time.perf_counter() - t0, s
+
+
+def bench_participation(rounds: int = 10, K: int = 8, Bk: int = 16,
+                        T: int = 5, lr: float = 0.05):
+    """Returns the result dict (also printed/serialized by main)."""
+    model, params, rb, sizes = _setup(K, Bk, T)
+    sc = ScalaConfig(num_clients=K, participation=1.0, local_iters=T, lr=lr)
+    res = {
+        "bench": "participation",
+        "config": {"rounds": rounds, "clients": K, "per_client_batch": Bk,
+                   "local_iters": T, "lr": lr, "model": "alexnet-w0.125"},
+        "backend": jax.default_backend(),
+        "masked": {},
+    }
+
+    state = engine.init_train_state(params, optim.sgd())
+    for frac in FRACTIONS:
+        part = fed.uniform(K, frac)
+        agg = fed.fedavg()
+        fed_state = fed.init_fed_state(jax.random.PRNGKey(1), agg, part)
+        entry = {}
+        for name, unroll in (("rolled", 1), ("unrolled", True)):
+            round_fn = jax.jit(engine.make_round_runner(
+                model, sc, backend="logits", unroll=unroll,
+                aggregator=agg, participation=part))
+            secs, _ = _time_rounds(round_fn, state, rb, sizes, fed_state,
+                                   rounds)
+            entry[name] = {"seconds": round(secs, 4),
+                           "rounds_per_sec": round(rounds / secs, 2)}
+        res["masked"][f"frac={frac}"] = entry
+
+    # lower bound: the r=0.5 subset physically re-stacked (no mask)
+    C = max(1, round(K * 0.5))
+    model_s, params_s, rb_s, sizes_s = _setup(C, Bk, T)
+    state_s = engine.init_train_state(params_s, optim.sgd())
+    round_fn = jax.jit(engine.make_round_runner(model_s, sc,
+                                                backend="logits",
+                                                unroll=True))
+    secs, _ = _time_rounds(round_fn, state_s, rb_s, sizes_s, None, rounds)
+    res["subset_restacked_frac=0.5"] = {
+        "seconds": round(secs, 4),
+        "rounds_per_sec": round(rounds / secs, 2)}
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--K", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--T", type=int, default=5)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_participation.json"))
+    args = ap.parse_args()
+
+    res = bench_participation(rounds=args.rounds, K=args.K, Bk=args.batch,
+                              T=args.T)
+    print(json.dumps(res, indent=2))
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -169,6 +169,25 @@ def bench_round_loop(quick: bool) -> None:
               f"{res[variant]['seconds']}", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Participation benchmark (fed-layer masked rounds; no paper table —
+# backs the pluggable federation layer's static-slot masking).
+# ---------------------------------------------------------------------------
+
+def bench_participation(quick: bool) -> None:
+    from benchmarks.participation import bench_participation as _bench
+
+    res = _bench(rounds=3 if quick else 10)
+    for frac, entry in res["masked"].items():
+        for variant in ("rolled", "unrolled"):
+            print(f"participation,{frac},{variant},"
+                  f"{entry[variant]['rounds_per_sec']},,"
+                  f"{entry[variant]['seconds']}", flush=True)
+    sub = res["subset_restacked_frac=0.5"]
+    print(f"participation,frac=0.5,subset_restacked,"
+          f"{sub['rounds_per_sec']},,{sub['seconds']}", flush=True)
+
+
 TABLES = {
     "t1": bench_table1,
     "t2": bench_table2,
@@ -177,6 +196,7 @@ TABLES = {
     "t7": bench_table7,
     "t8": bench_table8,
     "round_loop": bench_round_loop,
+    "participation": bench_participation,
     "roofline": bench_roofline,
 }
 

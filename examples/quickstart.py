@@ -1,11 +1,16 @@
-"""Quickstart: one SCALA round on the paper's AlexNet, end to end.
+"""Quickstart: SCALA rounds on the paper's AlexNet, end to end, through
+the federation layer.
 
 Runs the exact Algorithm-2 loop at toy scale: K=8 clients with
 quantity-skewed (alpha=2 -> missing classes) synthetic CIFAR-shaped
-data, C=4 participating, T=3 local iterations with concatenated
-activations + dual logit-adjusted losses, then the FedAvg phase — the
-whole round compiled as ONE program by the split-step engine's
-round runner (:func:`repro.core.engine.make_round_runner`).
+data, partial participation (a uniform 50% subset masked *inside* the
+compiled round by :mod:`repro.fed.participation` — priors and logit
+adjustments are recomputed per subset), T=3 local iterations with
+concatenated activations + dual logit-adjusted losses, then the
+pluggable FL phase (:mod:`repro.fed.aggregators`, BESplit-style
+bias-compensated FedAvg here) — the whole round compiled as ONE program
+by the split-step engine's round runner
+(:func:`repro.core.engine.make_round_runner`).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,16 +18,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
+from repro import fed, optim
 from repro.configs import ScalaConfig
 from repro.core import engine
 from repro.core.scala import alexnet_split_model
-from repro.data.loader import FederatedData, round_batches, sample_clients
+from repro.data.loader import FederatedData, round_batches
 from repro.data.partition import partition
 from repro.data.synthetic import gaussian_images
 from repro.models import alexnet as A
 
-K, C, T, B, ROUNDS = 8, 4, 3, 32, 4
+K, T, B, ROUNDS = 8, 3, 32, 4
 
 # --- data: alpha=2 quantity skew => each client holds <=2 of 10 classes
 x, y = gaussian_images(1200, num_classes=10, seed=0)
@@ -34,23 +39,35 @@ x_test, y_test = jnp.asarray(x[1000:]), jnp.asarray(y[1000:])
 model = alexnet_split_model("s2", num_classes=10)
 full = A.init_params(jax.random.PRNGKey(0), num_classes=10, width=0.125)
 wc, ws = A.split_params(full, "s2")
+# all K clients stay stacked; participation is a per-round in-program mask
 params = {"client": jax.tree.map(
-    lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc), "server": ws}
+    lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), wc), "server": ws}
 
-sc = ScalaConfig(num_clients=K, participation=C / K, local_iters=T,
+sc = ScalaConfig(num_clients=K, participation=0.5, local_iters=T,
                  server_batch=B, lr=0.05)
-# T local iterations (eqs. 4-9) + FedAvg (eq. 10) in one scanned program
+
+# --- federation layer: who participates, and how updates merge
+participation = fed.uniform(K, 0.5)         # 4-of-8 clients per round
+aggregator = fed.bias_compensated()          # downweight label-skewed clients
+fed_state = fed.init_fed_state(jax.random.PRNGKey(1), aggregator,
+                               participation)
+
+# T local iterations (eqs. 4-9) + the FL phase in one scanned program
 state = engine.init_train_state(params, optim.sgd())
-round_fn = jax.jit(engine.make_round_runner(model, sc, backend="logits",
-                                            unroll=True))
+round_fn = jax.jit(engine.make_round_runner(
+    model, sc, backend="logits", unroll=True,
+    aggregator=aggregator, participation=participation,
+    opt_state_policy="carry"))
 rng = np.random.default_rng(0)
+all_clients = np.arange(K)
 
 for rnd in range(ROUNDS):
-    sel = sample_clients(K, C, rng)                     # partial participation
-    rb = round_batches(data, sel, B, T, rng)            # eq. (3) batch sizing
+    # eq. (3) sizing over all K slots; the in-program mask then keeps
+    # ~half of it, so the participating batch is ~B/2 per local step
+    rb = round_batches(data, all_clients, B, T, rng)
     sizes = jnp.asarray(rb.pop("sizes"))
     batches = {k: jnp.asarray(v) for k, v in rb.items()}
-    state, metrics = round_fn(state, batches, sizes)
+    state, fed_state, metrics = round_fn(state, batches, sizes, fed_state)
     merged = A.merge_params(jax.tree.map(lambda a: a[0],
                                          state.params["client"]),
                             state.params["server"])

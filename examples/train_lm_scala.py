@@ -17,12 +17,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--participation", default="0.5",
+                    help="fraction (legacy subset stacking) or fed-layer "
+                         "spec: full | uniform:FRAC | dirichlet:FRAC[:A]")
+    ap.add_argument("--aggregator", default="weighted")
+    ap.add_argument("--opt-state-policy", default="carry")
     args = ap.parse_args()
 
     sys.argv = [
         "train", "--arch", args.arch, "--reduced",
         "--rounds", str(args.rounds), "--clients", "8",
-        "--participation", "0.5", "--local-iters", "4",
+        "--participation", args.participation,
+        "--aggregator", args.aggregator,
+        "--opt-state-policy", args.opt_state_policy,
+        "--local-iters", "4",
         "--seq", "64", "--server-batch", "16", "--docs-per-client", "16",
     ]
     train.main()

@@ -21,7 +21,7 @@ setting) with state threaded through the local-iteration scans.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,9 @@ from repro.core.engine import SplitModel
 from repro.core.label_stats import histogram, prior
 from repro.core.split import fedavg
 from repro.optim import optimizers
+
+if TYPE_CHECKING:  # runtime import is lazy: repro.core.__init__ ->
+    from repro.fed import Aggregator  # baselines -> repro.fed would cycle
 
 FL_METHODS = ("fedavg", "fedprox", "feddyn", "feddecorr", "fedlogit", "fedla")
 SFL_METHODS = ("splitfed_v1", "splitfed_v2", "splitfed_v3", "sfl_localloss")
@@ -142,10 +145,44 @@ def fl_local_round(loss_fn, w_global, batches, ctx, lr: float,
     return w
 
 
+def _aggregate_clients(aggregator: Optional["Aggregator"], stacked,
+                       data_sizes, p_k=None, p_global=None):
+    """Shared FL phase: the fed-layer aggregator when given (stateless
+    only — baseline rounds don't thread aggregator state), else the
+    legacy data-size FedAvg."""
+    if aggregator is None:
+        return fedavg(stacked, data_sizes)
+    from repro.fed import AggContext
+
+    assert not aggregator.stateful, \
+        "baseline rounds support stateless aggregators only"
+    C = jax.tree.leaves(stacked)[0].shape[0]
+    ctx = AggContext(num_clients=C, data_sizes=data_sizes, p_k=p_k,
+                     p_global=p_global)
+    avg, _ = aggregator.aggregate(stacked, ctx, ())
+    return avg
+
+
+def _aggregation_priors(num_classes: int, round_batches):
+    """(P_k, P_global) over the round labels for prior-aware aggregators,
+    honoring per-token 'weights' when present so zero-weight padding rows
+    (loader.round_batches pads every client to bk_max) don't count."""
+    from repro.fed import aggregation_priors
+
+    return aggregation_priors(num_classes, round_batches["labels"],
+                              round_batches.get("weights"), client_axis=0)
+
+
 def make_fl_round(method: str, model: FedModel, lr: float,
-                  optimizer: Optional[optimizers.Optimizer] = None, **kw):
+                  optimizer: Optional[optimizers.Optimizer] = None,
+                  aggregator: Optional[Aggregator] = None, **kw):
     """Returns round(w_global, round_batches, client_labels_counts, state)
     -> (w_global', state'). round_batches leaves: (C, T, Bk, ...).
+
+    ``aggregator``: optional stateless :mod:`repro.fed` aggregator for
+    the FL phase (default: data-size FedAvg). Prior-aware aggregators
+    (bias_compensated) get the per-client round priors that the local
+    losses already compute.
     """
     loss_fn = make_local_loss(method, model, **kw)
     alpha = kw.get("alpha", 0.01)
@@ -175,7 +212,13 @@ def make_fl_round(method: str, model: FedModel, lr: float,
             dummy_h = jax.tree.map(
                 lambda a: jnp.zeros((C,) + a.shape, a.dtype), w_global)
             w_k = jax.vmap(one_client)(round_batches, counts, p_k, dummy_h)
-        return fedavg(w_k, data_sizes), state
+        if aggregator is not None and aggregator.needs_priors:
+            p_k_agg, p_global = _aggregation_priors(model.num_classes,
+                                                    round_batches)
+        else:
+            p_k_agg = p_global = None
+        return _aggregate_clients(aggregator, w_k, data_sizes,
+                                  p_k=p_k_agg, p_global=p_global), state
 
     return round_fn
 
@@ -194,7 +237,8 @@ def init_fl_state(method: str, w_global, num_clients: int):
 
 def make_sfl_round(method: str, model: SplitModel, lr: float,
                    aux_head_fwd=None,
-                   optimizer: Optional[optimizers.Optimizer] = None):
+                   optimizer: Optional[optimizers.Optimizer] = None,
+                   aggregator: Optional[Aggregator] = None):
     """SFL-family round functions.
 
     State layout: {'wc': stacked (C,...) or shared, 'ws': ..., 'aux': ...}.
@@ -202,9 +246,20 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
     engine's :func:`repro.core.engine.split_ce`; updates come from
     ``optimizer`` (default plain SGD) with state threaded through the
     local scans and reset at each round boundary (clients restart from
-    the aggregated model).
+    the aggregated model). ``aggregator``: optional stateless
+    :mod:`repro.fed` aggregator for the averaged halves (default:
+    data-size FedAvg).
     """
     opt = optimizer if optimizer is not None else optimizers.sgd()
+
+    def _agg(stacked, data_sizes, round_batches):
+        if aggregator is not None and aggregator.needs_priors:
+            p_k, p_global = _aggregation_priors(model.num_classes,
+                                                round_batches)
+        else:
+            p_k = p_global = None
+        return _aggregate_clients(aggregator, stacked, data_sizes,
+                                  p_k=p_k, p_global=p_global)
 
     def local_steps_pair(wc, ws, batches_k):
         def step(carry, batch):
@@ -225,9 +280,9 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
             ws = state["ws"]
             wc_k, ws_k = jax.vmap(
                 lambda wc, b: local_steps_pair(wc, ws, b))(wc_stack, round_batches)
-            new_ws = fedavg(ws_k, data_sizes)
+            new_ws = _agg(ws_k, data_sizes, round_batches)
             if method == "splitfed_v1":
-                new_wc_avg = fedavg(wc_k, data_sizes)
+                new_wc_avg = _agg(wc_k, data_sizes, round_batches)
                 C = jax.tree.leaves(wc_k)[0].shape[0]
                 new_wc = jax.tree.map(
                     lambda a: jnp.broadcast_to(a[None], (C,) + a.shape),
@@ -268,7 +323,7 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
                 local_step,
                 (wc_stack, ws, jax.vmap(opt.init)(wc_stack), opt.init(ws)),
                 jnp.arange(T))
-            new_wc_avg = fedavg(wc_stack, data_sizes)
+            new_wc_avg = _agg(wc_stack, data_sizes, round_batches)
             new_wc = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), new_wc_avg)
             return {"wc": new_wc, "ws": ws}
@@ -308,13 +363,15 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
 
             wc_k, aux_k, ws_k = jax.vmap(one_client)(wc_stack, aux_stack,
                                                      round_batches)
-            new_ws = fedavg(ws_k, data_sizes)
-            new_wc_avg = fedavg(wc_k, data_sizes)
+            new_ws = _agg(ws_k, data_sizes, round_batches)
+            new_wc_avg = _agg(wc_k, data_sizes, round_batches)
             C = jax.tree.leaves(wc_k)[0].shape[0]
             bcast = lambda a: jnp.broadcast_to(a[None], (C,) + a.shape)
             return {"wc": jax.tree.map(bcast, new_wc_avg),
                     "ws": new_ws,
-                    "aux": jax.tree.map(bcast, fedavg(aux_k, data_sizes))}
+                    "aux": jax.tree.map(bcast,
+                                        _agg(aux_k, data_sizes,
+                                             round_batches))}
         return round_fn
 
     raise ValueError(f"unknown SFL method {method!r}")

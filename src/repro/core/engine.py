@@ -41,9 +41,17 @@ The variation points:
   stacked (C, ...) axis and shards exactly like the client params.
 
 On top of the per-step engine, :func:`make_round_runner` /
-:func:`scala_round_scan` compile T local iterations *plus* the FedAvg
-phase (eq. 10) into a single ``lax.scan``-based XLA program — one
-dispatch per round instead of T+1.
+:func:`scala_round_scan` compile T local iterations *plus* the FL phase
+into a single ``lax.scan``-based XLA program — one dispatch per round
+instead of T+1. The FL phase itself is pluggable via the federation
+layer (:mod:`repro.fed`): an ``Aggregator`` picks the per-client
+aggregation weights (FedAvg, data-size weighted, BESplit-style
+bias-compensated, GAS-style staleness-decayed), a
+``ParticipationScheduler`` samples the per-round client subset as a 0/1
+mask over the static client axis (priors and logit adjustments are then
+recomputed per subset), and ``opt_state_policy`` fixes what happens to
+client optimizer state at the round boundary (carry | reset | average —
+see :func:`make_round_runner`).
 
 The legacy entry points in :mod:`repro.core.scala` are thin wrappers over
 :func:`local_step` with plain SGD.
@@ -61,7 +69,7 @@ from repro import compat
 from repro.configs.base import ScalaConfig
 from repro.core import losses
 from repro.core.label_stats import client_and_concat_priors, histogram
-from repro.core.split import redistribute, stack_client_params
+from repro.core.split import redistribute, stack_client_params, weighted_mean
 from repro.optim import optimizers, schedules
 
 BACKENDS = ("logits", "lace", "lace_dp")
@@ -226,13 +234,23 @@ def _client_pullback(model: SplitModel, wc, batch, acts, g_x, g_mem, has_mem):
 def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
                      backend: str = "logits",
                      ce_chunk: Optional[int] = None,
-                     axes: Optional[MeshAxes] = None):
+                     axes: Optional[MeshAxes] = None,
+                     mask=None):
     """Stages 1-4 of the SCALA local iteration for any loss backend.
 
     params: {'client': stacked (C,...), 'server': ...}; batch leaves
     (C, B_k, ...). Returns (grads, metrics) with grads mirroring params —
     no parameter update applied. ``axes`` must be set iff
     ``backend == "lace_dp"`` (the caller wraps this in ``shard_map``).
+
+    ``mask`` is an optional (C,) 0/1 participation mask (the client count
+    stays static; see :mod:`repro.fed.participation`). It folds into the
+    per-token loss weights, so masked-out clients contribute zero to the
+    stage-1 histograms — the concatenated prior P_s and the per-client
+    priors P_k are recomputed over the participating *subset*, exactly
+    the paper's partial-participation setting — zero to both losses, and
+    zero gradient to their own client halves. Under ``lace_dp`` the mask
+    is the *local* (C_l,) shard of the global mask.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
@@ -246,6 +264,12 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
     labels = batch["labels"]
     weights = batch.get("weights")
     C = labels.shape[0]
+
+    if mask is not None:
+        mw = mask.astype(jnp.float32).reshape((C,) + (1,) * (labels.ndim - 1))
+        base_w = (jnp.ones(labels.shape, jnp.float32) if weights is None
+                  else jnp.broadcast_to(weights, labels.shape))
+        weights = base_w * mw
 
     # --- stage 1: label statistics (clients upload Y_k with A_k) ---
     p_k, p_s = _priors(labels, weights, N, scala, axes)
@@ -491,13 +515,17 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
                     schedule: Optional[Callable] = None,
                     ce_chunk: Optional[int] = None,
                     mesh=None, batch_specs=None):
-    """Build the stateful engine step: (TrainState, batch) ->
+    """Build the stateful engine step: (TrainState, batch[, mask]) ->
     (TrainState, metrics), jit/scan-compatible.
 
     ``optimizer`` defaults to plain SGD (the paper's eq. 7/9) and
     ``schedule`` to a constant ``scala.lr``; any combination from
     :mod:`repro.optim` works, with the lr driven by ``state.step`` (one
     increment per local iteration).
+
+    The optional third ``mask`` argument is a (C,) 0/1 participation mask
+    (see :func:`split_step_grads`); for ``lace_dp`` it is passed into the
+    ``shard_map`` sharded over the client mesh axes.
     """
     opt = optimizer if optimizer is not None else optimizers.sgd()
     sched = schedule if schedule is not None else schedules.constant(scala.lr)
@@ -509,7 +537,7 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
             raise ValueError("backend 'lace_dp' needs mesh and batch_specs")
         axes = mesh_axes(mesh)
 
-        def step(state: TrainState, batch):
+        def step(state: TrainState, batch, mask=None):
             p_specs = _dp_specs(mesh, axes, state.params)
             # vmapped client opt state carries the (C, ...) axis on every
             # leaf, so it shards exactly like the client params
@@ -519,23 +547,28 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
                 step=P())
             m_specs = {"loss_server": P(), "loss_client": P(), "aux": P()}
 
-            def body(st, b):
+            def body(st, b, *m):
                 grads, metrics = split_step_grads(
                     model, st.params, b, scala, backend="lace_dp",
-                    ce_chunk=ce_chunk, axes=axes)
+                    ce_chunk=ce_chunk, axes=axes,
+                    mask=m[0] if m else None)
                 return _apply_updates(opt, st, grads, sched(st.step)), metrics
 
-            fn = compat.shard_map(body, mesh=mesh,
-                                  in_specs=(s_specs, batch_specs),
+            # the (C,) mask, when present, shards like the client axis
+            args = (state, batch) if mask is None else (state, batch, mask)
+            in_specs = ((s_specs, batch_specs) if mask is None
+                        else (s_specs, batch_specs, P(axes.client or None)))
+            fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                                   out_specs=(s_specs, m_specs),
                                   check_vma=False)
-            return fn(state, batch)
+            return fn(*args)
 
         return step
 
-    def step(state: TrainState, batch):
+    def step(state: TrainState, batch, mask=None):
         grads, metrics = split_step_grads(model, state.params, batch, scala,
-                                          backend=backend, ce_chunk=ce_chunk)
+                                          backend=backend, ce_chunk=ce_chunk,
+                                          mask=mask)
         return _apply_updates(opt, state, grads, sched(state.step)), metrics
 
     return step
@@ -547,9 +580,37 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
 
 
 def scala_aggregate(params, data_sizes=None):
-    """FL phase (eq. 10): FedAvg the client halves, redistribute."""
+    """FL phase (eq. 10): FedAvg the client halves, redistribute.
+
+    ``data_sizes`` may contain zero-participation clients; normalization
+    is mask-safe (see :func:`repro.core.split.normalize_client_weights`).
+    """
     return {"client": redistribute(params["client"], data_sizes),
             "server": params["server"]}
+
+
+OPT_STATE_POLICIES = ("carry", "reset", "average")
+
+
+def _round_boundary_opt_state(opt: optimizers.Optimizer, opt_state,
+                              new_params, weights, policy: str):
+    """Client optimizer state at the round boundary (policy semantics in
+    :func:`make_round_runner`); the server half always carries."""
+    if policy == "carry":
+        return opt_state
+    if policy == "reset":
+        return {"client": jax.vmap(opt.init)(new_params["client"]),
+                "server": opt_state["server"]}
+    # "average": aggregate the per-client state exactly like the client
+    # params, then redistribute so every slot restarts from the averaged
+    # moments (computed in f32, cast back to the leaf dtype).
+    def avg(a):
+        wb = weights.reshape((-1,) + (1,) * (a.ndim - 1)).astype(jnp.float32)
+        m = (a.astype(jnp.float32) * wb).sum(axis=0).astype(a.dtype)
+        return jnp.broadcast_to(m[None], a.shape)
+
+    return {"client": jax.tree.map(avg, opt_state["client"]),
+            "server": opt_state["server"]}
 
 
 def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
@@ -558,15 +619,56 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                       schedule: Optional[Callable] = None,
                       ce_chunk: Optional[int] = None,
                       aggregate: bool = True,
-                      unroll=1):
+                      unroll=1,
+                      aggregator=None,
+                      participation=None,
+                      opt_state_policy: str = "carry",
+                      mesh=None, batch_specs=None):
     """Build the fused round program: T local iterations (``lax.scan``
-    over the engine step) + the FedAvg phase, all in one jittable fn.
+    over the engine step) + the pluggable FL phase, all in one jittable
+    fn. All backends are supported, including ``lace_dp`` (pass ``mesh``
+    and ``batch_specs``): the manual-SPMD shard_map step's specs are
+    step-invariant, so the whole sharded round scans into one program.
 
-    Returns round_fn(state, round_batches, data_sizes=None) ->
-    (TrainState, last-step metrics); round_batches leaves (T, C, Bk, ...).
-    Optimizer state is carried across local iterations and (like the
-    server half) is NOT re-averaged by the FL phase — only the client
-    params are FedAvg'd/redistributed (eq. 10).
+    Federation layer (:mod:`repro.fed`):
+
+    * ``aggregator`` — an :class:`repro.fed.aggregators.Aggregator`
+      deciding the per-client FL-phase weights. Default:
+      ``fed.weighted()``, data-size-proportional FedAvg — exactly the
+      legacy ``scala_aggregate`` behavior.
+    * ``participation`` — a
+      :class:`repro.fed.participation.ParticipationScheduler` sampling
+      the per-round client subset as a (C,) 0/1 mask over the *static*
+      stacked client axis. The mask threads through
+      :func:`split_step_grads`, so priors / logit adjustments are
+      recomputed over the participating subset each round, and through
+      the aggregator, which excludes absent clients. ``None`` (default)
+      = full participation with no masking (legacy-exact HLO).
+
+    Client optimizer state at the round boundary (``opt_state_policy``):
+
+    * ``"carry"``   — per-slot state persists across rounds (legacy
+      behavior). After the FL phase every slot holds the same params but
+      its own moments: momentum/Adam statistics act per *slot*, not per
+      logical client — cheap, and the right default when slots are
+      anonymous.
+    * ``"reset"``   — client state re-initialized to zeros each round:
+      every client restarts cold from the aggregated model, matching the
+      FL/SFL baseline semantics (:mod:`repro.core.baselines`).
+    * ``"average"`` — client state is aggregated with the same weights
+      as the params and redistributed: moments follow the averaged model
+      (FedOpt-style server-side statistics).
+
+    The server half's optimizer state always carries — the server model
+    is never averaged (only the client halves federate, eq. 10).
+
+    Returns ``round_fn(state, round_batches, data_sizes=None,
+    fed_state=None)``; round_batches leaves (T, C, Bk, ...). With
+    ``fed_state=None`` (requires stateless aggregator + scheduler) it
+    returns ``(TrainState, metrics)`` — the legacy signature. With a
+    ``fed_state`` dict from :func:`repro.fed.init_fed_state` it returns
+    ``(TrainState, fed_state', metrics)``, threading scheduler PRNG keys
+    and aggregator round ages across rounds.
 
     ``unroll`` is forwarded to ``lax.scan``. The default (1) keeps the
     HLO small — right for the deep production archs. XLA:CPU executes
@@ -574,16 +676,60 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     pass ``unroll=True`` (full unroll): still one dispatch per round,
     no loop serialization (see benchmarks/round_loop.py).
     """
-    step = make_split_step(model, scala, backend=backend, optimizer=optimizer,
-                           schedule=schedule, ce_chunk=ce_chunk)
+    from repro import fed as _fed
 
-    def round_fn(state: TrainState, round_batches, data_sizes=None):
-        state, ms = jax.lax.scan(step, state, round_batches, unroll=unroll)
+    if opt_state_policy not in OPT_STATE_POLICIES:
+        raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
+                         f"expected {OPT_STATE_POLICIES}")
+    opt = optimizer if optimizer is not None else optimizers.sgd()
+    agg = aggregator if aggregator is not None else _fed.weighted()
+    stateful = _fed.is_stateful(agg, participation)
+    step = make_split_step(model, scala, backend=backend, optimizer=opt,
+                           schedule=schedule, ce_chunk=ce_chunk,
+                           mesh=mesh, batch_specs=batch_specs)
+
+    def round_fn(state: TrainState, round_batches, data_sizes=None,
+                 fed_state=None):
+        if fed_state is None:
+            if stateful:
+                raise ValueError(
+                    f"aggregator {agg.name!r} / participation scheduler are "
+                    "stateful; pass fed_state (repro.fed.init_fed_state)")
+            sched_state, agg_state = (), ()
+        else:
+            sched_state, agg_state = fed_state["sched"], fed_state["agg"]
+
+        if participation is not None:
+            mask, sched_state = participation.sample(sched_state)
+            body = lambda s, b: step(s, b, mask)
+        else:
+            mask = None
+            body = step
+        state, ms = jax.lax.scan(body, state, round_batches, unroll=unroll)
         metrics = jax.tree.map(lambda a: a[-1], ms)
+
         if aggregate:
-            state = dataclasses.replace(
-                state, params=scala_aggregate(state.params, data_sizes))
-        return state, metrics
+            C = jax.tree.leaves(state.params["client"])[0].shape[0]
+            p_k = p_global = None
+            if agg.needs_priors:
+                p_k, p_global = _fed.aggregation_priors(
+                    model.num_classes, round_batches["labels"],
+                    round_batches.get("weights"), client_axis=1)
+            ctx = _fed.AggContext(num_clients=C, mask=mask,
+                                  data_sizes=data_sizes, p_k=p_k,
+                                  p_global=p_global)
+            w, agg_state = agg.client_weights(ctx, agg_state)
+            new_client_avg = weighted_mean(state.params["client"], w)
+            params = {"client": stack_client_params(new_client_avg, C),
+                      "server": state.params["server"]}
+            opt_state = _round_boundary_opt_state(opt, state.opt_state,
+                                                  params, w,
+                                                  opt_state_policy)
+            state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step)
+        if fed_state is None:
+            return state, metrics
+        return state, {"sched": sched_state, "agg": agg_state}, metrics
 
     return round_fn
 

@@ -18,18 +18,52 @@ def stack_client_params(client_params, num_clients: int):
         lambda a: jnp.broadcast_to(a[None], (num_clients,) + a.shape), client_params)
 
 
-def fedavg(stacked_params, data_sizes=None):
-    """eq. (10): weighted average over the leading client axis."""
-    if data_sizes is None:
-        return jax.tree.map(lambda a: a.mean(axis=0), stacked_params)
-    w = data_sizes.astype(jnp.float32)
-    w = w / jnp.maximum(w.sum(), 1e-8)
+def normalize_client_weights(weights, mask=None, eps: float = 1e-8):
+    """Mask-safe normalization of per-client aggregation weights.
+
+    weights: (C,) raw non-negative weights (e.g. data sizes); mask: (C,)
+    0/1 participation mask or None. Returns (C,) weights summing to 1.
+    Zero-participation clients (weight 0, or masked out) are excluded
+    WITHOUT producing NaNs: if the masked total is zero the weights fall
+    back to uniform over the participating clients (or over all clients
+    when nobody participates), never to an all-zero/NaN vector.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    total = w.sum()
+    C = w.shape[0]
+    if mask is None:
+        fallback = jnp.full_like(w, 1.0 / C)
+    else:
+        m = mask.astype(jnp.float32)
+        msum = m.sum()
+        fallback = jnp.where(msum > 0, m / jnp.maximum(msum, 1.0),
+                             jnp.full_like(w, 1.0 / C))
+    return jnp.where(total > 0, w / jnp.maximum(total, eps), fallback)
+
+
+def weighted_mean(stacked_params, weights):
+    """Weighted sum over the leading client axis; ``weights`` (C,) must
+    already be normalized (see :func:`normalize_client_weights`)."""
 
     def avg(a):
-        wb = w.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        wb = weights.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
         return (a * wb).sum(axis=0)
 
     return jax.tree.map(avg, stacked_params)
+
+
+def fedavg(stacked_params, data_sizes=None):
+    """eq. (10): weighted average over the leading client axis.
+
+    ``data_sizes`` may contain zero-participation clients (zeros); the
+    normalization is mask-safe (all-zero sizes fall back to the uniform
+    mean instead of an all-zero result)."""
+    if data_sizes is None:
+        return jax.tree.map(lambda a: a.mean(axis=0), stacked_params)
+    return weighted_mean(stacked_params,
+                         normalize_client_weights(data_sizes))
 
 
 def redistribute(stacked_params, data_sizes=None):

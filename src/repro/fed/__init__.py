@@ -1,0 +1,53 @@
+"""repro.fed — the pluggable federation layer on top of the split-step
+engine: client-model aggregation (:mod:`repro.fed.aggregators`) and
+participation scheduling (:mod:`repro.fed.participation`), composed by
+:func:`repro.core.engine.make_round_runner`.
+
+The round-level state the runner threads (scheduler PRNG key, aggregator
+round ages, ...) lives in a plain dict ``{"sched": ..., "agg": ...}``
+built by :func:`init_fed_state`.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.fed.aggregators import (  # noqa: F401
+    AGGREGATORS,
+    AggContext,
+    Aggregator,
+    aggregation_priors,
+    bias_compensated,
+    fedavg,
+    make_aggregator,
+    staleness_weighted,
+    weighted,
+)
+from repro.fed.participation import (  # noqa: F401
+    SCHEDULERS,
+    ParticipationScheduler,
+    dirichlet,
+    full,
+    make_participation,
+    uniform,
+)
+
+
+def is_stateful(aggregator: Optional[Aggregator],
+                participation: Optional[ParticipationScheduler]) -> bool:
+    """True iff the runner must thread a fed-state pytree across rounds."""
+    return ((aggregator is not None and aggregator.stateful)
+            or (participation is not None and participation.stateful))
+
+
+def init_fed_state(key, aggregator: Optional[Aggregator] = None,
+                   participation: Optional[ParticipationScheduler] = None,
+                   num_clients: Optional[int] = None) -> dict:
+    """Build the federation-state pytree threaded through rounds."""
+    if num_clients is None:
+        if participation is None:
+            raise ValueError("init_fed_state needs num_clients when no "
+                             "participation scheduler is given")
+        num_clients = participation.num_clients
+    sched: Any = participation.init(key) if participation is not None else ()
+    agg: Any = aggregator.init(num_clients) if aggregator is not None else ()
+    return {"sched": sched, "agg": agg}

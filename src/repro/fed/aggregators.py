@@ -1,0 +1,225 @@
+"""Pluggable client-model aggregation (the FL phase of the round).
+
+The engine's round runner (:func:`repro.core.engine.make_round_runner`)
+used to hard-code FedAvg (eq. 10). Under *partial participation* — the
+setting SCALA's claims are about — the right aggregation weights change
+per round (which clients showed up, how much data they hold, how biased
+or how stale their updates are), so the FL phase is factored out into
+an :class:`Aggregator` the round runner composes with:
+
+  ============================  ============================================
+  aggregator                    per-client weight (before normalization)
+  ============================  ============================================
+  :func:`fedavg`                ``mask_k``                (uniform over the
+                                participating subset)
+  :func:`weighted`              ``mask_k * n_k``          (eq. 10, data-size
+                                proportional — the engine's legacy default)
+  :func:`bias_compensated`      ``mask_k * n_k * exp(-gamma * TV(P_k, P))``
+                                (BESplit-style: clients whose round label
+                                distribution P_k diverges from the global
+                                prior P push a biased update; their weight
+                                decays with the total-variation distance)
+  :func:`staleness_weighted`    ``mask_k * n_k * decay^age_k``  (GAS-style:
+                                age_k = rounds since client k last
+                                participated, tracked in aggregator state)
+  ============================  ============================================
+
+All weights go through the mask-safe
+:func:`repro.core.split.normalize_client_weights`, so zero-participation
+clients (mask 0 or data size 0) are excluded without NaNs.
+
+Every aggregator is a pure-jax, jittable/scan-compatible op over the
+stacked ``(C, ...)`` client-param layout: ``aggregate`` returns the
+*averaged* (unstacked) client model plus new aggregator state; callers
+that need the stacked layout broadcast it back with
+:func:`repro.core.split.stack_client_params`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.label_stats import client_and_concat_priors
+from repro.core.split import normalize_client_weights, weighted_mean
+
+AGGREGATORS = ("fedavg", "weighted", "bias_compensated", "staleness_weighted")
+
+
+def aggregation_priors(num_classes: int, labels, weights=None,
+                       client_axis: int = 0):
+    """(P_k (C,N), P_global (N,)) over one round's labels for the
+    prior-aware aggregators. ``labels``/``weights`` carry the client
+    dimension at ``client_axis`` (engine round batches: axis 1; baseline
+    batches: axis 0); zero-weight entries (padding rows, masked-out
+    clients) are excluded from the histograms."""
+    C = labels.shape[client_axis]
+    lab = jnp.moveaxis(labels, client_axis, 0).reshape(C, -1)
+    w = (None if weights is None
+         else jnp.moveaxis(weights, client_axis, 0).reshape(C, -1))
+    return client_and_concat_priors(lab, num_classes, w)
+
+
+@dataclass(frozen=True)
+class AggContext:
+    """Per-round inputs an aggregator may consume.
+
+    num_clients: C, the static stacked-slot count;
+    mask: (C,) 0/1 participation mask (None = full participation);
+    data_sizes: (C,) per-client dataset sizes (None = uniform);
+    p_k: (C, N) per-client label priors over the round's batches;
+    p_global: (N,) global (population) label prior — the concatenated
+    histogram over ALL clients, unmasked (``core.label_stats``).
+    ``p_k``/``p_global`` are only materialized when the aggregator
+    declares ``needs_priors`` (the round runner skips the histograms
+    otherwise, keeping the default path's HLO unchanged).
+    """
+
+    num_clients: int = 0
+    mask: Optional[Any] = None
+    data_sizes: Optional[Any] = None
+    p_k: Optional[Any] = None
+    p_global: Optional[Any] = None
+
+    @property
+    def C(self) -> int:
+        if self.num_clients:
+            return self.num_clients
+        for a in (self.mask, self.data_sizes, self.p_k):
+            if a is not None:
+                return a.shape[0]
+        raise ValueError("AggContext cannot resolve the client count; set "
+                         "num_clients")
+
+    def base_weights(self):
+        """data_sizes with a uniform fallback when None."""
+        if self.data_sizes is not None:
+            return self.data_sizes.astype(jnp.float32)
+        return jnp.ones((self.C,), jnp.float32)
+
+
+@dataclass(frozen=True)
+class Aggregator:
+    """The FL-phase protocol: per-round client weights + optional state.
+
+    ``init(num_clients) -> state`` builds the (possibly empty) carry;
+    ``client_weights(ctx, state) -> (weights (C,), state)`` returns
+    *normalized* aggregation weights — the single variation point. The
+    engine's round runner consumes ``client_weights`` directly (it needs
+    the weights again for the ``"average"`` opt-state policy);
+    ``aggregate`` is the packaged weighted-mean FL phase for callers that
+    only want the averaged model (baselines, tests).
+    """
+
+    name: str
+    init: Callable[[int], Any]
+    client_weights: Callable[[AggContext, Any], Tuple[Any, Any]]
+    needs_priors: bool = False
+    stateful: bool = False
+
+    def aggregate(self, stacked_params, ctx: AggContext, state=()):
+        """(stacked (C,...) client params, ctx, state) ->
+        (averaged client params, new state)."""
+        w, state = self.client_weights(ctx, state)
+        return weighted_mean(stacked_params, w), state
+
+
+def _stateless_init(num_clients: int):
+    return ()
+
+
+def fedavg() -> Aggregator:
+    """Uniform average over the participating subset (classic FedAvg
+    with equal client weights)."""
+
+    def client_weights(ctx: AggContext, state):
+        w = jnp.ones((ctx.C,), jnp.float32)
+        return normalize_client_weights(w, ctx.mask), state
+
+    return Aggregator(name="fedavg", init=_stateless_init,
+                      client_weights=client_weights)
+
+
+def weighted() -> Aggregator:
+    """Data-size-proportional FedAvg (paper eq. 10) — the engine's
+    legacy aggregation; reduces to :func:`fedavg` when no sizes given."""
+
+    def client_weights(ctx: AggContext, state):
+        w = ctx.base_weights()
+        return normalize_client_weights(w, ctx.mask), state
+
+    return Aggregator(name="weighted", init=_stateless_init,
+                      client_weights=client_weights)
+
+
+def bias_compensated(gamma: float = 2.0) -> Aggregator:
+    """BESplit-style bias-compensated FedAvg.
+
+    Client k's round update is biased toward its own label distribution
+    P_k; the compensation decays its aggregation weight with the
+    total-variation distance to the *global* prior P (from
+    :mod:`repro.core.label_stats` over the full population):
+
+        w_k  ∝  mask_k * n_k * exp(-gamma * TV(P_k, P))
+
+    gamma=0 recovers :func:`weighted`.
+    """
+
+    def client_weights(ctx: AggContext, state):
+        if ctx.p_k is None or ctx.p_global is None:
+            raise ValueError("bias_compensated needs ctx.p_k/p_global "
+                             "(round label priors)")
+        tv = 0.5 * jnp.abs(ctx.p_k.astype(jnp.float32)
+                           - ctx.p_global.astype(jnp.float32)[None]).sum(-1)
+        w = ctx.base_weights() * jnp.exp(-gamma * tv)
+        return normalize_client_weights(w, ctx.mask), state
+
+    return Aggregator(name="bias_compensated", init=_stateless_init,
+                      client_weights=client_weights, needs_priors=True)
+
+
+def staleness_weighted(decay: float = 0.5) -> Aggregator:
+    """GAS-style staleness decay on per-client round age.
+
+    State carries ``age`` (C,) — rounds since each client last
+    participated. A returning client's contribution is decayed by
+    ``decay**age`` (age 0 = participated last round too, full weight),
+    modeling the staleness discount of asynchronous aggregation inside
+    the synchronous scanned round. Ages update per round: participants
+    reset to 0, absentees increment.
+
+    Only meaningful with a participation scheduler over *stable* client
+    identities (the fed layer's static-slot masking): under full
+    participation every age stays 0 and this reduces to
+    :func:`weighted`, and host-side subset re-stacking has no slot ->
+    client correspondence for the ages to track.
+    """
+
+    def init(num_clients: int):
+        return {"age": jnp.zeros((num_clients,), jnp.float32)}
+
+    def client_weights(ctx: AggContext, state):
+        age = state["age"]
+        w = ctx.base_weights() * jnp.power(jnp.float32(decay), age)
+        w = normalize_client_weights(w, ctx.mask)
+        mask = (ctx.mask if ctx.mask is not None
+                else jnp.ones((age.shape[0],), jnp.float32))
+        new_age = jnp.where(mask > 0, 0.0, age + 1.0)
+        return w, {"age": new_age}
+
+    return Aggregator(name="staleness_weighted", init=init,
+                      client_weights=client_weights, stateful=True)
+
+
+def make_aggregator(name: str, **kw) -> Aggregator:
+    """Registry: build an aggregator by name (launcher/benchmark flags)."""
+    if name == "fedavg":
+        return fedavg()
+    if name == "weighted":
+        return weighted()
+    if name == "bias_compensated":
+        return bias_compensated(gamma=kw.get("gamma", 2.0))
+    if name in ("staleness_weighted", "staleness"):
+        return staleness_weighted(decay=kw.get("decay", 0.5))
+    raise ValueError(f"unknown aggregator {name!r}; expected {AGGREGATORS}")

@@ -1,0 +1,129 @@
+"""Participation scheduling: which clients join each round.
+
+SCALA's partial-participation setting (paper §5, Table 2) changes the
+label distribution of the participating subset every round, so the
+engine must recompute priors / logit adjustments per subset. The
+schedulers here realize that as *jittable, scan-compatible* ops: the
+client count C is static (the stacked (C, ...) param layout never
+changes shape) and participation is a per-round boolean mask (stored as
+0/1 float32) threaded through :func:`repro.core.engine.split_step_grads`
+— masked-out clients contribute zero weight to the priors, the losses,
+and the aggregation.
+
+  =================  =====================================================
+  scheduler          per-round subset
+  =================  =====================================================
+  :func:`full`       everyone, every round (mask of ones; stateless)
+  :func:`uniform`    ``m = max(1, round(frac * C))`` clients uniformly
+                     without replacement (random permutation prefix)
+  :func:`dirichlet`  availability skew: per-round client-availability
+                     probabilities ~ Dirichlet(alpha·1), then m clients
+                     without replacement via Gumbel-top-k on those
+                     probabilities (small alpha => a few clients dominate
+                     round after round — the heterogeneous-availability
+                     regime)
+  =================  =====================================================
+
+Scheduler state is a pytree (the PRNG key for the random schedulers)
+threaded through rounds by the runner; ``init(key)`` builds it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCHEDULERS = ("full", "uniform", "dirichlet")
+
+
+@dataclass(frozen=True)
+class ParticipationScheduler:
+    """``sample(state) -> (mask (C,) float32 0/1, new_state)``."""
+
+    name: str
+    num_clients: int
+    init: Callable[[Any], Any]
+    sample: Callable[[Any], Tuple[Any, Any]]
+    stateful: bool = True
+
+
+def _subset_size(num_clients: int, frac: float) -> int:
+    m = max(1, round(num_clients * frac))
+    return min(m, num_clients)
+
+
+def full(num_clients: int) -> ParticipationScheduler:
+    """Full participation — the legacy engine behavior, as a scheduler."""
+
+    def init(key):
+        return ()
+
+    def sample(state):
+        return jnp.ones((num_clients,), jnp.float32), state
+
+    return ParticipationScheduler(name="full", num_clients=num_clients,
+                                  init=init, sample=sample, stateful=False)
+
+
+def uniform(num_clients: int, frac: float) -> ParticipationScheduler:
+    """Uniform-without-replacement sampling of round(frac*C) clients."""
+    m = _subset_size(num_clients, frac)
+
+    def init(key):
+        return {"key": key}
+
+    def sample(state):
+        key, sub = jax.random.split(state["key"])
+        perm = jax.random.permutation(sub, num_clients)
+        mask = jnp.zeros((num_clients,), jnp.float32).at[perm[:m]].set(1.0)
+        return mask, {"key": key}
+
+    return ParticipationScheduler(name="uniform", num_clients=num_clients,
+                                  init=init, sample=sample)
+
+
+def dirichlet(num_clients: int, frac: float,
+              alpha: float = 0.3) -> ParticipationScheduler:
+    """Dirichlet-skewed availability: p ~ Dir(alpha·1) per round, then m
+    clients without replacement ∝ p (Gumbel-top-k)."""
+    m = _subset_size(num_clients, frac)
+
+    def init(key):
+        return {"key": key}
+
+    def sample(state):
+        key, k_avail, k_gumbel = jax.random.split(state["key"], 3)
+        g = jax.random.gamma(k_avail, jnp.float32(alpha), (num_clients,))
+        avail = g / jnp.maximum(g.sum(), 1e-8)
+        score = jnp.log(avail + 1e-20) + jax.random.gumbel(
+            k_gumbel, (num_clients,))
+        top = jnp.argsort(-score)[:m]
+        mask = jnp.zeros((num_clients,), jnp.float32).at[top].set(1.0)
+        return mask, {"key": key}
+
+    return ParticipationScheduler(name="dirichlet", num_clients=num_clients,
+                                  init=init, sample=sample)
+
+
+def make_participation(spec: str, num_clients: int) -> ParticipationScheduler:
+    """Parse a launcher-flag spec into a scheduler.
+
+    ``"full"`` | ``"uniform:FRAC"`` | ``"dirichlet:FRAC[:ALPHA]"``.
+    """
+    parts = spec.split(":")
+    name = parts[0]
+    if name == "full":
+        return full(num_clients)
+    if name == "uniform":
+        if len(parts) != 2:
+            raise ValueError("uniform spec is 'uniform:FRAC'")
+        return uniform(num_clients, float(parts[1]))
+    if name == "dirichlet":
+        if len(parts) not in (2, 3):
+            raise ValueError("dirichlet spec is 'dirichlet:FRAC[:ALPHA]'")
+        alpha = float(parts[2]) if len(parts) == 3 else 0.3
+        return dirichlet(num_clients, float(parts[1]), alpha=alpha)
+    raise ValueError(f"unknown participation scheduler {name!r}; "
+                     f"expected {SCHEDULERS}")

@@ -5,16 +5,38 @@ participation, eq. (3) batch sizing, T local iterations with concatenated
 activations + dual logit-adjusted losses, FedAvg every round — on
 synthetic domain-skewed token data.
 
-Built on the split-step engine (:mod:`repro.core.engine`): the fused-LACE
-loss backend, a real optimizer from :mod:`repro.optim` (SGD default, the
-paper's setting), an lr schedule driven by the global step counter, and
-the whole round (T local iterations + FedAvg) compiled into ONE XLA
-program via ``scala_round_scan`` — one dispatch per round instead of T+1
-(``--no-scan`` falls back to the per-step Python loop for A/B timing).
+Built on the split-step engine (:mod:`repro.core.engine`) and the
+federation layer (:mod:`repro.fed`): the fused-LACE loss backend, a real
+optimizer from :mod:`repro.optim` (SGD default, the paper's setting), an
+lr schedule driven by the global step counter, and the whole round
+(T local iterations + the pluggable FL phase) compiled into ONE XLA
+program via ``make_round_runner`` — one dispatch per round instead of
+T+1 (``--no-scan`` falls back to the per-step Python loop for A/B
+timing).
+
+Participation comes in two modes, selected by ``--participation``:
+
+* a bare fraction (``--participation 0.25``) — legacy host-side subset
+  sampling: each round stacks only the C = r*K sampled clients;
+* a scheduler spec (``full`` | ``uniform:FRAC`` |
+  ``dirichlet:FRAC[:ALPHA]``) — the fed layer's in-program mode: all K
+  clients stay stacked and a per-round 0/1 mask (sampled inside the
+  compiled round) selects the subset, recomputing priors / logit
+  adjustments per subset. Note the batch-size semantics differ: eq. (3)
+  splits ``--server-batch`` across all K *slots* before masking, so the
+  participating subset sees ~FRAC * server_batch tokens per local step
+  (vs the full server_batch across the C participants in fraction
+  mode). Scale ``--server-batch`` by 1/FRAC for parity.
+
+``--aggregator`` picks the FL-phase weighting (fedavg | weighted |
+bias_compensated | staleness_weighted) and ``--opt-state-policy`` the
+client optimizer state's round-boundary behavior (carry | reset |
+average).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
-      --rounds 20 --clients 16 --participation 0.25 --seq 128 \
-      --optimizer momentum --schedule cosine --warmup 10
+      --rounds 20 --clients 16 --participation uniform:0.25 --seq 128 \
+      --aggregator bias_compensated --optimizer momentum \
+      --schedule cosine --warmup 10
 """
 from __future__ import annotations
 
@@ -26,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import fed
 from repro.checkpoint import save
 from repro.configs import ScalaConfig, get_config
 from repro.core import engine
@@ -67,7 +90,17 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=16)
-    ap.add_argument("--participation", type=float, default=0.25)
+    ap.add_argument("--participation", default="0.25",
+                    help="bare fraction (legacy host-side subset sampling) "
+                         "or scheduler spec: full | uniform:FRAC | "
+                         "dirichlet:FRAC[:ALPHA] (in-program masking)")
+    ap.add_argument("--aggregator", default="weighted",
+                    choices=("fedavg", "weighted", "bias_compensated",
+                             "staleness_weighted"))
+    ap.add_argument("--opt-state-policy", default="carry",
+                    choices=engine.OPT_STATE_POLICIES,
+                    help="client optimizer state at the round boundary "
+                         "(see engine.make_round_runner)")
     ap.add_argument("--local-iters", type=int, default=5)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--server-batch", type=int, default=16)
@@ -102,8 +135,33 @@ def main():
     print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
           f"vocab={cfg.vocab_size}")
 
+    # --- participation: bare fraction (legacy subset stacking) or a fed
+    # scheduler spec (static K slots + in-program masking) ---
+    try:
+        part_frac = float(args.participation)
+        scheduler = None
+    except ValueError:
+        part_frac = 1.0
+        scheduler = fed.make_participation(args.participation, args.clients)
+    aggregator = fed.make_aggregator(args.aggregator)
+    if args.no_scan and (scheduler is not None
+                         or args.aggregator != "weighted"
+                         or args.opt_state_policy != "carry"):
+        raise SystemExit("--no-scan supports only the legacy federation "
+                         "settings (fraction participation, weighted "
+                         "aggregator, carry opt-state policy)")
+    if aggregator.stateful and scheduler is None:
+        # legacy fraction mode re-samples WHICH clients occupy the C
+        # stacked slots every round, so per-slot aggregator state (e.g.
+        # staleness round ages) would track slots, not clients — and with
+        # full slots the ages never leave 0 (silently plain weighted).
+        raise SystemExit(f"--aggregator {args.aggregator} is stateful and "
+                         "needs stable client identities: use a scheduler "
+                         "spec (--participation uniform:FRAC | "
+                         "dirichlet:FRAC[:A])")
+
     sc = ScalaConfig(
-        num_clients=args.clients, participation=args.participation,
+        num_clients=args.clients, participation=part_frac,
         local_iters=args.local_iters, server_batch=args.server_batch,
         lr=args.lr, adjust_server=not args.no_adjust,
         adjust_client=not args.no_adjust)
@@ -112,20 +170,28 @@ def main():
                       args.seed)
     model = transformer_split_model(cfg)
     key = jax.random.PRNGKey(args.seed)
-    C = sc.clients_per_round
+    C = args.clients if scheduler is not None else sc.clients_per_round
     params = engine.init_scala_params(
         key,
         lambda k: T.init_params(k, cfg)["client"],
         lambda k: T.init_params(k, cfg)["server"],
         C)
     n_params = sum(x.size for x in jax.tree.leaves(params["server"]))
-    print(f"server params: {n_params/1e6:.1f}M, clients/round: {C}, "
+    print(f"server params: {n_params/1e6:.1f}M, "
+          f"participation: {args.participation} (slots: {C}), "
+          f"aggregator: {args.aggregator}, "
+          f"opt-state: {args.opt_state_policy}, "
           f"optimizer: {args.optimizer}, schedule: {args.schedule}")
 
     opt = make_optimizer(args.optimizer, momentum=args.momentum,
                          weight_decay=args.weight_decay)
     sched = build_schedule(args, args.rounds * sc.local_iters)
     state = engine.init_train_state(params, opt)
+
+    thread_fed = scheduler is not None or aggregator.stateful
+    fed_state = (fed.init_fed_state(jax.random.PRNGKey(args.seed + 1),
+                                    aggregator, scheduler, num_clients=C)
+                 if thread_fed else None)
 
     if args.no_scan:
         step = jax.jit(engine.make_split_step(model, sc, backend="lace",
@@ -137,12 +203,16 @@ def main():
             unroll = True if args.unroll == 0 else args.unroll
         round_fn = jax.jit(engine.make_round_runner(
             model, sc, backend="lace", optimizer=opt, schedule=sched,
-            unroll=unroll))
+            unroll=unroll, aggregator=aggregator, participation=scheduler,
+            opt_state_policy=args.opt_state_policy))
     rng = np.random.default_rng(args.seed)
 
     for rnd in range(args.rounds):
         t0 = time.time()
-        selected = sample_clients(args.clients, C, rng)
+        if scheduler is not None:
+            selected = np.arange(args.clients)   # all slots; mask in-program
+        else:
+            selected = sample_clients(args.clients, C, rng)
         batches = lm_round_batches(data, selected, sc.server_batch,
                                    sc.local_iters, rng)
         sizes = jnp.asarray(batches.pop("sizes"))
@@ -155,7 +225,11 @@ def main():
                 state, params=engine.scala_aggregate(state.params, sizes))
         else:
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            state, metrics = round_fn(state, batches, sizes)
+            if thread_fed:
+                state, fed_state, metrics = round_fn(state, batches, sizes,
+                                                     fed_state)
+            else:
+                state, metrics = round_fn(state, batches, sizes)
         dt = time.time() - t0
         print(f"round {rnd:3d} loss_s={float(metrics['loss_server']):.4f} "
               f"loss_c={float(metrics['loss_client']):.4f} ({dt:.1f}s)",
