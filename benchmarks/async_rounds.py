@@ -1,0 +1,149 @@
+"""Async execution-layer benchmark: sparse-slot compute and event
+throughput.
+
+Two questions, both about the round execution path (no paper table —
+backs the asynchronous split-federated execution layer):
+
+1. **sparse-slot vs masked** — the fed layer's static-slot masking pays
+   full-K client compute at every participation fraction
+   (``BENCH_participation.json``); the engine's ``slot_gather`` path
+   gathers the fixed-size subset into a dense axis before the local scan.
+   For frac in {0.25, 0.5, 1.0} this times one scanned round each way
+   and reports the speedup (the acceptance bar: frac=0.25 sparse ≤ 0.5×
+   the masked round's time on CPU).
+
+2. **event throughput vs delay distribution** — the async runner
+   (``fed.make_async_runner``) pops a fixed-size arrival cohort per
+   event; the delay distribution decides arrival order and staleness,
+   not the per-event compute (cohort is static), so events/sec should be
+   flat across distributions while mean staleness grows with the tail.
+   Reported per delay spec: events/sec, local steps/sec, and the mean
+   cohort staleness over the run.
+
+Writes ``BENCH_async.json`` next to this file (or to ``--out``).
+
+  PYTHONPATH=src python -m benchmarks.async_rounds [--rounds 10] [--K 8]
+  PYTHONPATH=src python -m benchmarks.async_rounds --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.round_loop import _setup
+from repro import fed, optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+
+FRACTIONS = (0.25, 0.5, 1.0)
+DELAY_SPECS = ("constant:1", "uniform:0.5:2", "lognormal:1:1.5")
+
+
+def _time_calls(fn, n: int):
+    """Warm once, then time n calls of the nullary closure (which must
+    return something blockable)."""
+    jax.block_until_ready(jax.tree.leaves(fn())[0])
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0
+
+
+def bench_async(rounds: int = 10, K: int = 8, Bk: int = 16, T: int = 5,
+                lr: float = 0.05, cohort: int = 0):
+    """Returns the result dict (also printed/serialized by main)."""
+    model, params, rb, sizes = _setup(K, Bk, T)
+    sc = ScalaConfig(num_clients=K, participation=1.0, local_iters=T, lr=lr)
+    state = engine.init_train_state(params, optim.sgd())
+    res = {
+        "bench": "async_rounds",
+        "config": {"rounds": rounds, "clients": K, "per_client_batch": Bk,
+                   "local_iters": T, "lr": lr, "model": "alexnet-w0.125"},
+        "backend": jax.default_backend(),
+        "sparse_vs_masked": {},
+        "async_events": {},
+    }
+
+    # --- 1. sparse-slot gather vs static-slot masking ---
+    for frac in FRACTIONS:
+        part = fed.uniform(K, frac)
+        agg = fed.fedavg()
+        entry = {}
+        for name, gather in (("masked", False), ("sparse", True)):
+            round_fn = jax.jit(engine.make_round_runner(
+                model, sc, backend="logits", unroll=True, aggregator=agg,
+                participation=part, slot_gather=gather))
+            fs = fed.init_fed_state(jax.random.PRNGKey(1), agg, part)
+
+            def call(round_fn=round_fn, fs=fs):
+                s, _, _ = round_fn(state, rb, sizes, fs)
+                return s.params
+
+            secs = _time_calls(call, rounds)
+            entry[name] = {"seconds": round(secs, 4),
+                           "rounds_per_sec": round(rounds / secs, 2)}
+        entry["sparse_over_masked"] = round(
+            entry["sparse"]["seconds"] / entry["masked"]["seconds"], 3)
+        res["sparse_vs_masked"][f"frac={frac}"] = entry
+
+    # --- 2. async event throughput vs delay distribution ---
+    m = cohort if cohort > 0 else max(1, K // 4)
+    res["config"]["cohort"] = m
+    for spec in DELAY_SPECS:
+        dm = fed.make_delays(spec)
+        async_fn = jax.jit(fed.make_async_runner(
+            model, sc, backend="logits", delays=dm, cohort=m,
+            staleness_decay=0.5, unroll=True))
+        afed0 = fed.init_async_state(jax.random.PRNGKey(2),
+                                     params["client"], dm)
+
+        # warm
+        s, af, mt = async_fn(state, afed0, rb, sizes)
+        jax.block_until_ready(jax.tree.leaves(s.params)[0])
+        t0 = time.perf_counter()
+        s, af = state, afed0
+        stales = []           # device scalars; no host sync inside the loop
+        for _ in range(rounds):
+            s, af, mt = async_fn(s, af, rb, sizes)
+            stales.append(mt["staleness_mean"])
+        jax.block_until_ready(jax.tree.leaves(s.params)[0])
+        secs = time.perf_counter() - t0
+        res["async_events"][spec] = {
+            "seconds": round(secs, 4),
+            "events_per_sec": round(rounds / secs, 2),
+            "local_steps_per_sec": round(rounds * T / secs, 2),
+            "mean_cohort_staleness": round(
+                float(jnp.mean(jnp.stack(stales))), 3),
+        }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--K", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--T", type=int, default=5)
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="arrivals per async event (0 = K/4)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal sizes, no json written (CI bit-rot check)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        res = bench_async(rounds=2, K=4, Bk=4, T=2)
+    else:
+        res = bench_async(rounds=args.rounds, K=args.K, Bk=args.batch,
+                          T=args.T, cohort=args.cohort)
+    from benchmarks.common import emit_bench
+    emit_bench(res, args.out, "BENCH_async.json", args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,26 @@ SCALA_METHODS = ("scala", "scala_noadj")
 ALL_METHODS = SCALA_METHODS + B.FL_METHODS + B.SFL_METHODS
 
 
+def emit_bench(res: Dict, out: Optional[str], default_name: str,
+               smoke: bool) -> None:
+    """Shared tail of every ``benchmarks/*.py`` main(): print the result
+    json; persist it next to the benchmarks (or to ``--out``) unless this
+    is a ``--smoke`` run without an explicit ``--out`` (CI must not
+    clobber the committed BENCH files with smoke-sized numbers)."""
+    import json
+    import os
+
+    print(json.dumps(res, indent=2))
+    if smoke and out is None:
+        print("smoke OK (no json written)")
+        return
+    path = out or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               default_name)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {path}")
+
+
 def make_dataset(n_train=2000, n_test=1000, num_classes=10, seed=0):
     x, y = gaussian_images(n_train + n_test, num_classes=num_classes,
                            seed=seed)
@@ -67,12 +87,33 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
                    num_classes: int = 10, n_train: int = 2000,
                    split: str = "s2", seed: int = 0,
                    aggregator: Optional[str] = None,
-                   opt_state_policy: str = "carry") -> Dict:
+                   opt_state_policy: str = "carry",
+                   execution: str = "subset",
+                   server_optimizer: Optional[str] = None,
+                   server_lr: float = 1.0) -> Dict:
     """Returns {'acc', 'balanced_acc', 'seconds'} on the held-out test set.
 
     ``aggregator``: optional :mod:`repro.fed` aggregator name for the FL
     phase (None = legacy data-size FedAvg); ``opt_state_policy`` is the
-    SCALA engine's client opt-state round-boundary policy."""
+    SCALA engine's client opt-state round-boundary policy.
+
+    ``execution`` (SCALA methods): how partial participation runs —
+
+    * ``"subset"`` — legacy host-side sampling: each round stacks only
+      the C = r*K sampled clients (C compute slots);
+    * ``"masked"`` — all K slots stay stacked, an in-program
+      ``fed.uniform(K, r)`` mask picks the subset (full-K compute);
+    * ``"sparse"`` — same scheduler, but the engine gathers the subset
+      into a dense [C] axis before the local scan (``slot_gather``) —
+      subset compute at static shapes.
+
+    The per-round participant batch is held comparable across modes
+    (masked/sparse split ``server_batch / r`` over the K slots, eq. 3).
+
+    ``server_optimizer``: optional :mod:`repro.optim` optimizer name for
+    the server side — FedOpt over the SCALA server half's round delta,
+    or over the FL baselines' aggregated-model round delta (FedAvgM /
+    FedAdam) — applied at ``server_lr``."""
     (x, y), (x_test, y_test) = make_dataset(n_train=n_train, seed=seed)
     parts = partition(y, K, alpha=alpha, beta=beta, num_classes=num_classes,
                       seed=seed)
@@ -81,6 +122,10 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
     key = jax.random.PRNGKey(seed)
     C = max(1, round(K * r))
     agg = fed.make_aggregator(aggregator) if aggregator else None
+    server_opt = (optim.make_optimizer(server_optimizer)
+                  if server_optimizer else None)
+    if execution not in ("subset", "masked", "sparse"):
+        raise ValueError(f"unknown execution mode {execution!r}")
     t0 = time.time()
 
     full = A.init_params(key, num_classes=num_classes, width=width)
@@ -103,14 +148,17 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
                          adjust_server=adjust, adjust_client=adjust)
         model = _alexnet_split_model(num_classes, split)
         wc, ws = A.split_params(full, split)
+        in_program = execution in ("masked", "sparse")
+        slots = K if in_program else C
         params = {"client": jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+            lambda a: jnp.broadcast_to(a[None], (slots,) + a.shape), wc),
             "server": ws}
         # engine round runner: T local iterations + FedAvg in ONE scanned
         # XLA program (backend "logits": AlexNet materializes its 10-way
         # logits; no trunk/head split needed). Full unroll: XLA:CPU runs
         # rolled-loop bodies with reduced parallelism (benchmarks/round_loop).
-        if agg is not None and agg.stateful:
+        scheduler = fed.uniform(K, r) if in_program else None
+        if agg is not None and agg.stateful and not in_program:
             # the runner re-stacks a freshly sampled subset every round,
             # so per-slot aggregator state would not track clients
             raise ValueError(f"aggregator {agg.name!r} is stateful; "
@@ -119,13 +167,29 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
         state = engine.init_train_state(params, optim.sgd())
         round_fn = jax.jit(engine.make_round_runner(
             model, sc, backend="logits", unroll=True, aggregator=agg,
+            participation=scheduler, slot_gather=execution == "sparse",
+            server_optimizer=server_opt, server_lr=server_lr,
             opt_state_policy=opt_state_policy))
+        thread_fed = in_program or server_opt is not None
+        fed_state = (fed.init_fed_state(jax.random.fold_in(key, 11), agg,
+                                        scheduler, num_clients=slots,
+                                        server_optimizer=server_opt,
+                                        server_params=ws)
+                     if thread_fed else None)
+        # eq. (3) parity across modes: in-program modes split the budget
+        # over all K slots, so the r-subset sees ~server_batch samples
+        batch_budget = round(server_batch / r) if in_program else server_batch
         for _ in range(rounds):
-            sel = sample_clients(K, C, rng)
-            rb = round_batches(data, sel, server_batch, T, rng)
+            sel = (np.arange(K) if in_program
+                   else sample_clients(K, C, rng))
+            rb = round_batches(data, sel, batch_budget, T, rng)
             sizes = jnp.asarray(rb.pop("sizes"))
             batches = {k: jnp.asarray(v) for k, v in rb.items()}
-            state, _ = round_fn(state, batches, sizes)
+            if thread_fed:
+                state, fed_state, _ = round_fn(state, batches, sizes,
+                                               fed_state)
+            else:
+                state, _ = round_fn(state, batches, sizes)
         wc0 = jax.tree.map(lambda a: a[0], state.params["client"])
         merged = A.merge_params(wc0, state.params["server"])
         return finish(lambda xs: A.forward(merged, xs, split))
@@ -133,10 +197,12 @@ def run_experiment(method: str, *, alpha: Optional[int] = None,
     if method in B.FL_METHODS:
         model = _alexnet_fed_model(num_classes, split)
         w = full
-        state = B.init_fl_state(method, w, C)
+        state = B.init_fl_state(method, w, C, server_optimizer=server_opt)
         round_fn = jax.jit(
             lambda wg, rb, ds, st: B.make_fl_round(
-                method, model, lr=lr, aggregator=agg)(wg, rb, ds, st))
+                method, model, lr=lr, aggregator=agg,
+                server_optimizer=server_opt,
+                server_lr=server_lr)(wg, rb, ds, st))
         for _ in range(rounds):
             sel = sample_clients(K, C, rng)
             rb = round_batches(data, sel, server_batch, T, rng)

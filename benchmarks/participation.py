@@ -21,8 +21,6 @@ file (or to ``--out``).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
@@ -105,17 +103,18 @@ def main():
     ap.add_argument("--K", type=int, default=8)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--T", type=int, default=5)
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.abspath(__file__)),
-        "BENCH_participation.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal sizes, no json written (CI bit-rot check)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    res = bench_participation(rounds=args.rounds, K=args.K, Bk=args.batch,
-                              T=args.T)
-    print(json.dumps(res, indent=2))
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
-    print(f"wrote {args.out}")
+    if args.smoke:
+        res = bench_participation(rounds=2, K=4, Bk=4, T=2)
+    else:
+        res = bench_participation(rounds=args.rounds, K=args.K,
+                                  Bk=args.batch, T=args.T)
+    from benchmarks.common import emit_bench
+    emit_bench(res, args.out, "BENCH_participation.json", args.smoke)
 
 
 if __name__ == "__main__":

@@ -188,6 +188,27 @@ def bench_participation(quick: bool) -> None:
           f"{sub['rounds_per_sec']},,{sub['seconds']}", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Async execution-layer benchmark (sparse-slot gather + event throughput;
+# no paper table — backs the asynchronous split-federated runtime).
+# ---------------------------------------------------------------------------
+
+def bench_async(quick: bool) -> None:
+    from benchmarks.async_rounds import bench_async as _bench
+
+    res = _bench(rounds=3 if quick else 10)
+    for frac, entry in res["sparse_vs_masked"].items():
+        for variant in ("masked", "sparse"):
+            print(f"async,{frac},{variant},"
+                  f"{entry[variant]['rounds_per_sec']},,"
+                  f"{entry[variant]['seconds']}", flush=True)
+    for spec, entry in res["async_events"].items():
+        print(f"async,delay={spec},events,"
+              f"{entry['events_per_sec']},"
+              f"{entry['mean_cohort_staleness']},"
+              f"{entry['seconds']}", flush=True)
+
+
 TABLES = {
     "t1": bench_table1,
     "t2": bench_table2,
@@ -197,8 +218,25 @@ TABLES = {
     "t8": bench_table8,
     "round_loop": bench_round_loop,
     "participation": bench_participation,
+    "async": bench_async,
     "roofline": bench_roofline,
 }
+
+
+def smoke() -> None:
+    """Minimal end-to-end pass of the harness (CI bit-rot check): one
+    tiny accuracy experiment through each execution mode, plus the
+    roofline reprint. The dispatch benches have their own --smoke."""
+    print(HEADER, flush=True)
+    for execution in ("subset", "masked", "sparse"):
+        res = run_experiment("scala", alpha=2, K=4, r=0.5, T=2, rounds=2,
+                             n_train=300, execution=execution)
+        _emit("SMOKE", f"exec={execution}", "scala", res)
+    res = run_experiment("fedavg", alpha=2, K=4, r=0.5, T=2, rounds=2,
+                         n_train=300, server_optimizer="momentum",
+                         server_lr=0.9)
+    _emit("SMOKE", "fedavgm", "fedavg", res)
+    bench_roofline(True)
 
 
 def main() -> None:
@@ -207,7 +245,12 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="paper-protocol settings (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal harness pass (CI)")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     quick = args.quick and not args.full
 
     print(HEADER, flush=True)

@@ -10,6 +10,12 @@ reports final + balanced accuracy for:
   - fedavg       (the reference lower bound)
   - fedlogit     (FL + eq. 15 local logit adjustment)
 
+SCALA additionally runs through the engine's sparse-slot execution path
+(execution="sparse": all K slots stay stacked, the in-program uniform
+scheduler picks the r-subset, and the engine gathers it into a dense
+axis before the local scan) — same protocol, subset-sized compute; it
+must preserve the ordering over FedAvg too.
+
   PYTHONPATH=src python examples/scala_vs_fedavg.py
 """
 from benchmarks.common import run_experiment
@@ -25,7 +31,14 @@ for name, kw in SETTINGS:
         results[m] = res
         print(f"  {m:12s} acc={res['acc']:.3f} "
               f"balanced={res['balanced_acc']:.3f} ({res['seconds']}s)")
+    res = run_experiment("scala", rounds=10, execution="sparse", **kw)
+    results["scala_sparse"] = res
+    print(f"  scala_sparse acc={res['acc']:.3f} "
+          f"balanced={res['balanced_acc']:.3f} ({res['seconds']}s)")
     # the paper's ordering: SCALA's balanced accuracy dominates FedAvg's
     assert results["scala"]["balanced_acc"] >= results["fedavg"]["balanced_acc"], \
         "SCALA should dominate FedAvg on balanced accuracy under skew"
+    assert results["scala_sparse"]["balanced_acc"] >= \
+        results["fedavg"]["balanced_acc"] - 0.02, \
+        "sparse-slot SCALA should preserve the ordering over FedAvg"
 print("\nscala_vs_fedavg OK")

@@ -175,7 +175,9 @@ def _aggregation_priors(num_classes: int, round_batches):
 
 def make_fl_round(method: str, model: FedModel, lr: float,
                   optimizer: Optional[optimizers.Optimizer] = None,
-                  aggregator: Optional[Aggregator] = None, **kw):
+                  aggregator: Optional[Aggregator] = None,
+                  server_optimizer: Optional[optimizers.Optimizer] = None,
+                  server_lr: float = 1.0, **kw):
     """Returns round(w_global, round_batches, client_labels_counts, state)
     -> (w_global', state'). round_batches leaves: (C, T, Bk, ...).
 
@@ -183,6 +185,13 @@ def make_fl_round(method: str, model: FedModel, lr: float,
     the FL phase (default: data-size FedAvg). Prior-aware aggregators
     (bias_compensated) get the per-client round priors that the local
     losses already compute.
+
+    ``server_optimizer``: classic FedOpt (Reddi et al.): the round delta
+    ``w_global - fedavg(w_k)`` is a pseudo-gradient and the server
+    optimizer steps ``w_global`` against it at ``server_lr`` (momentum =
+    FedAvgM, adamw = FedAdam). State lives in ``state["server_opt"]`` —
+    init with ``init_fl_state(..., server_optimizer=)``. Plain SGD at
+    ``server_lr=1.0`` reproduces the unmodified FedAvg round.
     """
     loss_fn = make_local_loss(method, model, **kw)
     alpha = kw.get("alpha", 0.01)
@@ -207,7 +216,8 @@ def make_fl_round(method: str, model: FedModel, lr: float,
             new_h = jax.tree.map(
                 lambda hk, wk, wg: hk - alpha * (wk - wg[None]),
                 h, w_k, w_global)
-            state = {"h": new_h}
+            state = dict(state)
+            state["h"] = new_h
         else:
             dummy_h = jax.tree.map(
                 lambda a: jnp.zeros((C,) + a.shape, a.dtype), w_global)
@@ -217,17 +227,34 @@ def make_fl_round(method: str, model: FedModel, lr: float,
                                                     round_batches)
         else:
             p_k_agg = p_global = None
-        return _aggregate_clients(aggregator, w_k, data_sizes,
-                                  p_k=p_k_agg, p_global=p_global), state
+        w_avg = _aggregate_clients(aggregator, w_k, data_sizes,
+                                   p_k=p_k_agg, p_global=p_global)
+        if server_optimizer is not None:
+            if "server_opt" not in state:
+                raise ValueError("server_optimizer needs state['server_opt'] "
+                                 "— init with init_fl_state(..., "
+                                 "server_optimizer=)")
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                w_global, w_avg)
+            w_avg, so = server_optimizer.update(delta, state["server_opt"],
+                                                w_global, server_lr)
+            state = dict(state)
+            state["server_opt"] = so
+        return w_avg, state
 
     return round_fn
 
 
-def init_fl_state(method: str, w_global, num_clients: int):
+def init_fl_state(method: str, w_global, num_clients: int,
+                  server_optimizer: Optional[optimizers.Optimizer] = None):
+    state = {}
     if method == "feddyn":
-        return {"h": jax.tree.map(
-            lambda a: jnp.zeros((num_clients,) + a.shape, a.dtype), w_global)}
-    return {}
+        state["h"] = jax.tree.map(
+            lambda a: jnp.zeros((num_clients,) + a.shape, a.dtype), w_global)
+    if server_optimizer is not None:
+        state["server_opt"] = server_optimizer.init(w_global)
+    return state
 
 
 # ---------------------------------------------------------------------------

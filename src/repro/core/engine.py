@@ -49,9 +49,15 @@ aggregation weights (FedAvg, data-size weighted, BESplit-style
 bias-compensated, GAS-style staleness-decayed), a
 ``ParticipationScheduler`` samples the per-round client subset as a 0/1
 mask over the static client axis (priors and logit adjustments are then
-recomputed per subset), and ``opt_state_policy`` fixes what happens to
-client optimizer state at the round boundary (carry | reset | average —
-see :func:`make_round_runner`).
+recomputed per subset), ``slot_gather=True`` packs that subset into a
+dense ``[K_active]`` compute axis (subset-cost rounds at static
+shapes), ``server_optimizer=`` adds FedOpt over the server half's round
+delta, and ``opt_state_policy`` fixes what happens to client optimizer
+state at the round boundary (carry | reset | average — see
+:func:`make_round_runner`). Asynchronous execution — per-client
+snapshots, sampled completion delays, staleness-weighted delayed
+aggregation per arrival cohort — lives in :mod:`repro.fed.runtime` and
+reuses the same engine step and sparse-slot gather.
 
 The legacy entry points in :mod:`repro.core.scala` are thin wrappers over
 :func:`local_step` with plain SGD.
@@ -592,6 +598,58 @@ def scala_aggregate(params, data_sizes=None):
 OPT_STATE_POLICIES = ("carry", "reset", "average")
 
 
+def slot_gather_indices(mask, k_active: int):
+    """Participating slot ids, ascending, from a (C,) 0/1 mask with a
+    *static* subset size ``k_active`` (the sparse-slot compute path).
+
+    The argsort is stable, so the first ``k_active`` entries of the
+    descending-mask order are exactly the mask's ones in slot order when
+    the mask has ``k_active`` ones (every :mod:`repro.fed.participation`
+    scheduler guarantees a fixed subset size). If the mask has *fewer*
+    ones, the trailing indices are absent slots — they run compute but
+    carry zero aggregation weight, which is safe but wasteful.
+    """
+    return jnp.sort(jnp.argsort(-mask)[:k_active])
+
+
+def gather_rows(tree, idx):
+    """Pack rows ``idx`` of every (C, ...) leaf into a dense leading axis."""
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), tree)
+
+
+def scatter_rows(full_tree, sub_tree, idx):
+    """Write dense-axis results back into rows ``idx`` of the full leaves."""
+    return jax.tree.map(lambda f, s: f.at[idx].set(s.astype(f.dtype)),
+                        full_tree, sub_tree)
+
+
+def _gather_clients(state: TrainState, idx) -> TrainState:
+    """Pack the participating client slots into a dense [K_active] axis
+    (server half shared by reference)."""
+    return TrainState(
+        params={"client": gather_rows(state.params["client"], idx),
+                "server": state.params["server"]},
+        opt_state={"client": gather_rows(state.opt_state["client"], idx),
+                   "server": state.opt_state["server"]},
+        step=state.step)
+
+
+def _scatter_clients(state: TrainState, sub: TrainState, idx) -> TrainState:
+    """Write the dense [K_active] results back into the static slots.
+
+    Absent slots keep their params AND their optimizer state untouched
+    (the masked path instead "ticks" absent slots' stateful moments with
+    zero grads — see :func:`make_round_runner`)."""
+    return TrainState(
+        params={"client": scatter_rows(state.params["client"],
+                                       sub.params["client"], idx),
+                "server": sub.params["server"]},
+        opt_state={"client": scatter_rows(state.opt_state["client"],
+                                          sub.opt_state["client"], idx),
+                   "server": sub.opt_state["server"]},
+        step=sub.step)
+
+
 def _round_boundary_opt_state(opt: optimizers.Optimizer, opt_state,
                               new_params, weights, policy: str):
     """Client optimizer state at the round boundary (policy semantics in
@@ -623,6 +681,9 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                       aggregator=None,
                       participation=None,
                       opt_state_policy: str = "carry",
+                      slot_gather: bool = False,
+                      server_optimizer: Optional[optimizers.Optimizer] = None,
+                      server_lr: float = 1.0,
                       mesh=None, batch_specs=None):
     """Build the fused round program: T local iterations (``lax.scan``
     over the engine step) + the pluggable FL phase, all in one jittable
@@ -662,13 +723,38 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     The server half's optimizer state always carries — the server model
     is never averaged (only the client halves federate, eq. 10).
 
+    Sparse-slot compute (``slot_gather=True``): the participating slots
+    are gathered into a dense ``[K_active]`` axis *before* the local
+    scan and scattered back afterwards, so a ``frac``-participation
+    round costs ~``frac`` of the full-K compute while every shape stays
+    static (``K_active`` is the scheduler's fixed subset size,
+    ``participation.subset_size``). Requires a participation scheduler
+    and is a no-op when the subset is the full slot set. Semantics match
+    the masked round exactly for the losses, the priors (the gathered
+    subset IS the participating subset), the gradients, and the FL
+    phase; the one divergence is stateful-optimizer moments of *absent*
+    clients under ``opt_state_policy="carry"`` — the masked round ticks
+    them with zero gradients (momentum keeps decaying), the gathered
+    round freezes them. Not available on the ``lace_dp`` backend (the
+    client axis is sharded over the mesh there).
+
+    Server-side FedOpt (``server_optimizer=``): after the round, the
+    *server* half's round delta ``w_s_start - w_s_end`` is treated as a
+    pseudo-gradient and ``server_optimizer`` is applied to it from
+    ``w_s_start`` at ``server_lr`` (round-scale state: momentum/Adam
+    moments over rounds, not local iterations). Plain SGD at
+    ``server_lr=1.0`` reproduces the default (the in-round updates land
+    unchanged). The optimizer's state lives in ``fed_state["server_opt"]``
+    — build it with :func:`repro.fed.init_fed_state`.
+
     Returns ``round_fn(state, round_batches, data_sizes=None,
     fed_state=None)``; round_batches leaves (T, C, Bk, ...). With
-    ``fed_state=None`` (requires stateless aggregator + scheduler) it
-    returns ``(TrainState, metrics)`` — the legacy signature. With a
-    ``fed_state`` dict from :func:`repro.fed.init_fed_state` it returns
-    ``(TrainState, fed_state', metrics)``, threading scheduler PRNG keys
-    and aggregator round ages across rounds.
+    ``fed_state=None`` (requires stateless aggregator + scheduler and no
+    server optimizer) it returns ``(TrainState, metrics)`` — the legacy
+    signature. With a ``fed_state`` dict from
+    :func:`repro.fed.init_fed_state` it returns
+    ``(TrainState, fed_state', metrics)``, threading scheduler PRNG keys,
+    aggregator round ages, and server-optimizer state across rounds.
 
     ``unroll`` is forwarded to ``lax.scan``. The default (1) keeps the
     HLO small — right for the deep production archs. XLA:CPU executes
@@ -681,9 +767,27 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     if opt_state_policy not in OPT_STATE_POLICIES:
         raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
                          f"expected {OPT_STATE_POLICIES}")
+    if slot_gather:
+        if participation is None:
+            raise ValueError("slot_gather needs a participation scheduler "
+                             "(the static K_active comes from its "
+                             "subset_size)")
+        if backend == "lace_dp":
+            raise ValueError("slot_gather is not supported on the 'lace_dp' "
+                             "backend (the client axis is sharded over the "
+                             "mesh)")
+        if participation.subset_size is None:
+            raise ValueError(
+                f"slot_gather needs a scheduler with a static subset_size; "
+                f"{participation.name!r} has none — without it the gather "
+                "would silently degrade to full-K masked compute")
     opt = optimizer if optimizer is not None else optimizers.sgd()
     agg = aggregator if aggregator is not None else _fed.weighted()
     stateful = _fed.is_stateful(agg, participation)
+    k_active = (participation.subset_size or participation.num_clients
+                if participation is not None else None)
+    do_gather = (slot_gather and participation is not None
+                 and k_active < participation.num_clients)
     step = make_split_step(model, scala, backend=backend, optimizer=opt,
                            schedule=schedule, ce_chunk=ce_chunk,
                            mesh=mesh, batch_specs=batch_specs)
@@ -695,17 +799,40 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 raise ValueError(
                     f"aggregator {agg.name!r} / participation scheduler are "
                     "stateful; pass fed_state (repro.fed.init_fed_state)")
-            sched_state, agg_state = (), ()
+            if server_optimizer is not None:
+                raise ValueError(
+                    "server_optimizer needs fed_state — build it with "
+                    "repro.fed.init_fed_state(..., server_optimizer=, "
+                    "server_params=)")
+            sched_state, agg_state, so_state = (), (), ()
         else:
             sched_state, agg_state = fed_state["sched"], fed_state["agg"]
+            so_state = fed_state.get("server_opt", ())
+            if server_optimizer is not None and "server_opt" not in fed_state:
+                raise ValueError(
+                    "server_optimizer needs fed_state['server_opt'] — build "
+                    "fed_state with repro.fed.init_fed_state(..., "
+                    "server_optimizer=, server_params=)")
+        ws_start = state.params["server"]
 
         if participation is not None:
             mask, sched_state = participation.sample(sched_state)
-            body = lambda s, b: step(s, b, mask)
         else:
             mask = None
-            body = step
-        state, ms = jax.lax.scan(body, state, round_batches, unroll=unroll)
+        if do_gather:
+            idx = slot_gather_indices(mask, k_active)
+            sub = _gather_clients(state, idx)
+            sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
+                                       round_batches)
+            # no mask inside the scan: every gathered slot participates,
+            # so the stage-1 priors are the participating-subset priors
+            sub, ms = jax.lax.scan(step, sub, sub_batches, unroll=unroll)
+            state = _scatter_clients(state, sub, idx)
+        else:
+            body = (lambda s, b: step(s, b, mask)) if mask is not None \
+                else step
+            state, ms = jax.lax.scan(body, state, round_batches,
+                                     unroll=unroll)
         metrics = jax.tree.map(lambda a: a[-1], ms)
 
         if aggregate:
@@ -727,9 +854,24 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                                                   opt_state_policy)
             state = TrainState(params=params, opt_state=opt_state,
                                step=state.step)
+
+        if server_optimizer is not None:
+            # FedOpt on the server half: round delta as pseudo-gradient
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                ws_start, state.params["server"])
+            new_ws, so_state = server_optimizer.update(delta, so_state,
+                                                       ws_start, server_lr)
+            state = TrainState(params={"client": state.params["client"],
+                                       "server": new_ws},
+                               opt_state=state.opt_state, step=state.step)
+
         if fed_state is None:
             return state, metrics
-        return state, {"sched": sched_state, "agg": agg_state}, metrics
+        out_fed = {"sched": sched_state, "agg": agg_state}
+        if "server_opt" in fed_state:
+            out_fed["server_opt"] = so_state
+        return state, out_fed, metrics
 
     return round_fn
 

@@ -22,6 +22,7 @@ param/aggregation helpers remain here and are re-exported unchanged.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -36,6 +37,20 @@ from repro.core.engine import (  # noqa: F401  (compat re-exports)
     scala_round_scan,
 )
 
+# legacy entry points that already warned this process (warn once each)
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str, use: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.scala.{name} is a legacy compatibility shim; use {use} "
+        "instead (the engine threads optimizers/schedules and compiles the "
+        "whole round — see repro.core.engine and repro.fed)",
+        DeprecationWarning, stacklevel=3)
+
 
 def scala_local_step(model: SplitModel, params, batch, scala: ScalaConfig,
                      *, lr: Optional[float] = None):
@@ -43,7 +58,12 @@ def scala_local_step(model: SplitModel, params, batch, scala: ScalaConfig,
 
     params: {'client': stacked (C,...), 'server': ...}; batch leaves:
     (C, B_k, ...). Returns (params, metrics).
+
+    .. deprecated:: use :func:`repro.core.engine.make_split_step`
+       (``backend="logits"``).
     """
+    _warn_deprecated("scala_local_step",
+                     "engine.make_split_step(backend='logits')")
     return engine.local_step(model, params, batch, scala, backend="logits",
                              lr=lr)
 
@@ -57,7 +77,12 @@ def scala_local_step_fused(model: SplitModel, params, batch,
     head matmul + adjusted softmax-CE are fused and chunked over tokens
     (:mod:`repro.kernels.lace`), so full-vocab logits are never
     materialized — required for the 262k-vocab archs at 1M tokens/step.
+
+    .. deprecated:: use :func:`repro.core.engine.make_split_step`
+       (``backend="lace"``).
     """
+    _warn_deprecated("scala_local_step_fused",
+                     "engine.make_split_step(backend='lace')")
     return engine.local_step(model, params, batch, scala, backend="lace",
                              lr=lr, ce_chunk=ce_chunk)
 
@@ -73,7 +98,12 @@ def scala_local_step_fused_dp(model: SplitModel, params, batch,
 
     batch_specs: PartitionSpec pytree matching ``batch`` (the same
     logical->mesh resolution the launcher uses for in_shardings).
+
+    .. deprecated:: use :func:`repro.core.engine.make_split_step`
+       (``backend="lace_dp"``).
     """
+    _warn_deprecated("scala_local_step_fused_dp",
+                     "engine.make_split_step(backend='lace_dp')")
     return engine.local_step(model, params, batch, scala, backend="lace_dp",
                              lr=lr, ce_chunk=ce_chunk, mesh=mesh,
                              batch_specs=batch_specs)
@@ -86,7 +116,12 @@ def scala_round(model: SplitModel, params, round_batches, scala: ScalaConfig,
     Python loop (each step separately jitted by the caller via
     ``local_step``). Prefer :func:`engine.scala_round_scan`, which fuses
     the T iterations + FedAvg into one compiled program.
+
+    .. deprecated:: use :func:`repro.core.engine.make_round_runner`
+       (sync) or :func:`repro.fed.make_async_runner` (async events).
     """
+    _warn_deprecated("scala_round",
+                     "engine.make_round_runner / fed.make_async_runner")
     step = local_step or (lambda p, b: scala_local_step(model, p, b, scala))
     T = jax.tree.leaves(round_batches)[0].shape[0]
     metrics = None

@@ -1,16 +1,23 @@
 """repro.fed — the pluggable federation layer on top of the split-step
-engine: client-model aggregation (:mod:`repro.fed.aggregators`) and
-participation scheduling (:mod:`repro.fed.participation`), composed by
-:func:`repro.core.engine.make_round_runner`.
+engine: client-model aggregation (:mod:`repro.fed.aggregators`),
+participation scheduling (:mod:`repro.fed.participation`), completion
+delays (:mod:`repro.fed.delays`), and the asynchronous event runtime
+(:mod:`repro.fed.runtime`), composed by
+:func:`repro.core.engine.make_round_runner` /
+:func:`repro.fed.runtime.make_async_runner`.
 
-The round-level state the runner threads (scheduler PRNG key, aggregator
-round ages, ...) lives in a plain dict ``{"sched": ..., "agg": ...}``
-built by :func:`init_fed_state`.
+The round-level state the sync runner threads (scheduler PRNG key,
+aggregator round ages, server-optimizer state, ...) lives in a plain
+dict ``{"sched": ..., "agg": ...[, "server_opt": ...]}`` built by
+:func:`init_fed_state`; the async runner's per-client dispatch state is
+the :class:`repro.fed.runtime.AsyncFedState` pytree built by
+:func:`repro.fed.runtime.init_async_state`.
 """
 from __future__ import annotations
 
 from typing import Any, Optional
 
+from repro.fed import delays  # noqa: F401  (module: fed.delays.uniform etc.)
 from repro.fed.aggregators import (  # noqa: F401
     AGGREGATORS,
     AggContext,
@@ -22,6 +29,11 @@ from repro.fed.aggregators import (  # noqa: F401
     staleness_weighted,
     weighted,
 )
+from repro.fed.delays import (  # noqa: F401
+    DELAY_MODELS,
+    DelayModel,
+    make_delays,
+)
 from repro.fed.participation import (  # noqa: F401
     SCHEDULERS,
     ParticipationScheduler,
@@ -29,6 +41,12 @@ from repro.fed.participation import (  # noqa: F401
     full,
     make_participation,
     uniform,
+)
+from repro.fed.runtime import (  # noqa: F401
+    AsyncFedState,
+    arrival_cohort,
+    init_async_state,
+    make_async_runner,
 )
 
 
@@ -41,13 +59,26 @@ def is_stateful(aggregator: Optional[Aggregator],
 
 def init_fed_state(key, aggregator: Optional[Aggregator] = None,
                    participation: Optional[ParticipationScheduler] = None,
-                   num_clients: Optional[int] = None) -> dict:
-    """Build the federation-state pytree threaded through rounds."""
+                   num_clients: Optional[int] = None,
+                   server_optimizer=None, server_params=None) -> dict:
+    """Build the federation-state pytree threaded through sync rounds.
+
+    ``server_optimizer`` / ``server_params``: when the round runner was
+    built with a server-side FedOpt optimizer, its state is initialized
+    here (under ``"server_opt"``) from the server half's param shapes.
+    """
     if num_clients is None:
-        if participation is None:
+        if participation is not None:
+            num_clients = participation.num_clients
+        elif aggregator is not None:
             raise ValueError("init_fed_state needs num_clients when no "
                              "participation scheduler is given")
-        num_clients = participation.num_clients
     sched: Any = participation.init(key) if participation is not None else ()
     agg: Any = aggregator.init(num_clients) if aggregator is not None else ()
-    return {"sched": sched, "agg": agg}
+    state = {"sched": sched, "agg": agg}
+    if server_optimizer is not None:
+        if server_params is None:
+            raise ValueError("init_fed_state needs server_params when a "
+                             "server_optimizer is given")
+        state["server_opt"] = server_optimizer.init(server_params)
+    return state

@@ -1,0 +1,113 @@
+"""Client completion-delay models for the asynchronous execution layer.
+
+Real client fleets are heterogeneous: a round's stragglers are set by
+device speed, network, and availability, and the *shape* of the delay
+distribution decides how asynchronous execution behaves (GAS,
+arXiv:2409.01251 — staleness grows with the delay tail). The async
+runtime (:mod:`repro.fed.runtime`) samples one completion delay per
+dispatched client from a :class:`DelayModel`; the event scheduler then
+pops arrival cohorts in finish-time order.
+
+  =================  =====================================================
+  model              delay of one dispatched client
+  =================  =====================================================
+  :func:`constant`   ``d`` exactly (``d=0`` degenerates to the fully
+                     synchronous barrier — every client arrives at once)
+  :func:`uniform`    ``U[lo, hi]`` — bounded jitter, thin tail
+  :func:`lognormal`  ``median * exp(sigma * z)``, ``z ~ N(0,1)`` — the
+                     heavy-tailed regime (a few clients straggle for much
+                     longer than the median; sigma controls the tail)
+  =================  =====================================================
+
+Every model is a pure-jax op: ``sample(key, shape) -> float32 delays``
+(non-negative), jittable and scan-compatible, so delay sampling lives
+*inside* the compiled async event program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DELAY_MODELS = ("constant", "uniform", "lognormal")
+
+
+@dataclass(frozen=True)
+class DelayModel:
+    """``sample(key, shape) -> (shape,) float32 non-negative delays``."""
+
+    name: str
+    sample: Callable[[Any, Tuple[int, ...]], Any]
+
+
+def constant(d: float = 1.0) -> DelayModel:
+    """Every client takes exactly ``d`` time units. ``d=0`` makes the
+    async runner a barrier-synchronized round (the sync special case)."""
+    if d < 0:
+        raise ValueError(f"constant delay must be >= 0, got {d}")
+
+    def sample(key, shape):
+        return jnp.full(shape, d, jnp.float32)
+
+    return DelayModel(name="constant", sample=sample)
+
+
+def uniform(lo: float, hi: float) -> DelayModel:
+    """Bounded jitter: delays ~ U[lo, hi]."""
+    if not 0 <= lo <= hi:
+        raise ValueError(f"uniform delay needs 0 <= lo <= hi, got [{lo}, {hi}]")
+
+    def sample(key, shape):
+        return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+    return DelayModel(name="uniform", sample=sample)
+
+
+def lognormal(median: float = 1.0, sigma: float = 1.0) -> DelayModel:
+    """Heavy-tailed delays: ``median * exp(sigma * N(0,1))``.
+
+    The straggler regime — most clients finish near the median but the
+    tail is unbounded; larger ``sigma`` means older arrivals and higher
+    staleness under a fixed cohort size.
+    """
+    if median <= 0 or sigma < 0:
+        raise ValueError(f"lognormal needs median > 0, sigma >= 0, got "
+                         f"({median}, {sigma})")
+
+    def sample(key, shape):
+        z = jax.random.normal(key, shape, jnp.float32)
+        return jnp.float32(median) * jnp.exp(jnp.float32(sigma) * z)
+
+    return DelayModel(name="lognormal", sample=sample)
+
+
+def make_delays(spec: str) -> DelayModel:
+    """Parse a launcher-flag spec into a delay model.
+
+    ``"zero"`` | ``"constant[:D]"`` | ``"uniform:LO:HI"`` |
+    ``"lognormal[:MEDIAN[:SIGMA]]"``.
+    """
+    parts = spec.split(":")
+    name = parts[0]
+    if name == "zero":
+        if len(parts) != 1:
+            raise ValueError("zero spec takes no arguments")
+        return constant(0.0)
+    if name == "constant":
+        if len(parts) > 2:
+            raise ValueError("constant spec is 'constant[:D]'")
+        return constant(float(parts[1]) if len(parts) == 2 else 1.0)
+    if name == "uniform":
+        if len(parts) != 3:
+            raise ValueError("uniform spec is 'uniform:LO:HI'")
+        return uniform(float(parts[1]), float(parts[2]))
+    if name == "lognormal":
+        if len(parts) > 3:
+            raise ValueError("lognormal spec is 'lognormal[:MEDIAN[:SIGMA]]'")
+        median = float(parts[1]) if len(parts) >= 2 else 1.0
+        sigma = float(parts[2]) if len(parts) == 3 else 1.0
+        return lognormal(median, sigma)
+    raise ValueError(f"unknown delay model {name!r}; expected "
+                     f"{('zero',) + DELAY_MODELS}")

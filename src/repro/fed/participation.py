@@ -30,7 +30,7 @@ threaded through rounds by the runner; ``init(key)`` builds it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +40,21 @@ SCHEDULERS = ("full", "uniform", "dirichlet")
 
 @dataclass(frozen=True)
 class ParticipationScheduler:
-    """``sample(state) -> (mask (C,) float32 0/1, new_state)``."""
+    """``sample(state) -> (mask (C,) float32 0/1, new_state)``.
+
+    ``subset_size`` is the *static* per-round participant count (every
+    scheduler samples exactly this many ones) — the engine's sparse-slot
+    path (``make_round_runner(slot_gather=True)``) sizes its dense
+    ``[K_active]`` compute axis from it. ``None`` means full
+    participation (``num_clients``).
+    """
 
     name: str
     num_clients: int
     init: Callable[[Any], Any]
     sample: Callable[[Any], Tuple[Any, Any]]
     stateful: bool = True
+    subset_size: Optional[int] = None
 
 
 def _subset_size(num_clients: int, frac: float) -> int:
@@ -64,7 +72,8 @@ def full(num_clients: int) -> ParticipationScheduler:
         return jnp.ones((num_clients,), jnp.float32), state
 
     return ParticipationScheduler(name="full", num_clients=num_clients,
-                                  init=init, sample=sample, stateful=False)
+                                  init=init, sample=sample, stateful=False,
+                                  subset_size=num_clients)
 
 
 def uniform(num_clients: int, frac: float) -> ParticipationScheduler:
@@ -81,7 +90,7 @@ def uniform(num_clients: int, frac: float) -> ParticipationScheduler:
         return mask, {"key": key}
 
     return ParticipationScheduler(name="uniform", num_clients=num_clients,
-                                  init=init, sample=sample)
+                                  init=init, sample=sample, subset_size=m)
 
 
 def dirichlet(num_clients: int, frac: float,
@@ -104,7 +113,7 @@ def dirichlet(num_clients: int, frac: float,
         return mask, {"key": key}
 
     return ParticipationScheduler(name="dirichlet", num_clients=num_clients,
-                                  init=init, sample=sample)
+                                  init=init, sample=sample, subset_size=m)
 
 
 def make_participation(spec: str, num_clients: int) -> ParticipationScheduler:

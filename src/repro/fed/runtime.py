@@ -1,0 +1,330 @@
+"""Asynchronous split-federated execution on top of the split-step engine.
+
+The synchronous round (:func:`repro.core.engine.make_round_runner`) is a
+barrier: every participating client runs T local iterations from the same
+aggregated model, then the FL phase averages. Real fleets are
+asynchronous — clients finish at different times and their updates were
+computed against *older* server params. GAS (arXiv:2409.01251) shows the
+workable recipe is staleness-aware delayed aggregation; this module
+implements it as a *jit-compatible event schedule*:
+
+1. Every client holds a **snapshot** of the global client half (the
+   params it trains from) tagged with the server **version** it was taken
+   at, plus a sampled **finish time** (:mod:`repro.fed.delays`).
+2. One call of the async runner is one **event**: the ``cohort`` earliest
+   finishers arrive. Their T local iterations run on a dense sparse-slot
+   axis (gathered from the static K slots, exactly the engine's
+   ``slot_gather`` path), with label priors and logit adjustments
+   recomputed over the *arrival cohort* — the same per-subset semantics
+   the sync path applies per participating subset.
+3. The arrivals' trained client halves are folded into the global model
+   with **staleness-weighted delayed aggregation** (FedAsync/GAS-style
+   model mixing): per-arrival weights are the aggregator's weights
+   decayed by ``staleness_decay ** age`` (age = server versions elapsed
+   since the snapshot), renormalized over the cohort, and the global
+   client half moves ``mix_rate`` of the way to the cohort average. The
+   server half trains in-scan as always (it is never averaged) with an
+   optional FedOpt ``server_optimizer`` over its event delta.
+4. The cohort re-snapshots the new global model at the new version,
+   samples fresh delays, and the event clock advances to the cohort's
+   latest arrival. Busy clients keep their snapshots and finish times.
+
+Everything — cohort selection, gather/scatter, delay sampling, the
+staleness weights — is pure jax inside one compiled program per event.
+
+**The sync round is the zero-delay special case**: with
+``delays=constant(0)`` and ``cohort=K`` every client arrives at every
+event with staleness 0, the cohort average is the full FedAvg, and
+``mix_rate=1`` replaces the global model with it — bit-for-bit the
+synchronous round runner (test-enforced at fp32 tolerance in
+``tests/test_async.py``).
+
+:class:`AsyncFedState` invariants (maintained by :func:`init_async_state`
+and every runner call; rely on them, don't re-derive):
+
+* ``version[k] <= server_version`` elementwise; ``server_version``
+  increments by exactly 1 per event.
+* ``client_params[k]`` is the global client half as of ``version[k]`` —
+  slots with ``version[k] == server_version`` hold the *current* global
+  model.
+* ``finish_time[k] >= now`` for busy clients; arrivals satisfy
+  ``finish_time[k] <= new now`` at the event that pops them and are
+  re-armed strictly into the future (for nonzero delays).
+* ``server_version - version`` is the per-client staleness age — under a
+  full-barrier schedule it reproduces the sync
+  :func:`repro.fed.aggregators.staleness_weighted` age bookkeeping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ScalaConfig
+from repro.core import engine
+from repro.core.split import (normalize_client_weights, stack_client_params,
+                              weighted_mean)
+from repro.fed import aggregators as _agg
+from repro.fed.delays import DelayModel
+from repro.optim import optimizers
+
+
+@dataclass(frozen=True)
+class AsyncFedState:
+    """Per-client dispatch state threaded through async events.
+
+    client_params: (K, ...) stacked per-client snapshots of the global
+    client half (what each client is training from);
+    version: (K,) int32 server version each snapshot was taken at;
+    server_version: () int32 global version (events applied so far);
+    finish_time: (K,) float32 simulated completion time per client;
+    now: () float32 event clock (the last cohort's latest arrival);
+    key: PRNG key driving delay sampling;
+    agg_state: aggregator carry (e.g. staleness ages) — usually () since
+    the runtime tracks ages itself via ``version``;
+    server_opt: server-side FedOpt optimizer state (or ()).
+    """
+
+    client_params: Any
+    version: Any
+    server_version: Any
+    finish_time: Any
+    now: Any
+    key: Any
+    agg_state: Any = ()
+    server_opt: Any = ()
+
+
+jax.tree_util.register_dataclass(
+    AsyncFedState,
+    data_fields=("client_params", "version", "server_version", "finish_time",
+                 "now", "key", "agg_state", "server_opt"),
+    meta_fields=())
+
+
+def init_async_state(key, client_params, delays: DelayModel, *,
+                     aggregator=None,
+                     server_optimizer: Optional[optimizers.Optimizer] = None,
+                     server_params=None) -> AsyncFedState:
+    """Dispatch all K clients at version 0.
+
+    ``client_params`` is the stacked (K, ...) client half (every slot
+    holds the same init — :func:`repro.core.split.stack_client_params`);
+    each client's first completion delay is sampled immediately, so the
+    first event pops the cohort of earliest finishers. Pass the same
+    ``aggregator`` / ``server_optimizer`` the runner was built with so
+    their state is initialized to matching shapes.
+    """
+    K = jax.tree.leaves(client_params)[0].shape[0]
+    k_delay, k_carry = jax.random.split(jnp.asarray(key))
+    if server_optimizer is not None and server_params is None:
+        raise ValueError("init_async_state needs server_params when a "
+                         "server_optimizer is given")
+    return AsyncFedState(
+        client_params=client_params,
+        version=jnp.zeros((K,), jnp.int32),
+        server_version=jnp.zeros((), jnp.int32),
+        finish_time=delays.sample(k_delay, (K,)).astype(jnp.float32),
+        now=jnp.zeros((), jnp.float32),
+        key=k_carry,
+        agg_state=aggregator.init(K) if aggregator is not None else (),
+        server_opt=(server_optimizer.init(server_params)
+                    if server_optimizer is not None else ()))
+
+
+def arrival_cohort(finish_time, cohort: int, version=None):
+    """The event schedule's pop: the ``cohort`` earliest finishers.
+
+    Returns (idx (cohort,) ascending slot ids, mask (K,) 0/1 float32,
+    t_event — the cohort's latest finish time, i.e. the new clock).
+    Ties (equal finish times) break by snapshot ``version`` — the
+    longest-waiting client goes first (FIFO) — then by slot id (lexsort
+    is stable). Without the version key, degenerate schedules (zero or
+    constant-tied delays with ``cohort < K``) would re-arm the lowest
+    slot ids at the same finish time and starve every other slot; with
+    it, zero delays pop slots round-robin in blocks of ``cohort``.
+    """
+    if version is None:
+        order = jnp.argsort(finish_time)
+    else:
+        order = jnp.lexsort((version, finish_time))
+    idx = jnp.sort(order[:cohort])
+    K = finish_time.shape[0]
+    mask = jnp.zeros((K,), jnp.float32).at[idx].set(1.0)
+    t_event = jnp.max(jnp.take(finish_time, idx))
+    return idx, mask, t_event
+
+
+def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
+                      delays: DelayModel,
+                      cohort: int,
+                      backend: str = "logits",
+                      optimizer: Optional[optimizers.Optimizer] = None,
+                      schedule: Optional[Callable] = None,
+                      ce_chunk: Optional[int] = None,
+                      staleness_decay: float = 0.5,
+                      mix_rate: float = 1.0,
+                      aggregator=None,
+                      server_optimizer: Optional[optimizers.Optimizer] = None,
+                      server_lr: float = 1.0,
+                      opt_state_policy: str = "carry",
+                      unroll=1):
+    """Build the async event program: ``async_fn(state, afed,
+    round_batches, data_sizes=None) -> (state, afed, metrics)``.
+
+    ``round_batches`` leaves are (T, K, Bk, ...) — one local-iteration
+    schedule for every static slot; only the arrival cohort's columns are
+    computed (sparse-slot gather), so the per-event cost is
+    ~``cohort / K`` of a full sync round.
+
+    * ``delays`` / ``cohort`` — the event schedule: completion delays per
+      dispatch, and how many arrivals each event waits for
+      (``cohort=K`` is a full barrier; ``cohort=1`` is fully async).
+    * ``staleness_decay`` / ``mix_rate`` — delayed-aggregation knobs: an
+      arrival whose snapshot is ``a`` versions old is decayed by
+      ``staleness_decay ** a`` inside the cohort weights, and the global
+      client half moves ``mix_rate`` toward the cohort average
+      (FedAsync-style mixing; ``mix_rate=1`` replaces it).
+    * ``aggregator`` — base per-arrival weights before the staleness
+      decay (default: data-size :func:`repro.fed.aggregators.weighted`,
+      matching the sync runner's default). Stateful aggregators thread
+      their carry through ``afed.agg_state``; note the runtime already
+      tracks ages via ``version``, so :func:`staleness_weighted` here
+      would double-decay.
+    * ``server_optimizer`` / ``server_lr`` — optional FedOpt on the
+      server half's event delta (state in ``afed.server_opt``), the same
+      semantics as the sync runner's.
+    * ``opt_state_policy`` — the cohort's client optimizer state at the
+      event boundary: ``carry`` scatters the cohort's updated moments
+      back to their slots (busy clients' moments are untouched),
+      ``reset`` zeroes the cohort's, ``average`` redistributes the
+      cohort-weighted mean over the cohort slots.
+
+    ``state.params["client"]`` always holds the *current* global client
+    half broadcast over the K slots (checkpoint/eval-compatible with the
+    sync runner); the per-client training snapshots live in
+    ``afed.client_params``.
+
+    Metrics extend the engine's with the async observables:
+    ``arrival_mask`` (K,), ``staleness`` (K,) pre-event ages,
+    ``staleness_mean`` over the cohort, ``t_event``, and
+    ``server_version`` post-event.
+    """
+    if opt_state_policy not in engine.OPT_STATE_POLICIES:
+        raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
+                         f"expected {engine.OPT_STATE_POLICIES}")
+    if backend == "lace_dp":
+        raise ValueError("make_async_runner does not support the 'lace_dp' "
+                         "backend (the sparse-slot gather crosses the "
+                         "sharded client axis); use 'lace'")
+    if cohort < 1:
+        raise ValueError(f"cohort must be >= 1, got {cohort}")
+    opt = optimizer if optimizer is not None else optimizers.sgd()
+    agg = aggregator if aggregator is not None else _agg.weighted()
+    step = engine.make_split_step(model, scala, backend=backend,
+                                  optimizer=opt, schedule=schedule,
+                                  ce_chunk=ce_chunk)
+
+    def async_fn(state: engine.TrainState, afed: AsyncFedState,
+                 round_batches, data_sizes=None):
+        K = jax.tree.leaves(afed.client_params)[0].shape[0]
+        if cohort > K:
+            raise ValueError(f"cohort {cohort} exceeds the {K} client slots")
+
+        # --- event pop: who arrives, and when ---
+        idx, arrival_mask, t_event = arrival_cohort(afed.finish_time, cohort,
+                                                    afed.version)
+        staleness = (afed.server_version - afed.version).astype(jnp.float32)
+
+        # --- sparse-slot local compute from the per-client snapshots:
+        # the engine's gather, sourced from the snapshots rather than the
+        # (slot-unified) global stacked params ---
+        sub = engine._gather_clients(
+            engine.TrainState(
+                params={"client": afed.client_params,
+                        "server": state.params["server"]},
+                opt_state=state.opt_state, step=state.step), idx)
+        sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
+                                   round_batches)
+        # priors / logit adjustments recompute over the arrival cohort:
+        # the gathered batch IS the cohort's concatenated batch
+        sub, ms = jax.lax.scan(step, sub, sub_batches, unroll=unroll)
+        metrics = jax.tree.map(lambda a: a[-1], ms)
+
+        # --- staleness-weighted delayed aggregation (GAS / FedAsync) ---
+        p_k = p_global = None
+        if agg.needs_priors:
+            p_k, p_global = _agg.aggregation_priors(
+                model.num_classes, round_batches["labels"],
+                round_batches.get("weights"), client_axis=1)
+        ctx = _agg.AggContext(num_clients=K, mask=arrival_mask,
+                              data_sizes=data_sizes, p_k=p_k,
+                              p_global=p_global)
+        w_base, agg_state = agg.client_weights(ctx, afed.agg_state)
+        decay = jnp.power(jnp.float32(staleness_decay), staleness)
+        r_hat = normalize_client_weights(w_base * decay, arrival_mask)
+        cohort_avg = weighted_mean(sub.params["client"],
+                                   jnp.take(r_hat, idx))
+        mu = jnp.float32(mix_rate)
+        global_c = jax.tree.map(lambda a: a[0], state.params["client"])
+        new_global = jax.tree.map(
+            lambda g, c: ((1.0 - mu) * g.astype(jnp.float32)
+                          + mu * c.astype(jnp.float32)).astype(g.dtype),
+            global_c, cohort_avg)
+
+        # --- server half: in-scan updates (+ optional FedOpt on delta) ---
+        new_ws = sub.params["server"]
+        server_opt_state = afed.server_opt
+        if server_optimizer is not None:
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                state.params["server"], new_ws)
+            new_ws, server_opt_state = server_optimizer.update(
+                delta, server_opt_state, state.params["server"], server_lr)
+
+        # --- cohort opt-state at the event boundary ---
+        sub_opt_c = sub.opt_state["client"]
+        if opt_state_policy == "reset":
+            sub_opt_c = jax.vmap(opt.init)(sub.params["client"])
+        elif opt_state_policy == "average":
+            r_sub = jnp.take(r_hat, idx)
+
+            def avg(a):
+                wb = r_sub.reshape((-1,) + (1,) * (a.ndim - 1))
+                m = (a.astype(jnp.float32) * wb).sum(axis=0).astype(a.dtype)
+                return jnp.broadcast_to(m[None], a.shape)
+
+            sub_opt_c = jax.tree.map(avg, sub_opt_c)
+        opt_c = engine.scatter_rows(state.opt_state["client"], sub_opt_c, idx)
+
+        # --- re-dispatch the cohort at the new version ---
+        new_version = afed.server_version + 1
+        k_delay, k_carry = jax.random.split(afed.key)
+        new_delays = delays.sample(k_delay, (cohort,)).astype(jnp.float32)
+        snap = engine.scatter_rows(
+            afed.client_params, stack_client_params(new_global, cohort), idx)
+        new_afed = AsyncFedState(
+            client_params=snap,
+            version=afed.version.at[idx].set(new_version),
+            server_version=new_version,
+            finish_time=afed.finish_time.at[idx].set(t_event + new_delays),
+            now=t_event,
+            key=k_carry,
+            agg_state=agg_state,
+            server_opt=server_opt_state)
+        new_state = engine.TrainState(
+            params={"client": stack_client_params(new_global, K),
+                    "server": new_ws},
+            opt_state={"client": opt_c, "server": sub.opt_state["server"]},
+            step=sub.step)
+        metrics = dict(metrics)
+        metrics.update(arrival_mask=arrival_mask, staleness=staleness,
+                       staleness_mean=(staleness * arrival_mask).sum()
+                       / jnp.maximum(arrival_mask.sum(), 1.0),
+                       t_event=t_event,
+                       server_version=new_version)
+        return new_state, new_afed, metrics
+
+    return async_fn

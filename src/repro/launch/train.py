@@ -31,12 +31,30 @@ Participation comes in two modes, selected by ``--participation``:
 ``--aggregator`` picks the FL-phase weighting (fedavg | weighted |
 bias_compensated | staleness_weighted) and ``--opt-state-policy`` the
 client optimizer state's round-boundary behavior (carry | reset |
-average).
+average). ``--slot-gather`` turns on the engine's sparse-slot compute
+path (gather the scheduler's fixed-size subset into a dense axis before
+the local scan), so a ``uniform:FRAC`` round costs ~FRAC of the full-K
+compute. ``--server-optimizer`` adds FedOpt on the server half (the
+round delta as a pseudo-gradient at ``--server-lr``).
+
+``--async`` switches to the asynchronous event runtime
+(:mod:`repro.fed.runtime`): clients finish after sampled delays
+(``--delay-spec``: zero | constant[:D] | uniform:LO:HI |
+lognormal[:MEDIAN[:SIGMA]]), each driver iteration pops the
+``--cohort`` earliest arrivals, runs their T local iterations from
+their per-client snapshots (sparse-slot compute), and folds them into
+the global model with ``--staleness-decay``-weighted delayed
+aggregation mixed at ``--mix-rate``. ``--delay-spec zero --cohort K``
+reproduces the synchronous rounds exactly.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
       --rounds 20 --clients 16 --participation uniform:0.25 --seq 128 \
       --aggregator bias_compensated --optimizer momentum \
       --schedule cosine --warmup 10
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
+      --rounds 40 --clients 16 --async --cohort 4 \
+      --delay-spec lognormal:1:1.5 --staleness-decay 0.5
 """
 from __future__ import annotations
 
@@ -101,6 +119,27 @@ def main():
                     choices=engine.OPT_STATE_POLICIES,
                     help="client optimizer state at the round boundary "
                          "(see engine.make_round_runner)")
+    ap.add_argument("--slot-gather", action="store_true",
+                    help="sparse-slot compute: gather the scheduler's "
+                         "fixed subset into a dense axis before the local "
+                         "scan (needs a scheduler spec --participation)")
+    ap.add_argument("--server-optimizer", default="none",
+                    choices=("none", "sgd", "momentum", "adamw"),
+                    help="FedOpt on the server half's round/event delta")
+    ap.add_argument("--server-lr", type=float, default=1.0)
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="asynchronous event runtime (fed.make_async_runner)"
+                         " instead of barrier rounds")
+    ap.add_argument("--delay-spec", default="lognormal:1:1",
+                    help="completion-delay model for --async: zero | "
+                         "constant[:D] | uniform:LO:HI | "
+                         "lognormal[:MEDIAN[:SIGMA]]")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="arrivals per async event (0 = clients/4, min 1)")
+    ap.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="per-version decay of stale arrivals' weights")
+    ap.add_argument("--mix-rate", type=float, default=1.0,
+                    help="global-model mixing rate toward the cohort average")
     ap.add_argument("--local-iters", type=int, default=5)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--server-batch", type=int, default=16)
@@ -144,12 +183,35 @@ def main():
         part_frac = 1.0
         scheduler = fed.make_participation(args.participation, args.clients)
     aggregator = fed.make_aggregator(args.aggregator)
+    server_opt = (None if args.server_optimizer == "none"
+                  else make_optimizer(args.server_optimizer,
+                                      momentum=args.momentum,
+                                      weight_decay=args.weight_decay))
+    if args.async_mode and args.no_scan:
+        raise SystemExit("--async compiles whole events; drop --no-scan")
+    if args.async_mode and scheduler is not None:
+        raise SystemExit("--async replaces participation scheduling (the "
+                         "arrival cohort IS the participating subset); "
+                         "drop the --participation spec")
+    if args.slot_gather and scheduler is None:
+        raise SystemExit("--slot-gather needs a scheduler spec "
+                         "(--participation uniform:FRAC | dirichlet:FRAC)")
     if args.no_scan and (scheduler is not None
                          or args.aggregator != "weighted"
-                         or args.opt_state_policy != "carry"):
+                         or args.opt_state_policy != "carry"
+                         or server_opt is not None):
         raise SystemExit("--no-scan supports only the legacy federation "
                          "settings (fraction participation, weighted "
-                         "aggregator, carry opt-state policy)")
+                         "aggregator, carry opt-state policy, no server "
+                         "optimizer)")
+    if aggregator.stateful and args.async_mode:
+        # the runtime already tracks per-client ages via version counters
+        # and decays arrivals by --staleness-decay; a staleness aggregator
+        # on top would decay twice
+        raise SystemExit(f"--aggregator {args.aggregator} double-decays "
+                         "under --async (the runtime applies "
+                         "--staleness-decay itself); use a stateless "
+                         "aggregator")
     if aggregator.stateful and scheduler is None:
         # legacy fraction mode re-samples WHICH clients occupy the C
         # stacked slots every round, so per-slot aggregator state (e.g.
@@ -170,7 +232,8 @@ def main():
                       args.seed)
     model = transformer_split_model(cfg)
     key = jax.random.PRNGKey(args.seed)
-    C = args.clients if scheduler is not None else sc.clients_per_round
+    C = (args.clients if scheduler is not None or args.async_mode
+         else sc.clients_per_round)
     params = engine.init_scala_params(
         key,
         lambda k: T.init_params(k, cfg)["client"],
@@ -188,35 +251,68 @@ def main():
     sched = build_schedule(args, args.rounds * sc.local_iters)
     state = engine.init_train_state(params, opt)
 
-    thread_fed = scheduler is not None or aggregator.stateful
-    fed_state = (fed.init_fed_state(jax.random.PRNGKey(args.seed + 1),
-                                    aggregator, scheduler, num_clients=C)
-                 if thread_fed else None)
+    if args.unroll == -1:
+        unroll = True if jax.default_backend() == "cpu" else 1
+    else:
+        unroll = True if args.unroll == 0 else args.unroll
 
-    if args.no_scan:
+    afed = None
+    if args.async_mode:
+        delays = fed.make_delays(args.delay_spec)
+        cohort = args.cohort if args.cohort > 0 else max(1, args.clients // 4)
+        print(f"async: delay={args.delay_spec} cohort={cohort}/{C} "
+              f"staleness_decay={args.staleness_decay} "
+              f"mix_rate={args.mix_rate}")
+        round_fn = jax.jit(fed.make_async_runner(
+            model, sc, backend="lace", optimizer=opt, schedule=sched,
+            delays=delays, cohort=cohort,
+            staleness_decay=args.staleness_decay, mix_rate=args.mix_rate,
+            aggregator=aggregator, server_optimizer=server_opt,
+            server_lr=args.server_lr,
+            opt_state_policy=args.opt_state_policy, unroll=unroll))
+        afed = fed.init_async_state(
+            jax.random.PRNGKey(args.seed + 1), params["client"], delays,
+            aggregator=aggregator, server_optimizer=server_opt,
+            server_params=params["server"])
+        thread_fed = False
+        fed_state = None
+    elif args.no_scan:
+        thread_fed = False
+        fed_state = None
         step = jax.jit(engine.make_split_step(model, sc, backend="lace",
                                               optimizer=opt, schedule=sched))
     else:
-        if args.unroll == -1:
-            unroll = True if jax.default_backend() == "cpu" else 1
-        else:
-            unroll = True if args.unroll == 0 else args.unroll
+        thread_fed = (scheduler is not None or aggregator.stateful
+                      or server_opt is not None)
+        fed_state = (fed.init_fed_state(jax.random.PRNGKey(args.seed + 1),
+                                        aggregator, scheduler, num_clients=C,
+                                        server_optimizer=server_opt,
+                                        server_params=params["server"])
+                     if thread_fed else None)
         round_fn = jax.jit(engine.make_round_runner(
             model, sc, backend="lace", optimizer=opt, schedule=sched,
             unroll=unroll, aggregator=aggregator, participation=scheduler,
-            opt_state_policy=args.opt_state_policy))
+            opt_state_policy=args.opt_state_policy,
+            slot_gather=args.slot_gather, server_optimizer=server_opt,
+            server_lr=args.server_lr))
     rng = np.random.default_rng(args.seed)
 
     for rnd in range(args.rounds):
         t0 = time.time()
-        if scheduler is not None:
+        if scheduler is not None or args.async_mode:
             selected = np.arange(args.clients)   # all slots; mask in-program
         else:
             selected = sample_clients(args.clients, C, rng)
         batches = lm_round_batches(data, selected, sc.server_batch,
                                    sc.local_iters, rng)
         sizes = jnp.asarray(batches.pop("sizes"))
-        if args.no_scan:
+        extra = ""
+        if args.async_mode:
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            state, afed, metrics = round_fn(state, afed, batches, sizes)
+            extra = (f" t={float(metrics['t_event']):.2f}"
+                     f" stale={float(metrics['staleness_mean']):.2f}")
+        elif args.no_scan:
             metrics = None
             for t in range(sc.local_iters):
                 batch_t = {k: jnp.asarray(v[t]) for k, v in batches.items()}
@@ -231,8 +327,9 @@ def main():
             else:
                 state, metrics = round_fn(state, batches, sizes)
         dt = time.time() - t0
-        print(f"round {rnd:3d} loss_s={float(metrics['loss_server']):.4f} "
-              f"loss_c={float(metrics['loss_client']):.4f} ({dt:.1f}s)",
+        label = "event" if args.async_mode else "round"
+        print(f"{label} {rnd:3d} loss_s={float(metrics['loss_server']):.4f} "
+              f"loss_c={float(metrics['loss_client']):.4f}{extra} ({dt:.1f}s)",
               flush=True)
         if args.checkpoint_dir:
             save(args.checkpoint_dir, rnd, state.params)

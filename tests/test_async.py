@@ -1,0 +1,520 @@
+"""Async execution layer: equivalence suite.
+
+The acceptance bars for the refactor:
+
+(a) the async runner with zero delays and a full-size cohort reproduces
+    the sync round runner at fp32 tolerance (the sync round IS the
+    zero-delay special case);
+(b) the sparse-slot round (slot_gather=True) matches the masked round
+    for identical masks — losses, params, and the FL phase;
+(c) the staleness ages tracked by AsyncFedState's version counters match
+    the sync ``staleness_weighted`` aggregator's age simulation given
+    the same arrival masks.
+
+Plus: delay models, the event schedule's cohort pop, server-side FedOpt
+on both the SCALA runner and the FL baselines, and the legacy
+deprecation shims.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro import fed, optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.core.scala import alexnet_split_model, transformer_split_model
+from repro.models import alexnet as A
+from repro.models import transformer as T
+
+
+def _tree_allclose(a, b, atol=2e-5, rtol=1e-4):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(x, y, atol=atol, rtol=rtol)
+
+
+def _setup_alexnet(key, C=4, num_classes=10):
+    model = alexnet_split_model("s2", num_classes=num_classes)
+    full = A.init_params(key, num_classes=num_classes, width=0.125)
+    wc, ws = A.split_params(full, "s2")
+    params = {"client": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+        "server": ws}
+    return model, params
+
+
+def _alexnet_round_batches(key, T_steps=3, C=4, Bk=6, num_classes=10):
+    kx, ky = jax.random.split(key)
+    return {"x": jax.random.normal(kx, (T_steps, C, Bk, 32, 32, 3)),
+            "labels": jax.random.randint(ky, (T_steps, C, Bk), 0,
+                                         num_classes),
+            "weights": jnp.ones((T_steps, C, Bk), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# delay models
+# --------------------------------------------------------------------------
+
+
+def test_delay_models_shapes_and_support():
+    key = jax.random.PRNGKey(0)
+    d = fed.delays.constant(2.5).sample(key, (7,))
+    np.testing.assert_allclose(np.asarray(d), 2.5)
+    d = fed.delays.uniform(0.5, 2.0).sample(key, (100,))
+    assert d.shape == (100,) and d.dtype == jnp.float32
+    arr = np.asarray(d)
+    assert (arr >= 0.5).all() and (arr <= 2.0).all()
+    d = np.asarray(fed.delays.lognormal(1.0, 1.5).sample(key, (2000,)))
+    assert (d > 0).all()
+    # heavy tail: the max dwarfs the median
+    assert d.max() > 5 * np.median(d)
+
+
+def test_make_delays_specs():
+    assert fed.make_delays("zero").name == "constant"
+    assert float(fed.make_delays("zero").sample(
+        jax.random.PRNGKey(0), (1,))[0]) == 0.0
+    assert fed.make_delays("constant:3").name == "constant"
+    assert fed.make_delays("uniform:1:2").name == "uniform"
+    assert fed.make_delays("lognormal").name == "lognormal"
+    assert fed.make_delays("lognormal:2:0.5").name == "lognormal"
+    with pytest.raises(ValueError, match="unknown delay model"):
+        fed.make_delays("nope")
+    with pytest.raises(ValueError, match="uniform spec"):
+        fed.make_delays("uniform:1")
+    with pytest.raises(ValueError, match=">= 0"):
+        fed.delays.constant(-1.0)
+    with pytest.raises(ValueError, match="lo <= hi"):
+        fed.delays.uniform(3.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# the event schedule
+# --------------------------------------------------------------------------
+
+
+def test_arrival_cohort_pops_earliest_with_slot_tiebreak():
+    ft = jnp.array([3.0, 1.0, 2.0, 1.0])
+    idx, mask, t = fed.arrival_cohort(ft, 2)
+    # the two t=1.0 finishers, tie broken by slot id; ascending ids
+    np.testing.assert_array_equal(np.asarray(idx), [1, 3])
+    np.testing.assert_array_equal(np.asarray(mask), [0, 1, 0, 1])
+    assert float(t) == 1.0
+    idx, mask, t = fed.arrival_cohort(ft, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2, 3])
+    assert float(t) == 2.0
+    # with versions, finish-time ties go to the longest-waiting client
+    idx, _, _ = fed.arrival_cohort(jnp.array([1.0, 1.0, 1.0, 2.0]), 2,
+                                   jnp.array([5, 3, 4, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2])
+
+
+def test_zero_delay_partial_cohort_rotates_without_starvation():
+    """Regression: tied finish times + cohort < K must not starve the
+    high slot ids — version tie-break makes zero delays round-robin."""
+    key = jax.random.PRNGKey(30)
+    C = 4
+    model, params = _setup_alexnet(key, C=C)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1), C=C)
+    dm = fed.delays.constant(0.0)
+    async_fn = jax.jit(fed.make_async_runner(
+        model, sc, backend="logits", delays=dm, cohort=2,
+        staleness_decay=0.5))
+    state = engine.init_train_state(params, optim.sgd())
+    afed = fed.init_async_state(jax.random.PRNGKey(31), params["client"], dm)
+    masks = []
+    for _ in range(4):
+        state, afed, m = async_fn(state, afed, rb, None)
+        masks.append(np.asarray(m["arrival_mask"]))
+    np.testing.assert_array_equal(masks[0], [1, 1, 0, 0])
+    np.testing.assert_array_equal(masks[1], [0, 0, 1, 1])
+    np.testing.assert_array_equal(masks[2], [1, 1, 0, 0])
+    np.testing.assert_array_equal(masks[3], [0, 0, 1, 1])
+    # every slot trained: all versions advanced past 0
+    assert int(np.asarray(afed.version).min()) > 0
+
+
+def test_slot_gather_indices_orders_participants():
+    mask = jnp.array([0.0, 1.0, 0.0, 1.0, 1.0])
+    idx = engine.slot_gather_indices(mask, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 3, 4])
+
+
+# --------------------------------------------------------------------------
+# (a) zero delays == the sync round runner
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum"])
+def test_async_zero_delay_full_cohort_matches_sync(opt_name):
+    key = jax.random.PRNGKey(1)
+    C = 4
+    model, params = _setup_alexnet(key, C=C)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1), C=C)
+    sizes = jnp.array([3.0, 1.0, 2.0, 4.0])
+    opt = optim.make_optimizer(opt_name)
+
+    sync_fn = jax.jit(engine.make_round_runner(model, sc, backend="logits",
+                                               optimizer=opt))
+    dm = fed.delays.constant(0.0)
+    async_fn = jax.jit(fed.make_async_runner(
+        model, sc, backend="logits", optimizer=opt, delays=dm, cohort=C,
+        staleness_decay=0.5))
+
+    s_sync = s_async = engine.init_train_state(params, opt)
+    afed = fed.init_async_state(jax.random.PRNGKey(2), params["client"], dm)
+    for _ in range(3):
+        s_sync, m_sync = sync_fn(s_sync, rb, sizes)
+        s_async, afed, m_async = async_fn(s_async, afed, rb, sizes)
+    _tree_allclose(s_sync.params, s_async.params, atol=1e-6, rtol=1e-6)
+    _tree_allclose(s_sync.opt_state, s_async.opt_state, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(m_sync["loss_server"], m_async["loss_server"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(m_sync["loss_client"], m_async["loss_client"],
+                               rtol=1e-6)
+    assert int(s_async.step) == int(s_sync.step) == 9
+    # every event was a full barrier at staleness 0
+    np.testing.assert_array_equal(np.asarray(m_async["arrival_mask"]),
+                                  np.ones(C))
+    np.testing.assert_array_equal(np.asarray(m_async["staleness"]),
+                                  np.zeros(C))
+    assert int(afed.server_version) == 3
+    np.testing.assert_array_equal(np.asarray(afed.version), np.full(C, 3))
+
+
+# --------------------------------------------------------------------------
+# (b) sparse-slot round == masked round for identical masks
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("agg_name,policy", [("fedavg", "carry"),
+                                             ("bias_compensated", "average")])
+def test_sparse_slot_round_matches_masked(agg_name, policy):
+    key = jax.random.PRNGKey(3)
+    C = 4
+    model, params = _setup_alexnet(key, C=C)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1), C=C)
+    sizes = jnp.array([3.0, 1.0, 2.0, 4.0])
+    agg, part = fed.make_aggregator(agg_name), fed.uniform(C, 0.5)
+    assert part.subset_size == 2
+
+    runners = {}
+    for name, gather in (("masked", False), ("sparse", True)):
+        runners[name] = jax.jit(engine.make_round_runner(
+            model, sc, backend="logits", aggregator=agg, participation=part,
+            slot_gather=gather, opt_state_policy=policy))
+    # same fed-state key => identical per-round masks in both runners
+    states = {k: engine.init_train_state(params, optim.sgd())
+              for k in runners}
+    feds = {k: fed.init_fed_state(jax.random.PRNGKey(4), agg, part)
+            for k in runners}
+    for _ in range(2):
+        ms = {}
+        for k, fn in runners.items():
+            states[k], feds[k], ms[k] = fn(states[k], rb, sizes, feds[k])
+        np.testing.assert_allclose(ms["masked"]["loss_server"],
+                                   ms["sparse"]["loss_server"], rtol=1e-6)
+        np.testing.assert_allclose(ms["masked"]["loss_client"],
+                                   ms["sparse"]["loss_client"], rtol=1e-6)
+    _tree_allclose(states["masked"].params, states["sparse"].params,
+                   atol=1e-6, rtol=1e-5)
+    assert int(states["sparse"].step) == int(states["masked"].step)
+
+
+def test_slot_gather_validation():
+    import dataclasses
+
+    model, _ = _setup_alexnet(jax.random.PRNGKey(5))
+    sc = ScalaConfig(lr=0.05)
+    with pytest.raises(ValueError, match="participation scheduler"):
+        engine.make_round_runner(model, sc, slot_gather=True)
+    # a custom scheduler without a static subset size cannot gather —
+    # refuse rather than silently fall back to full-K compute
+    no_size = dataclasses.replace(fed.uniform(4, 0.5), subset_size=None)
+    with pytest.raises(ValueError, match="static subset_size"):
+        engine.make_round_runner(model, sc, slot_gather=True,
+                                 participation=no_size)
+    with pytest.raises(ValueError, match="lace_dp"):
+        engine.make_round_runner(model, sc, backend="lace_dp",
+                                 slot_gather=True,
+                                 participation=fed.uniform(4, 0.5))
+    with pytest.raises(ValueError, match="lace_dp"):
+        fed.make_async_runner(model, sc, backend="lace_dp",
+                              delays=fed.delays.constant(0.0), cohort=2)
+    with pytest.raises(ValueError, match="cohort"):
+        fed.make_async_runner(model, sc, delays=fed.delays.constant(0.0),
+                              cohort=0)
+
+
+def test_slot_gather_full_participation_is_noop_pass_through():
+    """slot_gather with the full scheduler degrades to the masked path
+    (subset == all slots) and still matches the default runner."""
+    key = jax.random.PRNGKey(6)
+    model, params = _setup_alexnet(key)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1))
+    part = fed.full(4)
+    runner = jax.jit(engine.make_round_runner(
+        model, sc, backend="logits", participation=part, slot_gather=True))
+    state0 = engine.init_train_state(params, optim.sgd())
+    fs = fed.init_fed_state(jax.random.PRNGKey(0), None, part)
+    s, _, _ = runner(state0, rb, None, fs)
+    s_ref, _ = jax.jit(engine.make_round_runner(
+        model, sc, backend="logits"))(state0, rb, None)
+    _tree_allclose(s.params, s_ref.params, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# (c) AsyncFedState staleness == the sync staleness_weighted simulation
+# --------------------------------------------------------------------------
+
+
+def test_async_staleness_matches_sync_age_simulation():
+    key = jax.random.PRNGKey(7)
+    C = 4
+    model, params = _setup_alexnet(key, C=C)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1), C=C)
+    dm = fed.delays.constant(1.0)
+    async_fn = jax.jit(fed.make_async_runner(
+        model, sc, backend="logits", delays=dm, cohort=2,
+        staleness_decay=0.5))
+    state = engine.init_train_state(params, optim.sgd())
+    afed = fed.init_async_state(jax.random.PRNGKey(8), params["client"], dm)
+
+    sim = fed.staleness_weighted(decay=0.5)
+    sim_state = sim.init(C)
+    for _ in range(5):
+        # the sync aggregator's age *entering* the round is the async
+        # runner's pre-event staleness
+        pre_ages = np.asarray(sim_state["age"])
+        state, afed, m = async_fn(state, afed, rb, None)
+        np.testing.assert_array_equal(np.asarray(m["staleness"]), pre_ages)
+        _, sim_state = sim.client_weights(
+            fed.AggContext(num_clients=C, mask=m["arrival_mask"]), sim_state)
+        # and the post-event version gap is the sync aggregator's new age
+        np.testing.assert_array_equal(
+            np.asarray(afed.server_version - afed.version),
+            np.asarray(sim_state["age"], np.int32))
+
+
+def test_async_invariants_and_metrics_under_heavy_tail():
+    key = jax.random.PRNGKey(9)
+    C = 6
+    model, params = _setup_alexnet(key, C=C)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1), C=C)
+    dm = fed.make_delays("lognormal:1:1.5")
+    async_fn = jax.jit(fed.make_async_runner(
+        model, sc, backend="logits", delays=dm, cohort=2,
+        staleness_decay=0.5, mix_rate=0.8))
+    state = engine.init_train_state(params, optim.sgd())
+    afed = fed.init_async_state(jax.random.PRNGKey(10), params["client"], dm)
+    last_now = 0.0
+    for e in range(6):
+        state, afed, m = async_fn(state, afed, rb, None)
+        assert float(m["arrival_mask"].sum()) == 2
+        now = float(afed.now)
+        assert now >= last_now          # the event clock is monotone
+        last_now = now
+        # busy clients' deadlines are never in the past
+        assert bool((np.asarray(afed.finish_time) >= now - 1e-6).all())
+        # versions never exceed the server's
+        assert int(np.asarray(afed.version).max()) <= int(afed.server_version)
+        assert np.isfinite(float(m["loss_server"]))
+    assert int(afed.server_version) == 6
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # the global client half stays slot-unified in TrainState
+    c0 = jax.tree.leaves(state.params["client"])[0]
+    np.testing.assert_allclose(np.asarray(c0[0]), np.asarray(c0[1]))
+
+
+def test_async_runner_lace_backend_smoke():
+    cfg = tiny_cfg()
+    model = transformer_split_model(cfg)
+    C, Bk, S, T_steps = 4, 2, 8, 2
+    params = engine.init_scala_params(
+        jax.random.PRNGKey(11),
+        lambda k: T.init_params(k, cfg)["client"],
+        lambda k: T.init_params(k, cfg)["server"], C)
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    rb = {"tokens": jax.random.randint(ks[0], (T_steps, C, Bk, S), 0,
+                                       cfg.vocab_size),
+          "labels": jax.random.randint(ks[1], (T_steps, C, Bk, S), 0,
+                                       cfg.vocab_size),
+          "weights": jnp.ones((T_steps, C, Bk, S), jnp.float32)}
+    sc = ScalaConfig(lr=0.05)
+    dm = fed.delays.uniform(0.5, 2.0)
+    async_fn = jax.jit(fed.make_async_runner(
+        model, sc, backend="lace", ce_chunk=8, delays=dm, cohort=2,
+        staleness_decay=0.5, server_optimizer=optim.momentum(0.9),
+        server_lr=1.0))
+    state = engine.init_train_state(params, optim.sgd())
+    afed = fed.init_async_state(jax.random.PRNGKey(13), params["client"], dm,
+                                server_optimizer=optim.momentum(0.9),
+                                server_params=params["server"])
+    for _ in range(2):
+        state, afed, m = async_fn(state, afed, rb, None)
+    assert np.isfinite(float(m["loss_server"]))
+    assert int(state.step) == 2 * T_steps
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_init_async_state_requires_server_params_for_fedopt():
+    _, params = _setup_alexnet(jax.random.PRNGKey(14))
+    with pytest.raises(ValueError, match="server_params"):
+        fed.init_async_state(jax.random.PRNGKey(0), params["client"],
+                             fed.delays.constant(0.0),
+                             server_optimizer=optim.sgd())
+
+
+# --------------------------------------------------------------------------
+# server-side FedOpt
+# --------------------------------------------------------------------------
+
+
+def test_server_fedopt_sgd_identity_and_momentum_diverges():
+    key = jax.random.PRNGKey(15)
+    model, params = _setup_alexnet(key)
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.fold_in(key, 1))
+    sizes = jnp.ones((4,))
+    state0 = engine.init_train_state(params, optim.sgd())
+    ref_fn = jax.jit(engine.make_round_runner(model, sc, backend="logits"))
+    s_ref = state0
+    for _ in range(3):
+        s_ref, _ = ref_fn(s_ref, rb, sizes)
+
+    # plain SGD at server_lr=1 reproduces the default round exactly
+    fs = fed.init_fed_state(jax.random.PRNGKey(0),
+                            server_optimizer=optim.sgd(),
+                            server_params=params["server"])
+    id_fn = jax.jit(engine.make_round_runner(
+        model, sc, backend="logits", server_optimizer=optim.sgd(),
+        server_lr=1.0))
+    s_id = state0
+    for _ in range(3):
+        s_id, fs, _ = id_fn(s_id, rb, sizes, fs)
+    _tree_allclose(s_id.params, s_ref.params, atol=1e-6, rtol=1e-6)
+
+    # server momentum must alter the server half but never the client FL
+    mom = optim.momentum(0.9)
+    fs_m = fed.init_fed_state(jax.random.PRNGKey(0), server_optimizer=mom,
+                              server_params=params["server"])
+    m_fn = jax.jit(engine.make_round_runner(
+        model, sc, backend="logits", server_optimizer=mom, server_lr=1.0))
+    s_m = state0
+    for _ in range(3):
+        s_m, fs_m, _ = m_fn(s_m, rb, sizes, fs_m)
+    d_server = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(s_m.params["server"]),
+        jax.tree.leaves(s_ref.params["server"])))
+    assert d_server > 1e-6
+    # momentum state threads across rounds
+    assert any(float(jnp.abs(l).max()) > 0
+               for l in jax.tree.leaves(fs_m["server_opt"]))
+
+
+def test_server_fedopt_requires_fed_state():
+    model, params = _setup_alexnet(jax.random.PRNGKey(16))
+    sc = ScalaConfig(lr=0.05)
+    rb = _alexnet_round_batches(jax.random.PRNGKey(17))
+    runner = engine.make_round_runner(model, sc, backend="logits",
+                                      server_optimizer=optim.sgd())
+    state = engine.init_train_state(params, optim.sgd())
+    with pytest.raises(ValueError, match="server_optimizer needs fed_state"):
+        runner(state, rb, None)
+    with pytest.raises(ValueError, match="server_opt"):
+        runner(state, rb, None, {"sched": (), "agg": ()})
+    with pytest.raises(ValueError, match="server_params"):
+        fed.init_fed_state(jax.random.PRNGKey(0),
+                           server_optimizer=optim.sgd())
+
+
+def test_fl_baseline_fedopt_round():
+    from repro.core import baselines as B
+
+    num_classes = 6
+    model = B.FedModel(
+        forward=lambda p, x: x.reshape(x.shape[0], -1) @ p["w"],
+        num_classes=num_classes)
+    key = jax.random.PRNGKey(18)
+    w = {"w": jax.random.normal(key, (12, num_classes)) * 0.1}
+    C, T_steps, Bk = 3, 2, 4
+    rbs = {"x": jax.random.normal(jax.random.fold_in(key, 1),
+                                  (C, T_steps, Bk, 12)),
+           "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                        (C, T_steps, Bk), 0, num_classes)}
+    sizes = jnp.array([2.0, 1.0, 1.0])
+
+    ref_fn = B.make_fl_round("fedavg", model, lr=0.1)
+    w_ref, _ = ref_fn(w, rbs, sizes, {})
+
+    # FedOpt identity: plain SGD at server_lr=1
+    id_fn = B.make_fl_round("fedavg", model, lr=0.1,
+                            server_optimizer=optim.sgd(), server_lr=1.0)
+    st = B.init_fl_state("fedavg", w, C, server_optimizer=optim.sgd())
+    w_id, _ = id_fn(w, rbs, sizes, st)
+    _tree_allclose(w_id, w_ref, atol=1e-6, rtol=1e-6)
+
+    # FedAvgM: momentum accumulates over rounds and diverges from FedAvg
+    mom_fn = jax.jit(lambda wg, rb, ds, st: B.make_fl_round(
+        "fedavg", model, lr=0.1, server_optimizer=optim.momentum(0.9),
+        server_lr=1.0)(wg, rb, ds, st))
+    st = B.init_fl_state("fedavg", w, C,
+                         server_optimizer=optim.momentum(0.9))
+    w_m = w
+    for _ in range(3):
+        w_m, st = mom_fn(w_m, rbs, sizes, st)
+    for leaf in jax.tree.leaves(w_m):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert any(float(jnp.abs(l).max()) > 0
+               for l in jax.tree.leaves(st["server_opt"]))
+
+    # feddyn keeps its h state alongside the server opt state
+    st_dyn = B.init_fl_state("feddyn", w, C, server_optimizer=optim.sgd())
+    assert "h" in st_dyn and "server_opt" in st_dyn
+    dyn_fn = B.make_fl_round("feddyn", model, lr=0.1,
+                             server_optimizer=optim.sgd(), server_lr=1.0)
+    _, st_dyn2 = dyn_fn(w, rbs, sizes, st_dyn)
+    assert "h" in st_dyn2 and "server_opt" in st_dyn2
+
+    with pytest.raises(ValueError, match="server_opt"):
+        id_fn(w, rbs, sizes, {})
+
+
+# --------------------------------------------------------------------------
+# legacy deprecation shims
+# --------------------------------------------------------------------------
+
+
+def test_legacy_entry_points_warn_once():
+    from repro.core import scala as legacy
+
+    model, params = _setup_alexnet(jax.random.PRNGKey(19), C=2)
+    batch = jax.tree.map(lambda a: a[0], _alexnet_round_batches(
+        jax.random.PRNGKey(20), T_steps=1, C=2, Bk=4))
+    sc = ScalaConfig(lr=0.05)
+
+    legacy._DEPRECATION_WARNED.discard("scala_local_step")
+    with pytest.warns(DeprecationWarning, match="make_split_step"):
+        legacy.scala_local_step(model, params, batch, sc)
+    # second call: silent (warns once per process)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        legacy.scala_local_step(model, params, batch, sc)
+
+    rb = _alexnet_round_batches(jax.random.PRNGKey(21), T_steps=2, C=2, Bk=4)
+    legacy._DEPRECATION_WARNED.discard("scala_round")
+    with pytest.warns(DeprecationWarning, match="make_round_runner"):
+        legacy.scala_round(model, params, rb, sc)
