@@ -5,30 +5,27 @@ paper's AlexNet (width-scaled for CPU tractability; width=1.0 recovers
 the exact Appendix-E architecture): K clients, participation r, T local
 iterations, server batch B, SGD eta=0.01, quantity (alpha) or Dirichlet
 (beta) label skew — then runs SCALA and every baseline through it.
+
+Since the ``repro.api`` redesign, :func:`run_experiment` is a thin
+kwargs adapter: it assembles a declarative
+:class:`repro.api.ExperimentSpec` and runs it through
+:class:`repro.api.Trainer`, so the benchmarks execute the *same*
+programs as ``launch/train.py`` — including the execution-mode
+vocabulary (``subset | masked | sparse | async``), which is owned by
+:class:`repro.api.ExecutionSpec` and can no longer drift between
+drivers.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import fed
+from repro import api
 from repro.configs import ScalaConfig
-from repro.core import baselines as B
-from repro.core import engine
-from repro.core.engine import SplitModel
-from repro.core.losses import accuracy, per_class_accuracy
-from repro import optim
-from repro.data.loader import FederatedData, round_batches, sample_clients
-from repro.data.partition import partition
-from repro.data.synthetic import gaussian_images
-from repro.models import alexnet as A
 
-SCALA_METHODS = ("scala", "scala_noadj")
-ALL_METHODS = SCALA_METHODS + B.FL_METHODS + B.SFL_METHODS
+# the method registry is owned by the spec layer — one vocabulary
+SCALA_METHODS = api.SCALA_METHODS
+ALL_METHODS = api.METHODS
 
 
 def emit_bench(res: Dict, out: Optional[str], default_name: str,
@@ -51,200 +48,62 @@ def emit_bench(res: Dict, out: Optional[str], default_name: str,
     print(f"wrote {path}")
 
 
-def make_dataset(n_train=2000, n_test=1000, num_classes=10, seed=0):
-    x, y = gaussian_images(n_train + n_test, num_classes=num_classes,
-                           seed=seed)
-    return (x[:n_train], y[:n_train]), (x[n_train:], y[n_train:])
+def experiment_spec(method: str, *, alpha: Optional[int] = None,
+                    beta: Optional[float] = None, K: int = 20, r: float = 0.2,
+                    T: int = 5, rounds: int = 12, server_batch: int = 48,
+                    lr: float = 0.05, width: float = 0.125,
+                    num_classes: int = 10, n_train: int = 2000,
+                    split: str = "s2", seed: int = 0,
+                    aggregator: Optional[str] = None,
+                    opt_state_policy: str = "carry",
+                    execution: str = "subset",
+                    server_optimizer: Optional[str] = None,
+                    server_lr: float = 1.0) -> api.ExperimentSpec:
+    """The paper-table kwargs -> a declarative ExperimentSpec."""
+    in_program = execution in ("masked", "sparse")
+    server_opt = (api.OptimSpec.parse(server_optimizer, default_lr=server_lr)
+                  if server_optimizer else None)
+    return api.ExperimentSpec(
+        arch="alexnet-cifar", split=split, width=width,
+        method=method, rounds=rounds, seed=seed,
+        scala=ScalaConfig(num_clients=K, participation=r, local_iters=T,
+                          server_batch=server_batch, lr=lr),
+        fed=api.FedSpec(aggregator=aggregator or "weighted",
+                        participation=f"uniform:{r}" if in_program else None,
+                        opt_state_policy=opt_state_policy),
+        # full unroll: XLA:CPU runs rolled-loop bodies with reduced
+        # parallelism (benchmarks/round_loop)
+        execution=api.ExecutionSpec(mode=execution, backend="logits",
+                                    server_optimizer=server_opt, unroll=0),
+        data=api.DataSpec(kind="image_synthetic", n_train=n_train,
+                          num_classes=num_classes, alpha=alpha, beta=beta))
 
 
-def _alexnet_fed_model(num_classes, split):
-    def fwd(p, x):
-        return A.forward(p, x, split)
-
-    def feats(p, x):
-        # features before the classifier: last FC activation
-        return A.features(p, x)
-
-    return B.FedModel(forward=fwd, num_classes=num_classes, features=feats)
-
-
-def _alexnet_split_model(num_classes, split):
-    def client_fwd(wc, batch):
-        return {"x": A.client_forward_from_split(wc, batch["x"], split)}
-
-    def server_fwd(ws, acts):
-        return (A.server_forward_from_split(ws, acts["x"], split),
-                jnp.zeros((), jnp.float32))
-
-    return SplitModel(client_fwd=client_fwd, server_fwd=server_fwd,
-                      num_classes=num_classes)
-
-
-def run_experiment(method: str, *, alpha: Optional[int] = None,
-                   beta: Optional[float] = None, K: int = 20, r: float = 0.2,
-                   T: int = 5, rounds: int = 12, server_batch: int = 48,
-                   lr: float = 0.05, width: float = 0.125,
-                   num_classes: int = 10, n_train: int = 2000,
-                   split: str = "s2", seed: int = 0,
-                   aggregator: Optional[str] = None,
-                   opt_state_policy: str = "carry",
-                   execution: str = "subset",
-                   server_optimizer: Optional[str] = None,
-                   server_lr: float = 1.0) -> Dict:
+def run_experiment(method: str, **kw) -> Dict:
     """Returns {'acc', 'balanced_acc', 'seconds'} on the held-out test set.
 
-    ``aggregator``: optional :mod:`repro.fed` aggregator name for the FL
+    Keyword surface documented on :func:`experiment_spec`; notable ones:
+
+    ``aggregator``: optional :mod:`repro.fed` aggregator spec for the FL
     phase (None = legacy data-size FedAvg); ``opt_state_policy`` is the
     SCALA engine's client opt-state round-boundary policy.
 
-    ``execution`` (SCALA methods): how partial participation runs —
+    ``execution`` (SCALA methods): how partial participation runs — the
+    :class:`repro.api.ExecutionSpec` mode vocabulary. ``"subset"`` is
+    the legacy host-side sampling (C = r*K stacked compute slots);
+    ``"masked"`` / ``"sparse"`` keep all K slots and pick the
+    ``fed.uniform(K, r)`` subset in-program (full-K vs gathered
+    subset-cost compute). The per-round participant batch is held
+    comparable across modes (masked/sparse split ``server_batch / r``
+    over the K slots, eq. 3 — see :class:`repro.api.Trainer`).
 
-    * ``"subset"`` — legacy host-side sampling: each round stacks only
-      the C = r*K sampled clients (C compute slots);
-    * ``"masked"`` — all K slots stay stacked, an in-program
-      ``fed.uniform(K, r)`` mask picks the subset (full-K compute);
-    * ``"sparse"`` — same scheduler, but the engine gathers the subset
-      into a dense [C] axis before the local scan (``slot_gather``) —
-      subset compute at static shapes.
-
-    The per-round participant batch is held comparable across modes
-    (masked/sparse split ``server_batch / r`` over the K slots, eq. 3).
-
-    ``server_optimizer``: optional :mod:`repro.optim` optimizer name for
-    the server side — FedOpt over the SCALA server half's round delta,
-    or over the FL baselines' aggregated-model round delta (FedAvgM /
-    FedAdam) — applied at ``server_lr``."""
-    (x, y), (x_test, y_test) = make_dataset(n_train=n_train, seed=seed)
-    parts = partition(y, K, alpha=alpha, beta=beta, num_classes=num_classes,
-                      seed=seed)
-    data = FederatedData.from_partition(x, y, parts)
-    rng = np.random.default_rng(seed + 7)
-    key = jax.random.PRNGKey(seed)
-    C = max(1, round(K * r))
-    agg = fed.make_aggregator(aggregator) if aggregator else None
-    server_opt = (optim.make_optimizer(server_optimizer)
-                  if server_optimizer else None)
-    if execution not in ("subset", "masked", "sparse"):
-        raise ValueError(f"unknown execution mode {execution!r}")
+    ``server_optimizer``: optional optimizer spec for the server side —
+    FedOpt over the SCALA server half's round delta, or over the FL
+    baselines' aggregated-model round delta (FedAvgM / FedAdam) —
+    applied at ``server_lr``."""
     t0 = time.time()
-
-    full = A.init_params(key, num_classes=num_classes, width=width)
-    x_test_j = jnp.asarray(x_test)
-    y_test_j = jnp.asarray(y_test)
-
-    def finish(final_params_fwd):
-        logits = final_params_fwd(x_test_j)
-        return {
-            "acc": float(accuracy(logits, y_test_j)),
-            "balanced_acc": float(per_class_accuracy(logits, y_test_j,
-                                                     num_classes)),
-            "seconds": round(time.time() - t0, 1),
-        }
-
-    if method in SCALA_METHODS:
-        adjust = method == "scala"
-        sc = ScalaConfig(num_clients=K, participation=r, local_iters=T,
-                         server_batch=server_batch, lr=lr,
-                         adjust_server=adjust, adjust_client=adjust)
-        model = _alexnet_split_model(num_classes, split)
-        wc, ws = A.split_params(full, split)
-        in_program = execution in ("masked", "sparse")
-        slots = K if in_program else C
-        params = {"client": jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (slots,) + a.shape), wc),
-            "server": ws}
-        # engine round runner: T local iterations + FedAvg in ONE scanned
-        # XLA program (backend "logits": AlexNet materializes its 10-way
-        # logits; no trunk/head split needed). Full unroll: XLA:CPU runs
-        # rolled-loop bodies with reduced parallelism (benchmarks/round_loop).
-        scheduler = fed.uniform(K, r) if in_program else None
-        if agg is not None and agg.stateful and not in_program:
-            # the runner re-stacks a freshly sampled subset every round,
-            # so per-slot aggregator state would not track clients
-            raise ValueError(f"aggregator {agg.name!r} is stateful; "
-                             "run_experiment's host-side subset sampling "
-                             "has no stable client identities")
-        state = engine.init_train_state(params, optim.sgd())
-        round_fn = jax.jit(engine.make_round_runner(
-            model, sc, backend="logits", unroll=True, aggregator=agg,
-            participation=scheduler, slot_gather=execution == "sparse",
-            server_optimizer=server_opt, server_lr=server_lr,
-            opt_state_policy=opt_state_policy))
-        thread_fed = in_program or server_opt is not None
-        fed_state = (fed.init_fed_state(jax.random.fold_in(key, 11), agg,
-                                        scheduler, num_clients=slots,
-                                        server_optimizer=server_opt,
-                                        server_params=ws)
-                     if thread_fed else None)
-        # eq. (3) parity across modes: in-program modes split the budget
-        # over all K slots, so the r-subset sees ~server_batch samples
-        batch_budget = round(server_batch / r) if in_program else server_batch
-        for _ in range(rounds):
-            sel = (np.arange(K) if in_program
-                   else sample_clients(K, C, rng))
-            rb = round_batches(data, sel, batch_budget, T, rng)
-            sizes = jnp.asarray(rb.pop("sizes"))
-            batches = {k: jnp.asarray(v) for k, v in rb.items()}
-            if thread_fed:
-                state, fed_state, _ = round_fn(state, batches, sizes,
-                                               fed_state)
-            else:
-                state, _ = round_fn(state, batches, sizes)
-        wc0 = jax.tree.map(lambda a: a[0], state.params["client"])
-        merged = A.merge_params(wc0, state.params["server"])
-        return finish(lambda xs: A.forward(merged, xs, split))
-
-    if method in B.FL_METHODS:
-        model = _alexnet_fed_model(num_classes, split)
-        w = full
-        state = B.init_fl_state(method, w, C, server_optimizer=server_opt)
-        round_fn = jax.jit(
-            lambda wg, rb, ds, st: B.make_fl_round(
-                method, model, lr=lr, aggregator=agg,
-                server_optimizer=server_opt,
-                server_lr=server_lr)(wg, rb, ds, st))
-        for _ in range(rounds):
-            sel = sample_clients(K, C, rng)
-            rb = round_batches(data, sel, server_batch, T, rng)
-            sizes = jnp.asarray(rb.pop("sizes"))
-            # 'weights' stays: the local losses ignore it, but the fed
-            # aggregation priors use it to exclude zero-padded rows
-            batches = {k: jnp.asarray(v).swapaxes(0, 1)
-                       for k, v in rb.items()}
-            w, state = round_fn(w, batches, sizes, state)
-        return finish(lambda xs: A.forward(w, xs, split))
-
-    if method in B.SFL_METHODS:
-        model = _alexnet_split_model(num_classes, split)
-        wc, ws = A.split_params(full, split)
-        bcast = lambda t: jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), t)
-        state = {"wc": bcast(wc), "ws": ws}
-        aux_head_fwd = None
-        if method == "sfl_localloss":
-            feat_dim = None
-            probe = A.client_forward_from_split(wc, jnp.zeros((1, 32, 32, 3)),
-                                                split)
-            feat_dim = int(np.prod(probe.shape[1:]))
-            aux0 = {"w": jax.random.normal(key, (feat_dim, num_classes)) * 0.05}
-            state["aux"] = bcast(aux0)
-
-            def aux_head_fwd(p, feats):
-                return feats.reshape(feats.shape[0], -1) @ p["w"]
-
-        round_fn = B.make_sfl_round(method, model, lr=lr,
-                                    aux_head_fwd=aux_head_fwd,
-                                    aggregator=agg)
-        round_fn = jax.jit(round_fn)
-        for _ in range(rounds):
-            sel = sample_clients(K, C, rng)
-            rb = round_batches(data, sel, server_batch, T, rng)
-            sizes = jnp.asarray(rb.pop("sizes"))
-            batches = {k: jnp.asarray(v).swapaxes(0, 1)
-                       for k, v in rb.items()}
-            state = round_fn(state, batches, sizes)
-        wc0 = jax.tree.map(lambda a: a[0], state["wc"])
-        merged = A.merge_params(wc0, state["ws"])
-        return finish(lambda xs: A.forward(merged, xs, split))
-
-    raise ValueError(f"unknown method {method!r}")
+    trainer = api.Trainer(experiment_spec(method, **kw))
+    trainer.run()
+    res = trainer.evaluate()
+    res["seconds"] = round(time.time() - t0, 1)
+    return res

@@ -11,6 +11,12 @@ Additionally, the roofline benches (paper has no table for these; they
 back deliverable (g)) re-print the dry-run-derived roofline terms per
 (arch x shape x mesh) from ``results/dryrun``.
 
+Every experiment goes through :func:`benchmarks.common.run_experiment`,
+which since the ``repro.api`` redesign assembles a declarative
+:class:`repro.api.ExperimentSpec` — the execution-mode names used below
+(``subset | masked | sparse``) are :class:`repro.api.ExecutionSpec`'s
+vocabulary, shared verbatim with ``launch/train.py``.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # standard (a few min)
   PYTHONPATH=src python -m benchmarks.run --quick    # smoke (~1 min)
@@ -225,8 +231,10 @@ TABLES = {
 
 def smoke() -> None:
     """Minimal end-to-end pass of the harness (CI bit-rot check): one
-    tiny accuracy experiment through each execution mode, plus the
-    roofline reprint. The dispatch benches have their own --smoke."""
+    tiny accuracy experiment through each sync execution mode (the
+    ``api.ExecutionSpec`` names; ``async`` is covered by
+    ``benchmarks.async_rounds --smoke``), plus the roofline reprint.
+    The dispatch benches have their own --smoke."""
     print(HEADER, flush=True)
     for execution in ("subset", "masked", "sparse"):
         res = run_experiment("scala", alpha=2, K=4, r=0.5, T=2, rounds=2,

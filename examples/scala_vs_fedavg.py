@@ -10,14 +10,25 @@ reports final + balanced accuracy for:
   - fedavg       (the reference lower bound)
   - fedlogit     (FL + eq. 15 local logit adjustment)
 
-SCALA additionally runs through the engine's sparse-slot execution path
-(execution="sparse": all K slots stay stacked, the in-program uniform
-scheduler picks the r-subset, and the engine gathers it into a dense
-axis before the local scan) — same protocol, subset-sized compute; it
-must preserve the ordering over FedAvg too.
+Every run is a declarative :class:`repro.api.ExperimentSpec` executed
+by :class:`repro.api.Trainer` (``run_experiment`` is now a thin kwargs
+adapter over exactly that — ``benchmarks.common.experiment_spec`` +
+``Trainer.run()`` + ``Trainer.evaluate()``), so the same specs can be
+dumped to JSON and replayed via ``python -m repro.launch.train
+--config``. SCALA additionally runs through the engine's sparse-slot
+execution path (``ExecutionSpec(mode="sparse")``: all K slots stay
+stacked, the in-program uniform scheduler picks the r-subset, and the
+engine gathers it into a dense axis before the local scan) — same
+protocol, subset-sized compute; it must preserve the ordering over
+FedAvg too.
 
   PYTHONPATH=src python examples/scala_vs_fedavg.py
 """
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks.common import run_experiment
 
 SETTINGS = (("alpha=2", dict(alpha=2)), ("beta=0.1", dict(beta=0.1)))

@@ -1,0 +1,56 @@
+"""repro.api — the declarative experiment layer.
+
+One typed, frozen, JSON-serializable :class:`ExperimentSpec` describes
+an entire run — model (by registry name), SCALA protocol, optimizer +
+schedule, federation (aggregator / participation / opt-state policy),
+execution mode (subset | masked | sparse | async, plus the async and
+server-FedOpt knobs), and dataset. :func:`build` turns a spec into a
+:class:`RoundProgram` (state factory + ONE jitted step + predict),
+dispatching across the SCALA engine rounds and the FL/SFL baselines and
+rejecting incoherent combinations at spec time; :class:`Trainer` is the
+thin host loop every driver (``launch/train.py``, ``benchmarks``,
+``examples``) runs on.
+
+    from repro import api
+
+    spec = api.ExperimentSpec(arch="qwen1.5-0.5b", reduced=True, rounds=5)
+    trainer = api.Trainer(spec)
+    trainer.run(); print(trainer.evaluate())
+
+Sub-specs parse from the compact CLI strings (``"uniform:0.25"``,
+``"dirichlet:0.3:0.25"``, ``"lognormal:1:1"``, ``"fedadam:0.01"``) and
+the whole tree round-trips through ``to_dict()/from_dict()`` JSON — the
+unit sweep manifests store and ``train.py --config/--dump-config``
+exchange. The kwarg-style constructors (``engine.make_round_runner``,
+``fed.make_async_runner``, ``baselines.make_fl_round``) remain the
+internal layer the builder calls.
+"""
+from repro.api.build import ProgramState, RoundProgram, build  # noqa: F401
+from repro.api.deprecation import warn_once  # noqa: F401
+from repro.api.specs import (  # noqa: F401
+    EXECUTION_MODES,
+    FL_METHODS,
+    METHODS,
+    OPTIMIZER_ALIASES,
+    OPTIMIZERS,
+    SCALA_METHODS,
+    SFL_METHODS,
+    DataSpec,
+    ExecutionSpec,
+    ExperimentSpec,
+    FedSpec,
+    OptimSpec,
+)
+from repro.api.trainer import (  # noqa: F401
+    Trainer,
+    build_image_data,
+    build_lm_data,
+)
+
+__all__ = [
+    "EXECUTION_MODES", "FL_METHODS", "METHODS", "OPTIMIZER_ALIASES",
+    "OPTIMIZERS", "SCALA_METHODS", "SFL_METHODS",
+    "DataSpec", "ExecutionSpec", "ExperimentSpec", "FedSpec", "OptimSpec",
+    "ProgramState", "RoundProgram", "Trainer", "build", "build_image_data",
+    "build_lm_data", "warn_once",
+]

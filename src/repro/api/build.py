@@ -1,0 +1,344 @@
+"""``build(spec)`` — one builder for every round program.
+
+Dispatches an :class:`repro.api.ExperimentSpec` across the masked /
+sparse-slot / async SCALA rounds *and* the FL/SFL baselines, returning a
+:class:`RoundProgram`: an ``init()`` for the full program state (params,
+optimizer state, federation/async state), one jitted ``step`` with a
+*uniform* signature regardless of mode, and a jitted ``predict`` for
+evaluation. The old constructors (``engine.make_round_runner``,
+``fed.make_async_runner``, ``baselines.make_fl_round`` /
+``make_sfl_round``) remain the internal layer this builder calls — the
+program it builds is bit-identical to direct construction with the same
+keys (test-enforced in ``tests/test_api.py``).
+
+PRNG choreography (kept exactly as the pre-API drivers', so existing
+benchmark numbers and examples reproduce):
+
+* params init — ``PRNGKey(seed)`` (CNN: ``A.init_params`` then split;
+  text: per-half ``T.init_params`` via ``engine.init_scala_params``);
+* federation / async state — ``PRNGKey(seed + 1)`` for
+  ``lm_synthetic`` (the ``launch/train.py`` convention),
+  ``fold_in(PRNGKey(seed), 11)`` for ``image_synthetic`` (the
+  ``benchmarks/common.run_experiment`` convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.specs import (SCALA_METHODS, SFL_METHODS, ExperimentSpec)
+
+
+@dataclass(frozen=True)
+class ProgramState:
+    """The full state one :class:`RoundProgram` step threads: ``inner``
+    is the method's own state (engine :class:`TrainState`, an FL
+    baseline's global params, an SFL state dict) and ``fed`` the
+    federation carry (sync fed-state dict, :class:`AsyncFedState`, FL
+    baseline state, or ``()``)."""
+
+    inner: Any
+    fed: Any = ()
+
+
+jax.tree_util.register_dataclass(ProgramState,
+                                 data_fields=("inner", "fed"),
+                                 meta_fields=())
+
+
+@dataclass(frozen=True)
+class RoundProgram:
+    """A built experiment: state factory + jitted step + metadata.
+
+    * ``init() -> ProgramState`` — params, optimizer state, and
+      federation/async state from the spec's seed;
+    * ``step(state, batches, sizes) -> (state, metrics)`` — ONE round
+      (or async event). ``batches`` leaves are always (T, C, Bk, ...)
+      — the baselines' (C, T, ...) layout is an internal detail;
+    * ``predict(state, batch) -> logits`` — the current global model's
+      forward (slot-0 client half + server half for split methods);
+    * ``metadata`` — static facts a driver wants without re-deriving:
+      ``mode``, ``slots``, ``thread_fed``, ``backend``, ``method``.
+    """
+
+    spec: ExperimentSpec
+    model: Any
+    init: Callable[[], ProgramState]
+    step: Callable[..., Any]
+    predict: Callable[..., Any]
+    metadata: Dict[str, Any]
+
+
+def _fed_key(spec: ExperimentSpec):
+    key = jax.random.PRNGKey(spec.seed)
+    if spec.data.kind == "image_synthetic":
+        return jax.random.fold_in(key, 11)
+    return jax.random.PRNGKey(spec.seed + 1)
+
+
+def _broadcast_slots(tree, slots: int):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (slots,) + a.shape), tree)
+
+
+def _server_optimizer(spec: ExperimentSpec):
+    so = spec.execution.server_optimizer
+    return (None, 1.0) if so is None else (so.make(), so.lr)
+
+
+# ---------------------------------------------------------------------------
+# per-family model + params
+# ---------------------------------------------------------------------------
+
+
+def _cnn_split_init(spec: ExperimentSpec):
+    from repro.core.scala import alexnet_split_model
+    from repro.models import alexnet as A
+
+    model = alexnet_split_model(spec.split,
+                                num_classes=spec.data.num_classes)
+    key = jax.random.PRNGKey(spec.seed)
+    full = A.init_params(key, num_classes=spec.data.num_classes,
+                         width=spec.width)
+    wc, ws = A.split_params(full, spec.split)
+    return model, wc, ws, full, key
+
+
+def text_split_init(spec: ExperimentSpec, slots: int):
+    from repro.core import engine
+    from repro.core.scala import transformer_split_model
+    from repro.models import transformer as T
+
+    cfg = spec.model_config()
+    model = transformer_split_model(cfg)
+    params = engine.init_scala_params(
+        jax.random.PRNGKey(spec.seed),
+        lambda k: T.init_params(k, cfg)["client"],
+        lambda k: T.init_params(k, cfg)["server"],
+        slots)
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# the builder
+# ---------------------------------------------------------------------------
+
+
+def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
+          jit: bool = True) -> RoundProgram:
+    """Validate ``spec`` and build its :class:`RoundProgram`.
+
+    ``mesh`` / ``batch_specs`` are required iff
+    ``spec.execution.backend == "lace_dp"`` (forwarded to the engine's
+    manual-SPMD round). ``jit=False`` returns the un-jitted step
+    (HLO inspection, nesting inside an outer jit).
+    """
+    spec.validate()
+    ex = spec.execution
+    if ex.backend == "lace_dp" and (mesh is None or batch_specs is None):
+        raise ValueError("backend 'lace_dp' needs build(spec, mesh=, "
+                         "batch_specs=)")
+
+    if spec.method in SCALA_METHODS:
+        program = _build_scala(spec, mesh=mesh, batch_specs=batch_specs)
+    elif spec.method in SFL_METHODS:
+        program = _build_sfl(spec)
+    else:
+        program = _build_fl(spec)
+
+    if jit:
+        program = dataclasses.replace(program,
+                                      step=jax.jit(program.step),
+                                      predict=jax.jit(program.predict))
+    return program
+
+
+def _build_scala(spec: ExperimentSpec, *, mesh=None,
+                 batch_specs=None) -> RoundProgram:
+    from repro import fed
+    from repro.core import engine
+
+    ex, fd, sc = spec.execution, spec.fed, spec.scala
+    if spec.method == "scala_noadj":
+        sc = dataclasses.replace(sc, adjust_server=False, adjust_client=False)
+    slots = spec.slots
+    cfg = spec.model_config()
+
+    opt = spec.optim.make()
+    sched = spec.optim.make_schedule(spec.rounds * sc.local_iters,
+                                     default_lr=sc.lr)
+    agg = fd.make_aggregator()
+    scheduler = (fd.make_participation(slots)
+                 if ex.mode in ("masked", "sparse") and fd.participation
+                 else None)
+    server_opt, server_lr = _server_optimizer(spec)
+    unroll = ex.resolve_unroll()
+
+    if cfg.family == "cnn":
+        model, wc, ws, _, _ = _cnn_split_init(spec)
+        params = {"client": _broadcast_slots(wc, slots), "server": ws}
+    else:
+        model, params = text_split_init(spec, slots)
+
+    if ex.mode == "async":
+        delays = ex.make_delays()
+        cohort = ex.resolve_cohort(slots)
+        round_fn = fed.make_async_runner(
+            model, sc, backend=ex.backend, optimizer=opt, schedule=sched,
+            delays=delays, cohort=cohort,
+            staleness_decay=ex.staleness_decay, mix_rate=ex.mix_rate,
+            aggregator=agg, server_optimizer=server_opt,
+            server_lr=server_lr, opt_state_policy=fd.opt_state_policy,
+            unroll=unroll)
+
+        def init() -> ProgramState:
+            afed = fed.init_async_state(
+                _fed_key(spec), params["client"], delays, aggregator=agg,
+                server_optimizer=server_opt, server_params=params["server"])
+            return ProgramState(inner=engine.init_train_state(params, opt),
+                                fed=afed)
+
+        def step(state: ProgramState, batches, sizes):
+            inner, afed, metrics = round_fn(state.inner, state.fed, batches,
+                                            sizes)
+            return ProgramState(inner=inner, fed=afed), metrics
+
+        thread_fed = True
+    else:
+        round_fn = engine.make_round_runner(
+            model, sc, backend=ex.backend, optimizer=opt, schedule=sched,
+            unroll=unroll, aggregator=agg, participation=scheduler,
+            opt_state_policy=fd.opt_state_policy,
+            slot_gather=ex.mode == "sparse", server_optimizer=server_opt,
+            server_lr=server_lr, mesh=mesh, batch_specs=batch_specs)
+        thread_fed = (scheduler is not None or agg.stateful
+                      or server_opt is not None)
+
+        def init() -> ProgramState:
+            fed_state = (fed.init_fed_state(_fed_key(spec), agg, scheduler,
+                                            num_clients=slots,
+                                            server_optimizer=server_opt,
+                                            server_params=params["server"])
+                         if thread_fed else ())
+            return ProgramState(inner=engine.init_train_state(params, opt),
+                                fed=fed_state)
+
+        if thread_fed:
+            def step(state: ProgramState, batches, sizes):
+                inner, fed_state, metrics = round_fn(state.inner, batches,
+                                                     sizes, state.fed)
+                return ProgramState(inner=inner, fed=fed_state), metrics
+        else:
+            def step(state: ProgramState, batches, sizes):
+                inner, metrics = round_fn(state.inner, batches, sizes)
+                return ProgramState(inner=inner, fed=state.fed), metrics
+
+    def predict(state: ProgramState, batch):
+        wc0 = jax.tree.map(lambda a: a[0], state.inner.params["client"])
+        acts = model.client_fwd(wc0, batch)
+        logits, _ = model.server_fwd(state.inner.params["server"], acts)
+        return logits
+
+    return RoundProgram(
+        spec=spec, model=model, init=init, step=step, predict=predict,
+        metadata=dict(method=spec.method, mode=ex.mode, slots=slots,
+                      backend=ex.backend, thread_fed=thread_fed))
+
+
+def _build_fl(spec: ExperimentSpec) -> RoundProgram:
+    from repro.core import baselines as B
+    from repro.models import alexnet as A
+
+    fd = spec.fed
+    slots = spec.slots
+    agg = fd.make_aggregator() if fd.aggregator != "weighted" \
+        else None
+    server_opt, server_lr = _server_optimizer(spec)
+
+    def fwd(p, x):
+        return A.forward(p, x, spec.split)
+
+    def feats(p, x):
+        return A.features(p, x)
+
+    model = B.FedModel(forward=fwd, num_classes=spec.data.num_classes,
+                       features=feats)
+    key = jax.random.PRNGKey(spec.seed)
+    w0 = A.init_params(key, num_classes=spec.data.num_classes,
+                       width=spec.width)
+    round_fn = B.make_fl_round(spec.method, model,
+                               lr=spec.optim.resolve_lr(spec.scala.lr),
+                               aggregator=agg, server_optimizer=server_opt,
+                               server_lr=server_lr)
+
+    def init() -> ProgramState:
+        return ProgramState(
+            inner=w0,
+            fed=B.init_fl_state(spec.method, w0, slots,
+                                server_optimizer=server_opt))
+
+    def step(state: ProgramState, batches, sizes):
+        rb = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), batches)
+        w, fl_state = round_fn(state.inner, rb, sizes, state.fed)
+        return ProgramState(inner=w, fed=fl_state), {}
+
+    def predict(state: ProgramState, batch):
+        return model.forward(state.inner, batch["x"])
+
+    return RoundProgram(
+        spec=spec, model=model, init=init, step=step, predict=predict,
+        metadata=dict(method=spec.method, mode="subset", slots=slots,
+                      backend="logits", thread_fed=True))
+
+
+def _build_sfl(spec: ExperimentSpec) -> RoundProgram:
+    import numpy as np
+
+    from repro.core import baselines as B
+    from repro.models import alexnet as A
+
+    fd = spec.fed
+    slots = spec.slots
+    agg = fd.make_aggregator() if fd.aggregator != "weighted" \
+        else None
+    model, wc, ws, _, key = _cnn_split_init(spec)
+
+    state0 = {"wc": _broadcast_slots(wc, slots), "ws": ws}
+    aux_head_fwd = None
+    if spec.method == "sfl_localloss":
+        probe = A.client_forward_from_split(
+            wc, jnp.zeros((1, 32, 32, 3)), spec.split)
+        feat_dim = int(np.prod(probe.shape[1:]))
+        aux0 = {"w": jax.random.normal(
+            key, (feat_dim, spec.data.num_classes)) * 0.05}
+        state0["aux"] = _broadcast_slots(aux0, slots)
+
+        def aux_head_fwd(p, feats):
+            return feats.reshape(feats.shape[0], -1) @ p["w"]
+
+    round_fn = B.make_sfl_round(spec.method, model,
+                                lr=spec.optim.resolve_lr(spec.scala.lr),
+                                aux_head_fwd=aux_head_fwd, aggregator=agg)
+
+    def init() -> ProgramState:
+        return ProgramState(inner=state0, fed=())
+
+    def step(state: ProgramState, batches, sizes):
+        rb = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), batches)
+        return ProgramState(inner=round_fn(state.inner, rb, sizes),
+                            fed=state.fed), {}
+
+    def predict(state: ProgramState, batch):
+        wc0 = jax.tree.map(lambda a: a[0], state.inner["wc"])
+        acts = model.client_fwd(wc0, batch)
+        logits, _ = model.server_fwd(state.inner["ws"], acts)
+        return logits
+
+    return RoundProgram(
+        spec=spec, model=model, init=init, step=step, predict=predict,
+        metadata=dict(method=spec.method, mode="subset", slots=slots,
+                      backend="logits", thread_fed=False))

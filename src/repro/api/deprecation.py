@@ -1,0 +1,20 @@
+"""Once-per-process deprecation warnings (the ``core/scala.py``
+convention, shared so every compat shim warns the same way)."""
+from __future__ import annotations
+
+import warnings
+
+# names that already warned this process (warn once each)
+_WARNED: set = set()
+
+
+def warn_once(name: str, use: str, *, stacklevel: int = 3) -> None:
+    """Emit one ``DeprecationWarning`` per process for ``name``,
+    pointing at its ``repro.api``-era replacement ``use``."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is a legacy kwarg-style helper; use {use} instead "
+        "(the declarative spec layer — see repro.api)",
+        DeprecationWarning, stacklevel=stacklevel)

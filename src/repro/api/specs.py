@@ -1,0 +1,506 @@
+"""The declarative experiment spec tree.
+
+One experiment = one :class:`ExperimentSpec` — a frozen, typed,
+JSON-serializable description of *everything* the run needs: the model
+(by registry name, composing the existing :class:`repro.configs.base.
+ModelConfig`), the SCALA protocol (:class:`repro.configs.base.
+ScalaConfig`), the local optimizer (:class:`OptimSpec`), the federation
+layer (:class:`FedSpec` — aggregator + participation + opt-state
+policy), the execution mode (:class:`ExecutionSpec` — masked / sparse /
+async / the legacy host-side ``subset`` sampling, plus the async and
+server-FedOpt knobs), and the dataset (:class:`DataSpec`).
+
+Every sub-spec parses from the compact strings the CLI already uses
+(``"dirichlet:0.3:0.25"``, ``"lognormal:1:1"``, ``"fedadam:0.01"``) and
+the whole tree round-trips losslessly through :meth:`ExperimentSpec.
+to_dict` / :meth:`ExperimentSpec.from_dict` JSON — the unit a sweep
+manifest stores and ``launch/train.py --config/--dump-config`` consume.
+
+Validation happens at *spec* time (:meth:`ExperimentSpec.validate`,
+called by :func:`repro.api.build`): incoherent combinations — e.g. the
+``lace_dp`` backend with sparse slots, a stateful aggregator without
+stable client identities, async execution with a participation
+scheduler — are rejected with a targeted error instead of failing deep
+inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.configs import ScalaConfig, get_config
+from repro.configs.base import ModelConfig
+
+#: the four round programs an experiment can execute as.
+#: "subset" is the legacy host-side mode: each round stacks only the
+#: C = r*K sampled clients (no in-program scheduler); the other three
+#: keep all K slots static — see repro.core.engine / repro.fed.runtime.
+EXECUTION_MODES = ("subset", "masked", "sparse", "async")
+
+#: local-optimizer registry names plus the FedOpt aliases the server
+#: side uses (``fedavgm`` -> momentum, ``fedadam`` -> adamw).
+OPTIMIZERS = ("sgd", "momentum", "adamw")
+OPTIMIZER_ALIASES = {"fedavgm": "momentum", "fedadam": "adamw"}
+
+
+def _parse_err(kind: str, spec: str, usage: str) -> ValueError:
+    return ValueError(f"bad {kind} spec {spec!r}; usage: {usage}")
+
+
+# ---------------------------------------------------------------------------
+# OptimSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimSpec:
+    """A :mod:`repro.optim` optimizer + lr schedule, declaratively.
+
+    Compact form: ``"sgd[:LR]"`` | ``"momentum[:LR[:BETA]]"`` |
+    ``"adamw[:LR[:WD]]"`` (plus the FedOpt aliases ``fedavgm`` /
+    ``fedadam``, which canonicalize to momentum / adamw). The schedule
+    fields are not part of the compact form — set them on the dataclass
+    (``schedule="cosine"``, ``warmup=N``).
+
+    ``lr=None`` (the default) defers to the experiment's
+    ``scala.lr`` — there is exactly ONE base learning rate per spec
+    unless you explicitly override it here.
+    """
+
+    name: str = "sgd"
+    lr: Optional[float] = None
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    schedule: str = "constant"         # constant | cosine
+    warmup: int = 0                    # warmup steps for schedule="cosine"
+
+    def __post_init__(self):
+        if self.name not in OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.name!r}; expected "
+                             f"{OPTIMIZERS} (aliases: "
+                             f"{sorted(OPTIMIZER_ALIASES)})")
+        if self.schedule not in ("constant", "cosine"):
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             "expected ('constant', 'cosine')")
+
+    @classmethod
+    def parse(cls, spec: str, *, default_lr: Optional[float] = None,
+              **overrides) -> "OptimSpec":
+        usage = "NAME[:LR[:ARG]] with NAME in " + repr(
+            OPTIMIZERS + tuple(sorted(OPTIMIZER_ALIASES)))
+        parts = spec.split(":")
+        name = OPTIMIZER_ALIASES.get(parts[0], parts[0])
+        if name not in OPTIMIZERS or len(parts) > 3:
+            raise _parse_err("optimizer", spec, usage)
+        kw: Dict[str, Any] = dict(name=name, lr=default_lr)
+        try:
+            if len(parts) >= 2:
+                kw["lr"] = float(parts[1])
+            if len(parts) == 3:
+                if name == "momentum":
+                    kw["momentum"] = float(parts[2])
+                elif name == "adamw":
+                    kw["weight_decay"] = float(parts[2])
+                else:
+                    raise _parse_err("optimizer", spec, usage)
+        except ValueError as e:
+            if "bad optimizer spec" in str(e):
+                raise
+            raise _parse_err("optimizer", spec, usage) from None
+        kw.update(overrides)
+        return cls(**kw)
+
+    @property
+    def spec(self) -> str:
+        """The canonical compact string (lossy: schedule fields excluded;
+        an unset lr renders as the bare name)."""
+        if self.lr is None:
+            return self.name
+        if self.name == "momentum":
+            return f"momentum:{self.lr}:{self.momentum}"
+        if self.name == "adamw":
+            return f"adamw:{self.lr}:{self.weight_decay}"
+        return f"sgd:{self.lr}"
+
+    def resolve_lr(self, default_lr: float) -> float:
+        """The effective base lr (``scala.lr`` unless overridden here)."""
+        return default_lr if self.lr is None else self.lr
+
+    def make(self):
+        """Build the :class:`repro.optim.Optimizer`."""
+        from repro.optim import make_optimizer
+
+        return make_optimizer(self.name, momentum=self.momentum,
+                              weight_decay=self.weight_decay)
+
+    def make_schedule(self, total_steps: int, *,
+                      default_lr: Optional[float] = None):
+        """Build the lr schedule (driven by the engine's global step)."""
+        from repro.optim import schedules
+
+        lr = self.lr if self.lr is not None else default_lr
+        if lr is None:
+            raise ValueError("OptimSpec.lr is unset and no default_lr "
+                             "(scala.lr) was provided")
+        if self.schedule == "cosine":
+            return schedules.linear_warmup_cosine(lr, self.warmup,
+                                                  total_steps)
+        return schedules.constant(lr)
+
+
+# ---------------------------------------------------------------------------
+# FedSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FedSpec:
+    """The federation layer: aggregation + participation + opt-state policy.
+
+    ``aggregator`` and ``participation`` are the registries' compact
+    strings (kept verbatim, so the round-trip is lossless):
+
+    * aggregator — ``"fedavg"`` | ``"weighted"`` |
+      ``"bias_compensated[:GAMMA]"`` | ``"staleness_weighted[:DECAY]"``
+      (:func:`repro.fed.make_aggregator`);
+    * participation — ``None`` (full participation / legacy subset
+      sampling) or ``"full"`` | ``"uniform:FRAC"`` |
+      ``"dirichlet:FRAC[:ALPHA]"`` (:func:`repro.fed.make_participation`).
+
+    ``opt_state_policy`` is the client optimizer state's round-boundary
+    behavior (``carry | reset | average`` — see
+    :func:`repro.core.engine.make_round_runner`).
+    """
+
+    aggregator: str = "weighted"
+    participation: Optional[str] = None
+    opt_state_policy: str = "carry"
+
+    def __post_init__(self):
+        from repro.core.engine import OPT_STATE_POLICIES
+
+        self.make_aggregator()                       # structural validation
+        if self.participation is not None:
+            self.make_participation(2)               # structural validation
+        if self.opt_state_policy not in OPT_STATE_POLICIES:
+            raise ValueError(
+                f"unknown opt_state_policy {self.opt_state_policy!r}; "
+                f"expected {OPT_STATE_POLICIES}")
+
+    def make_aggregator(self):
+        from repro.fed import make_aggregator
+
+        return make_aggregator(self.aggregator)
+
+    def make_participation(self, num_clients: int):
+        from repro.fed import make_participation
+
+        if self.participation is None:
+            return None
+        return make_participation(self.participation, num_clients)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """How the round program executes.
+
+    ``mode`` is THE mode vocabulary — ``launch/train.py``, the
+    benchmarks, and every other driver build from it, so they cannot
+    disagree on names:
+
+    * ``"subset"`` — legacy host-side sampling: C = r*K clients are
+      re-stacked each round (no in-program scheduler);
+    * ``"masked"`` — all K slots stay stacked; the scheduler's 0/1 mask
+      folds into the loss weights (full-K compute);
+    * ``"sparse"`` — the scheduler's fixed-size subset is gathered into
+      a dense axis before the local scan (subset-cost compute,
+      ``engine.make_round_runner(slot_gather=True)``);
+    * ``"async"`` — the event runtime (:mod:`repro.fed.runtime`):
+      sampled completion delays, arrival cohorts, staleness-weighted
+      delayed aggregation.
+
+    ``backend`` is the engine loss backend (``logits | lace | lace_dp``).
+    ``delay`` / ``cohort`` / ``staleness_decay`` / ``mix_rate`` apply to
+    mode ``"async"`` only (``cohort=0`` = K//4, min 1).
+    ``server_optimizer`` is the optional server-half FedOpt
+    (:class:`OptimSpec`; its ``lr`` is the server lr — parse
+    ``"fedadam:0.01"`` with ``OptimSpec.parse(s, default_lr=1.0)``).
+    ``unroll``: scan unroll factor — ``-1`` auto (full on CPU),
+    ``0`` full, ``N`` factor.
+    """
+
+    mode: str = "masked"
+    backend: str = "logits"
+    delay: str = "lognormal:1:1"
+    cohort: int = 0
+    staleness_decay: float = 0.5
+    mix_rate: float = 1.0
+    server_optimizer: Optional[OptimSpec] = None
+    unroll: int = -1
+
+    def __post_init__(self):
+        from repro.core.engine import BACKENDS
+        from repro.fed import make_delays
+
+        if self.mode not in EXECUTION_MODES:
+            raise ValueError(f"unknown execution mode {self.mode!r}; "
+                             f"expected {EXECUTION_MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected {BACKENDS}")
+        make_delays(self.delay)                      # structural validation
+        if self.cohort < 0:
+            raise ValueError(f"cohort must be >= 0, got {self.cohort}")
+
+    @property
+    def in_program(self) -> bool:
+        """True iff participation is decided inside the compiled program."""
+        return self.mode in ("masked", "sparse", "async")
+
+    def make_delays(self):
+        from repro.fed import make_delays
+
+        return make_delays(self.delay)
+
+    def resolve_cohort(self, num_clients: int) -> int:
+        return self.cohort if self.cohort > 0 else max(1, num_clients // 4)
+
+    def resolve_unroll(self):
+        import jax
+
+        if self.unroll == -1:
+            return True if jax.default_backend() == "cpu" else 1
+        return True if self.unroll == 0 else self.unroll
+
+
+# ---------------------------------------------------------------------------
+# DataSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DataSpec:
+    """The dataset recipe (host-side synthesis; seeded by the
+    experiment's top-level ``seed``).
+
+    * ``"lm_synthetic"`` — domain-skewed synthetic token documents
+      (:func:`repro.data.synthetic.token_stream`): client k prefers
+      domain k % D; next-token prediction at length ``seq``. The LM
+      driver's data.
+    * ``"image_synthetic"`` — CIFAR-shaped gaussian class images
+      (:func:`repro.data.synthetic.gaussian_images`) partitioned by
+      quantity skew (``alpha`` = classes per client) or Dirichlet label
+      skew (``beta``). The paper-table benchmark data.
+    """
+
+    kind: str = "lm_synthetic"
+    # --- lm_synthetic ---
+    seq: int = 128
+    docs_per_client: int = 32
+    # --- image_synthetic ---
+    n_train: int = 2000
+    n_test: int = 1000
+    num_classes: int = 10
+    alpha: Optional[int] = None        # quantity skew: classes per client
+    beta: Optional[float] = None       # Dirichlet label-skew concentration
+
+    def __post_init__(self):
+        if self.kind not in ("lm_synthetic", "image_synthetic"):
+            raise ValueError(f"unknown data kind {self.kind!r}; expected "
+                             "('lm_synthetic', 'image_synthetic')")
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec
+# ---------------------------------------------------------------------------
+
+#: methods the builder dispatches over (the SCALA engine + every baseline).
+SCALA_METHODS = ("scala", "scala_noadj")
+FL_METHODS = ("fedavg", "fedprox", "feddyn", "feddecorr", "fedlogit", "fedla")
+SFL_METHODS = ("splitfed_v1", "splitfed_v2", "splitfed_v3", "sfl_localloss")
+METHODS = SCALA_METHODS + FL_METHODS + SFL_METHODS
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """The whole experiment, declaratively.
+
+    ``arch`` names a :mod:`repro.configs` registry entry (``reduced``
+    applies :meth:`ModelConfig.reduced`); ``split`` / ``width`` apply to
+    the CNN (AlexNet) family only. ``method`` selects SCALA or one of
+    the paper's FL/SFL baselines. ``scala`` is the existing
+    :class:`ScalaConfig` verbatim (``method="scala_noadj"`` overrides
+    its adjust flags off at build time).
+    """
+
+    arch: str = "qwen1.5-0.5b"
+    reduced: bool = False
+    split: str = "s2"                  # CNN family: client/server boundary
+    width: float = 0.125               # CNN family: width multiplier
+    method: str = "scala"
+    rounds: int = 20
+    seed: int = 0
+    scala: ScalaConfig = field(default_factory=ScalaConfig)
+    optim: OptimSpec = field(default_factory=OptimSpec)
+    fed: FedSpec = field(default_factory=FedSpec)
+    execution: ExecutionSpec = field(default_factory=ExecutionSpec)
+    data: DataSpec = field(default_factory=DataSpec)
+
+    # ------------------------------------------------------------------
+    # composition with the model registry
+    # ------------------------------------------------------------------
+
+    def model_config(self) -> ModelConfig:
+        cfg = get_config(self.arch)
+        return cfg.reduced() if self.reduced else cfg
+
+    @property
+    def num_clients(self) -> int:
+        return self.scala.num_clients
+
+    @property
+    def slots(self) -> int:
+        """The static stacked-client slot count of the compiled program."""
+        if self.execution.in_program:
+            return self.scala.num_clients
+        return self.scala.clients_per_round
+
+    # ------------------------------------------------------------------
+    # coherence validation (spec time, not jit time)
+    # ------------------------------------------------------------------
+
+    def validate(self) -> "ExperimentSpec":
+        """Reject incoherent spec combinations with targeted errors.
+
+        Sub-spec ``__post_init__`` already guarantees each field parses;
+        this checks the *cross-spec* constraints. Returns self so it
+        chains: ``build(spec.validate())``.
+        """
+        ex, fd, sc = self.execution, self.fed, self.scala
+        cfg = self.model_config()
+        agg = fd.make_aggregator()
+
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected "
+                             f"{METHODS}")
+
+        # --- backend coherence ---
+        if ex.backend == "lace_dp" and ex.mode in ("sparse", "async"):
+            raise ValueError(
+                f"backend 'lace_dp' is incompatible with mode {ex.mode!r}: "
+                "the manual-SPMD step shards the client axis over the mesh, "
+                "so the sparse-slot gather / async runtime cannot cross it "
+                "(ROADMAP open item)")
+        if ex.backend != "logits" and cfg.family == "cnn":
+            raise ValueError(
+                f"backend {ex.backend!r} needs a trunk/head split; the CNN "
+                "(AlexNet) family only supports backend 'logits'")
+
+        # --- participation / mode coherence ---
+        if ex.mode == "sparse" and fd.participation is None:
+            raise ValueError(
+                "mode 'sparse' needs a participation spec (the static "
+                "K_active comes from the scheduler's subset_size); set "
+                "fed.participation to 'uniform:FRAC' or "
+                "'dirichlet:FRAC[:ALPHA]'")
+        if ex.mode == "async" and fd.participation is not None:
+            raise ValueError(
+                "mode 'async' replaces participation scheduling (the "
+                "arrival cohort IS the participating subset); drop "
+                "fed.participation")
+        if ex.mode == "subset" and fd.participation is not None:
+            raise ValueError(
+                "mode 'subset' samples clients host-side; a participation "
+                "spec needs an in-program mode ('masked' or 'sparse')")
+
+        # --- stateful aggregators need stable client identities ---
+        if agg.stateful:
+            if ex.mode == "async":
+                raise ValueError(
+                    f"aggregator {agg.name!r} double-decays under mode "
+                    "'async' (the runtime applies staleness_decay itself); "
+                    "use a stateless aggregator")
+            if ex.mode == "subset" or fd.participation is None:
+                raise ValueError(
+                    f"aggregator {agg.name!r} is stateful and needs stable "
+                    "client identities: use mode 'masked'/'sparse' with a "
+                    "participation spec (host-side subset re-stacking has "
+                    "no slot -> client correspondence)")
+
+        # --- async knobs ---
+        if ex.mode == "async" and ex.cohort > sc.num_clients:
+            raise ValueError(f"cohort {ex.cohort} exceeds the "
+                             f"{sc.num_clients} client slots")
+
+        # --- baselines ---
+        if self.method not in SCALA_METHODS:
+            if ex.mode != "subset":
+                raise ValueError(
+                    f"method {self.method!r} (a baseline) only supports "
+                    "mode 'subset' (host-side sampling); the in-program "
+                    "modes are SCALA engine programs")
+            if cfg.family != "cnn":
+                raise ValueError(
+                    f"method {self.method!r} needs the CNN (AlexNet) "
+                    f"family; arch {self.arch!r} is {cfg.family!r}")
+            if self.method in SFL_METHODS and ex.server_optimizer is not None:
+                raise ValueError(
+                    "server_optimizer (FedOpt) is not supported by the SFL "
+                    "baselines; use an FL method or SCALA")
+
+        # --- data / model coherence ---
+        if self.data.kind == "image_synthetic" and cfg.family != "cnn":
+            raise ValueError(
+                f"data kind 'image_synthetic' needs the CNN family; arch "
+                f"{self.arch!r} is {cfg.family!r}")
+        if self.data.kind == "lm_synthetic" and (cfg.family == "cnn"
+                                                 or cfg.frontend is not None):
+            raise ValueError(
+                f"data kind 'lm_synthetic' needs a text arch; "
+                f"{self.arch!r} has family {cfg.family!r} / frontend "
+                f"{cfg.frontend!r}")
+        if self.data.kind == "image_synthetic" \
+                and self.data.alpha is not None and self.data.beta is not None:
+            raise ValueError("set at most one of data.alpha (quantity skew) "
+                             "and data.beta (Dirichlet skew)")
+        return self
+
+    # ------------------------------------------------------------------
+    # lossless serialization (sweep manifests, --config/--dump-config)
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        if "scala" in d and isinstance(d["scala"], dict):
+            d["scala"] = ScalaConfig(**d["scala"])
+        if "optim" in d and isinstance(d["optim"], dict):
+            d["optim"] = OptimSpec(**d["optim"])
+        if "fed" in d and isinstance(d["fed"], dict):
+            d["fed"] = FedSpec(**d["fed"])
+        if "execution" in d and isinstance(d["execution"], dict):
+            ex = dict(d["execution"])
+            if isinstance(ex.get("server_optimizer"), dict):
+                ex["server_optimizer"] = OptimSpec(**ex["server_optimizer"])
+            d["execution"] = ExecutionSpec(**ex)
+        if "data" in d and isinstance(d["data"], dict):
+            d["data"] = DataSpec(**d["data"])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))

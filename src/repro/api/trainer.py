@@ -1,0 +1,201 @@
+"""``api.Trainer`` — the thin host-side driver every entry point shares.
+
+The trainer owns the *host* side of an experiment: synthesizing the
+dataset from :class:`repro.api.DataSpec`, assembling per-round batches
+(eq. 3 sizing via :mod:`repro.data.loader`), threading the
+:class:`repro.api.build.ProgramState` through the built
+:class:`repro.api.build.RoundProgram`, and evaluation. Everything
+jit-compiled lives in the program; everything numpy lives here.
+
+    spec = api.ExperimentSpec(...)           # declarative, serializable
+    trainer = api.Trainer(spec)              # build(spec) + data + state
+    history = trainer.run()                  # spec.rounds rounds/events
+    print(trainer.evaluate())
+
+Host-side RNG choreography is kept exactly as the pre-API drivers'
+(``numpy.default_rng(seed + 7)`` for image data / client sampling as in
+``benchmarks/common.run_experiment``; ``default_rng(seed)`` for the LM
+driver as in ``launch/train.py``), so existing results reproduce.
+
+Batch-budget parity across modes follows each driver's convention too:
+for ``image_synthetic`` the in-program sync modes (masked/sparse) split
+``server_batch / participation`` over all K slots so the participating
+subset sees ~``server_batch`` samples (eq. 3 parity with subset mode);
+for ``lm_synthetic`` the budget is never rescaled (scale
+``server_batch`` by 1/FRAC yourself for parity — the historical
+``train.py`` semantics).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.build import RoundProgram, build
+from repro.api.specs import ExperimentSpec
+
+
+# ---------------------------------------------------------------------------
+# dataset synthesis (host side)
+# ---------------------------------------------------------------------------
+
+
+def build_lm_data(cfg, num_clients: int, docs_per_client: int, seq: int,
+                  seed: int) -> List[np.ndarray]:
+    """Domain-skewed synthetic token docs: client k prefers domain k % D."""
+    from repro.data.synthetic import token_stream
+
+    docs, domains = token_stream(
+        n_docs=num_clients * docs_per_client, doc_len=seq + 1,
+        vocab=cfg.vocab_size, num_domains=max(2, num_clients // 2), seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    by_client = []
+    D = domains.max() + 1
+    for k in range(num_clients):
+        pref = k % D
+        p = np.where(domains == pref, 8.0, 1.0)
+        p = p / p.sum()
+        idx = rng.choice(len(docs), size=docs_per_client, replace=False, p=p)
+        by_client.append(docs[idx])
+    return by_client
+
+
+def build_image_data(spec: ExperimentSpec):
+    """CIFAR-shaped gaussian images, label-skew partitioned per DataSpec.
+
+    Returns (FederatedData, (x_test, y_test))."""
+    from repro.data.loader import FederatedData
+    from repro.data.partition import partition
+    from repro.data.synthetic import gaussian_images
+
+    d = spec.data
+    x, y = gaussian_images(d.n_train + d.n_test, num_classes=d.num_classes,
+                           seed=spec.seed)
+    x_train, y_train = x[:d.n_train], y[:d.n_train]
+    parts = partition(y_train, spec.scala.num_clients, alpha=d.alpha,
+                      beta=d.beta, num_classes=d.num_classes, seed=spec.seed)
+    return (FederatedData.from_partition(x_train, y_train, parts),
+            (x[d.n_train:], y[d.n_train:]))
+
+
+# ---------------------------------------------------------------------------
+# the trainer
+# ---------------------------------------------------------------------------
+
+
+class Trainer:
+    """Run a built experiment round by round.
+
+    ``program`` defaults to :func:`repro.api.build` on the spec;
+    pass one explicitly to reuse a compiled program across trainers
+    (sweeps over data seeds) or to inject ``mesh``/``batch_specs`` for
+    the ``lace_dp`` backend.
+    """
+
+    def __init__(self, spec: ExperimentSpec, *,
+                 program: Optional[RoundProgram] = None,
+                 mesh=None, batch_specs=None):
+        self.spec = spec.validate()
+        self.program = program if program is not None else build(
+            spec, mesh=mesh, batch_specs=batch_specs)
+        self.state = self.program.init()
+        self.history: List[Dict[str, float]] = []
+        self.round = 0
+        self._cfg = spec.model_config()
+        if spec.data.kind == "image_synthetic":
+            self._data, self._test = build_image_data(spec)
+            self._rng = np.random.default_rng(spec.seed + 7)
+        else:
+            self._data = build_lm_data(self._cfg, spec.scala.num_clients,
+                                       spec.data.docs_per_client,
+                                       spec.data.seq, spec.seed)
+            self._test = None
+            self._rng = np.random.default_rng(spec.seed)
+
+    # ------------------------------------------------------------------
+
+    def _next_round_batches(self):
+        from repro.data.loader import (lm_round_batches, round_batches,
+                                       sample_clients)
+
+        spec, sc = self.spec, self.spec.scala
+        K = sc.num_clients
+        if spec.execution.in_program:
+            selected = np.arange(K)        # all slots; subset in-program
+        else:
+            selected = sample_clients(K, sc.clients_per_round, self._rng)
+        if spec.data.kind == "image_synthetic":
+            budget = (round(sc.server_batch / sc.participation)
+                      if spec.execution.mode in ("masked", "sparse")
+                      else sc.server_batch)
+            rb = round_batches(self._data, selected, budget, sc.local_iters,
+                               self._rng)
+        else:
+            rb = lm_round_batches(self._data, selected, sc.server_batch,
+                                  sc.local_iters, self._rng)
+        sizes = jnp.asarray(rb.pop("sizes"))
+        return {k: jnp.asarray(v) for k, v in rb.items()}, sizes
+
+    # ------------------------------------------------------------------
+
+    def step(self):
+        """One round (or async event): assemble batches, advance state.
+
+        Returns the round's scalar metrics as floats."""
+        batches, sizes = self._next_round_batches()
+        self.state, metrics = self.program.step(self.state, batches, sizes)
+        scalars = {k: float(v) for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}
+        self.history.append(scalars)
+        self.round += 1
+        return scalars
+
+    def run(self, rounds: Optional[int] = None, *,
+            on_round: Optional[Callable[[int, Dict[str, float], float],
+                                        Any]] = None):
+        """Run ``rounds`` rounds (default ``spec.rounds``); returns the
+        full metric history (one dict of floats per round so far).
+        ``on_round(index, metrics, seconds)`` is called after each."""
+        n = self.spec.rounds if rounds is None else rounds
+        for _ in range(n):
+            t0 = time.time()
+            scalars = self.step()
+            if on_round is not None:
+                on_round(self.round - 1, scalars, time.time() - t0)
+        return self.history
+
+    # ------------------------------------------------------------------
+
+    def evaluate(self) -> Dict[str, float]:
+        """Evaluate the current global model.
+
+        image_synthetic — held-out accuracy + class-balanced accuracy
+        (the paper-table metrics); lm_synthetic — next-token loss and
+        accuracy on a held-out document stream (seeded off the
+        experiment seed)."""
+        from repro.core.losses import (accuracy, per_class_accuracy,
+                                       softmax_xent)
+
+        spec = self.spec
+        if spec.data.kind == "image_synthetic":
+            x_test, y_test = self._test
+            logits = self.program.predict(self.state,
+                                          {"x": jnp.asarray(x_test)})
+            y = jnp.asarray(y_test)
+            return {"acc": float(accuracy(logits, y)),
+                    "balanced_acc": float(per_class_accuracy(
+                        logits, y, spec.data.num_classes))}
+        from repro.data.synthetic import token_stream
+
+        docs, _ = token_stream(
+            n_docs=32, doc_len=spec.data.seq + 1,
+            vocab=self._cfg.vocab_size,
+            num_domains=max(2, spec.scala.num_clients // 2),
+            seed=spec.seed + 9973)
+        toks = jnp.asarray(docs[:, :-1])
+        labels = jnp.asarray(docs[:, 1:])
+        logits = self.program.predict(self.state, {"tokens": toks})
+        return {"eval_loss": float(softmax_xent(logits, labels)),
+                "eval_accuracy": float(accuracy(logits, labels))}

@@ -212,14 +212,32 @@ def staleness_weighted(decay: float = 0.5) -> Aggregator:
                       client_weights=client_weights, stateful=True)
 
 
-def make_aggregator(name: str, **kw) -> Aggregator:
-    """Registry: build an aggregator by name (launcher/benchmark flags)."""
+def make_aggregator(spec: str, **kw) -> Aggregator:
+    """Registry: build an aggregator from a compact spec string.
+
+    ``"fedavg"`` | ``"weighted"`` | ``"bias_compensated[:GAMMA]"`` |
+    ``"staleness_weighted[:DECAY]"`` (keyword overrides still accepted
+    for the parameterized aggregators).
+    """
+    parts = spec.split(":")
+    name, args = parts[0], parts[1:]
+    if name in ("fedavg", "weighted") and args:
+        raise ValueError(f"aggregator {name!r} takes no spec arguments, "
+                         f"got {spec!r}")
     if name == "fedavg":
         return fedavg()
     if name == "weighted":
         return weighted()
     if name == "bias_compensated":
-        return bias_compensated(gamma=kw.get("gamma", 2.0))
+        if len(args) > 1:
+            raise ValueError("bias_compensated spec is "
+                             "'bias_compensated[:GAMMA]'")
+        gamma = float(args[0]) if args else kw.get("gamma", 2.0)
+        return bias_compensated(gamma=gamma)
     if name in ("staleness_weighted", "staleness"):
-        return staleness_weighted(decay=kw.get("decay", 0.5))
+        if len(args) > 1:
+            raise ValueError("staleness_weighted spec is "
+                             "'staleness_weighted[:DECAY]'")
+        decay = float(args[0]) if args else kw.get("decay", 0.5)
+        return staleness_weighted(decay=decay)
     raise ValueError(f"unknown aggregator {name!r}; expected {AGGREGATORS}")

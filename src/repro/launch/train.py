@@ -5,47 +5,43 @@ participation, eq. (3) batch sizing, T local iterations with concatenated
 activations + dual logit-adjusted losses, FedAvg every round — on
 synthetic domain-skewed token data.
 
-Built on the split-step engine (:mod:`repro.core.engine`) and the
-federation layer (:mod:`repro.fed`): the fused-LACE loss backend, a real
-optimizer from :mod:`repro.optim` (SGD default, the paper's setting), an
-lr schedule driven by the global step counter, and the whole round
-(T local iterations + the pluggable FL phase) compiled into ONE XLA
-program via ``make_round_runner`` — one dispatch per round instead of
-T+1 (``--no-scan`` falls back to the per-step Python loop for A/B
-timing).
+Since the ``repro.api`` redesign this driver is a thin CLI adapter:
+argparse populates a declarative :class:`repro.api.ExperimentSpec`
+(optimizer, federation, execution mode, data — the same spec tree the
+benchmarks and sweep manifests use) and hands it to
+:class:`repro.api.Trainer`. The spec is the unit of reproducibility:
+
+* ``--dump-config [PATH]`` — write the resolved spec as JSON (stdout if
+  no PATH) and exit without training;
+* ``--config PATH`` — load a spec JSON and run it verbatim (the other
+  spec-level flags are ignored). ``--dump-config`` output fed back via
+  ``--config`` reproduces the identical run (test-enforced).
 
 Participation comes in two modes, selected by ``--participation``:
 
 * a bare fraction (``--participation 0.25``) — legacy host-side subset
-  sampling: each round stacks only the C = r*K sampled clients;
+  sampling (execution mode ``"subset"``): each round stacks only the
+  C = r*K sampled clients;
 * a scheduler spec (``full`` | ``uniform:FRAC`` |
-  ``dirichlet:FRAC[:ALPHA]``) — the fed layer's in-program mode: all K
-  clients stay stacked and a per-round 0/1 mask (sampled inside the
-  compiled round) selects the subset, recomputing priors / logit
-  adjustments per subset. Note the batch-size semantics differ: eq. (3)
-  splits ``--server-batch`` across all K *slots* before masking, so the
+  ``dirichlet:FRAC[:ALPHA]``) — the fed layer's in-program mode
+  (``"masked"``, or ``"sparse"`` with ``--slot-gather``): all K clients
+  stay stacked and a per-round 0/1 mask (sampled inside the compiled
+  round) selects the subset, recomputing priors / logit adjustments per
+  subset. Note the batch-size semantics differ: eq. (3) splits
+  ``--server-batch`` across all K *slots* before masking, so the
   participating subset sees ~FRAC * server_batch tokens per local step
   (vs the full server_batch across the C participants in fraction
   mode). Scale ``--server-batch`` by 1/FRAC for parity.
 
 ``--aggregator`` picks the FL-phase weighting (fedavg | weighted |
-bias_compensated | staleness_weighted) and ``--opt-state-policy`` the
-client optimizer state's round-boundary behavior (carry | reset |
-average). ``--slot-gather`` turns on the engine's sparse-slot compute
-path (gather the scheduler's fixed-size subset into a dense axis before
-the local scan), so a ``uniform:FRAC`` round costs ~FRAC of the full-K
-compute. ``--server-optimizer`` adds FedOpt on the server half (the
-round delta as a pseudo-gradient at ``--server-lr``).
-
-``--async`` switches to the asynchronous event runtime
-(:mod:`repro.fed.runtime`): clients finish after sampled delays
-(``--delay-spec``: zero | constant[:D] | uniform:LO:HI |
-lognormal[:MEDIAN[:SIGMA]]), each driver iteration pops the
-``--cohort`` earliest arrivals, runs their T local iterations from
-their per-client snapshots (sparse-slot compute), and folds them into
-the global model with ``--staleness-decay``-weighted delayed
-aggregation mixed at ``--mix-rate``. ``--delay-spec zero --cohort K``
-reproduces the synchronous rounds exactly.
+bias_compensated[:GAMMA] | staleness_weighted[:DECAY]) and
+``--opt-state-policy`` the client optimizer state's round-boundary
+behavior (carry | reset | average). ``--server-optimizer`` adds FedOpt
+on the server half (the round delta as a pseudo-gradient at
+``--server-lr``). ``--async`` switches to the asynchronous event
+runtime (:mod:`repro.fed.runtime`) with ``--delay-spec`` / ``--cohort``
+/ ``--staleness-decay`` / ``--mix-rate``; ``--delay-spec zero --cohort
+K`` reproduces the synchronous rounds exactly.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
       --rounds 20 --clients 16 --participation uniform:0.25 --seq 128 \
@@ -55,55 +51,78 @@ reproduces the synchronous rounds exactly.
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
       --rounds 40 --clients 16 --async --cohort 4 \
       --delay-spec lognormal:1:1.5 --staleness-decay 0.5
+
+  PYTHONPATH=src python -m repro.launch.train --config sweep/run_003.json
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
+import sys
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import fed
+from repro import api
 from repro.checkpoint import save
-from repro.configs import ScalaConfig, get_config
+from repro.configs import ScalaConfig
 from repro.core import engine
-from repro.core.scala import transformer_split_model
-from repro.data.loader import lm_round_batches, sample_clients
-from repro.data.synthetic import token_stream
-from repro.models import transformer as T
-from repro.optim import make_optimizer, schedules
 
 
-def build_data(cfg, num_clients: int, docs_per_client: int, seq: int,
-               seed: int):
-    docs, domains = token_stream(
-        n_docs=num_clients * docs_per_client, doc_len=seq + 1,
-        vocab=cfg.vocab_size, num_domains=max(2, num_clients // 2), seed=seed)
-    # domain-skewed assignment: client k prefers domain k % D
-    rng = np.random.default_rng(seed + 1)
-    by_client = []
-    D = domains.max() + 1
-    for k in range(num_clients):
-        pref = k % D
-        p = np.where(domains == pref, 8.0, 1.0)
-        p = p / p.sum()
-        idx = rng.choice(len(docs), size=docs_per_client, replace=False, p=p)
-        by_client.append(docs[idx])
-    return by_client
+def spec_from_args(args) -> api.ExperimentSpec:
+    """Resolve the CLI surface into the declarative experiment spec."""
+    # participation: bare fraction (legacy host-side "subset" mode) or a
+    # fed scheduler spec (in-program "masked"/"sparse")
+    try:
+        part_frac = float(args.participation)
+        scheduler_spec = None
+    except ValueError:
+        part_frac = 1.0
+        scheduler_spec = args.participation
+
+    mode = "subset" if scheduler_spec is None else "masked"
+    if args.slot_gather:
+        mode = "sparse"
+    if args.async_mode:
+        mode = "async"
+
+    server_opt = (None if args.server_optimizer == "none"
+                  else api.OptimSpec(
+                      name=api.OPTIMIZER_ALIASES.get(args.server_optimizer,
+                                                     args.server_optimizer),
+                      lr=args.server_lr, momentum=args.momentum,
+                      weight_decay=args.weight_decay))
+    return api.ExperimentSpec(
+        arch=args.arch, reduced=args.reduced, method="scala",
+        rounds=args.rounds, seed=args.seed,
+        scala=ScalaConfig(
+            num_clients=args.clients, participation=part_frac,
+            local_iters=args.local_iters, server_batch=args.server_batch,
+            lr=args.lr, adjust_server=not args.no_adjust,
+            adjust_client=not args.no_adjust),
+        optim=api.OptimSpec(name=args.optimizer, momentum=args.momentum,
+                            weight_decay=args.weight_decay,
+                            schedule=args.schedule, warmup=args.warmup),
+        fed=api.FedSpec(aggregator=args.aggregator,
+                        participation=scheduler_spec,
+                        opt_state_policy=args.opt_state_policy),
+        execution=api.ExecutionSpec(
+            mode=mode, backend="lace", delay=args.delay_spec,
+            cohort=args.cohort, staleness_decay=args.staleness_decay,
+            mix_rate=args.mix_rate, server_optimizer=server_opt,
+            unroll=args.unroll),
+        data=api.DataSpec(kind="lm_synthetic", seq=args.seq,
+                          docs_per_client=args.docs_per_client))
 
 
-def build_schedule(args, total_steps: int):
-    if args.schedule == "cosine":
-        return schedules.linear_warmup_cosine(args.lr, args.warmup,
-                                              total_steps)
-    return schedules.constant(args.lr)
-
-
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="",
+                    help="run a spec JSON (from --dump-config / a sweep "
+                         "manifest) verbatim; spec-level flags are ignored")
+    ap.add_argument("--dump-config", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="write the resolved ExperimentSpec JSON (stdout "
+                         "if no PATH) and exit without training")
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rounds", type=int, default=20)
@@ -113,8 +132,9 @@ def main():
                          "or scheduler spec: full | uniform:FRAC | "
                          "dirichlet:FRAC[:ALPHA] (in-program masking)")
     ap.add_argument("--aggregator", default="weighted",
-                    choices=("fedavg", "weighted", "bias_compensated",
-                             "staleness_weighted"))
+                    help="FL-phase weighting spec: fedavg | weighted | "
+                         "bias_compensated[:GAMMA] | "
+                         "staleness_weighted[:DECAY]")
     ap.add_argument("--opt-state-policy", default="carry",
                     choices=engine.OPT_STATE_POLICIES,
                     help="client optimizer state at the round boundary "
@@ -124,7 +144,8 @@ def main():
                          "fixed subset into a dense axis before the local "
                          "scan (needs a scheduler spec --participation)")
     ap.add_argument("--server-optimizer", default="none",
-                    choices=("none", "sgd", "momentum", "adamw"),
+                    choices=("none", "sgd", "momentum", "adamw", "fedavgm",
+                             "fedadam"),
                     help="FedOpt on the server half's round/event delta")
     ap.add_argument("--server-lr", type=float, default=1.0)
     ap.add_argument("--async", dest="async_mode", action="store_true",
@@ -165,177 +186,166 @@ def main():
                          "reduced parallelism; rolled elsewhere to keep "
                          "the HLO small), 0 = full unroll, N = factor")
     ap.add_argument("--checkpoint-dir", default="")
-    args = ap.parse_args()
+    return ap
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    assert cfg.frontend is None, "LM driver supports text archs"
-    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
-          f"vocab={cfg.vocab_size}")
 
-    # --- participation: bare fraction (legacy subset stacking) or a fed
-    # scheduler spec (static K slots + in-program masking) ---
-    try:
-        part_frac = float(args.participation)
-        scheduler = None
-    except ValueError:
-        part_frac = 1.0
-        scheduler = fed.make_participation(args.participation, args.clients)
-    aggregator = fed.make_aggregator(args.aggregator)
-    server_opt = (None if args.server_optimizer == "none"
-                  else make_optimizer(args.server_optimizer,
-                                      momentum=args.momentum,
-                                      weight_decay=args.weight_decay))
-    if args.async_mode and args.no_scan:
-        raise SystemExit("--async compiles whole events; drop --no-scan")
-    if args.async_mode and scheduler is not None:
-        raise SystemExit("--async replaces participation scheduling (the "
-                         "arrival cohort IS the participating subset); "
-                         "drop the --participation spec")
-    if args.slot_gather and scheduler is None:
-        raise SystemExit("--slot-gather needs a scheduler spec "
-                         "(--participation uniform:FRAC | dirichlet:FRAC)")
-    if args.no_scan and (scheduler is not None
-                         or args.aggregator != "weighted"
-                         or args.opt_state_policy != "carry"
-                         or server_opt is not None):
+def _run_no_scan(spec: api.ExperimentSpec, args):
+    """A/B baseline: per-step Python round loop (legacy federation
+    settings only) — the one path that bypasses the fused program."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api.build import text_split_init
+    from repro.data.loader import lm_round_batches, sample_clients
+
+    if (spec.execution.mode != "subset"
+            or spec.fed.aggregator != "weighted"
+            or spec.fed.opt_state_policy != "carry"
+            or spec.execution.server_optimizer is not None):
         raise SystemExit("--no-scan supports only the legacy federation "
-                         "settings (fraction participation, weighted "
-                         "aggregator, carry opt-state policy, no server "
-                         "optimizer)")
-    if aggregator.stateful and args.async_mode:
-        # the runtime already tracks per-client ages via version counters
-        # and decays arrivals by --staleness-decay; a staleness aggregator
-        # on top would decay twice
-        raise SystemExit(f"--aggregator {args.aggregator} double-decays "
-                         "under --async (the runtime applies "
-                         "--staleness-decay itself); use a stateless "
-                         "aggregator")
-    if aggregator.stateful and scheduler is None:
-        # legacy fraction mode re-samples WHICH clients occupy the C
-        # stacked slots every round, so per-slot aggregator state (e.g.
-        # staleness round ages) would track slots, not clients — and with
-        # full slots the ages never leave 0 (silently plain weighted).
-        raise SystemExit(f"--aggregator {args.aggregator} is stateful and "
-                         "needs stable client identities: use a scheduler "
-                         "spec (--participation uniform:FRAC | "
-                         "dirichlet:FRAC[:A])")
-
-    sc = ScalaConfig(
-        num_clients=args.clients, participation=part_frac,
-        local_iters=args.local_iters, server_batch=args.server_batch,
-        lr=args.lr, adjust_server=not args.no_adjust,
-        adjust_client=not args.no_adjust)
-
-    data = build_data(cfg, args.clients, args.docs_per_client, args.seq,
-                      args.seed)
-    model = transformer_split_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    C = (args.clients if scheduler is not None or args.async_mode
-         else sc.clients_per_round)
-    params = engine.init_scala_params(
-        key,
-        lambda k: T.init_params(k, cfg)["client"],
-        lambda k: T.init_params(k, cfg)["server"],
-        C)
-    n_params = sum(x.size for x in jax.tree.leaves(params["server"]))
-    print(f"server params: {n_params/1e6:.1f}M, "
-          f"participation: {args.participation} (slots: {C}), "
-          f"aggregator: {args.aggregator}, "
-          f"opt-state: {args.opt_state_policy}, "
-          f"optimizer: {args.optimizer}, schedule: {args.schedule}")
-
-    opt = make_optimizer(args.optimizer, momentum=args.momentum,
-                         weight_decay=args.weight_decay)
-    sched = build_schedule(args, args.rounds * sc.local_iters)
+                         "settings (fraction participation, no "
+                         "--slot-gather, weighted aggregator, carry "
+                         "opt-state policy, no server optimizer)")
+    cfg = spec.model_config()
+    sc = spec.scala
+    data = api.build_lm_data(cfg, sc.num_clients, spec.data.docs_per_client,
+                             spec.data.seq, spec.seed)
+    C = sc.clients_per_round
+    model, params = text_split_init(spec, C)
+    opt = spec.optim.make()
+    sched = spec.optim.make_schedule(spec.rounds * sc.local_iters,
+                                     default_lr=sc.lr)
     state = engine.init_train_state(params, opt)
-
-    if args.unroll == -1:
-        unroll = True if jax.default_backend() == "cpu" else 1
-    else:
-        unroll = True if args.unroll == 0 else args.unroll
-
-    afed = None
-    if args.async_mode:
-        delays = fed.make_delays(args.delay_spec)
-        cohort = args.cohort if args.cohort > 0 else max(1, args.clients // 4)
-        print(f"async: delay={args.delay_spec} cohort={cohort}/{C} "
-              f"staleness_decay={args.staleness_decay} "
-              f"mix_rate={args.mix_rate}")
-        round_fn = jax.jit(fed.make_async_runner(
-            model, sc, backend="lace", optimizer=opt, schedule=sched,
-            delays=delays, cohort=cohort,
-            staleness_decay=args.staleness_decay, mix_rate=args.mix_rate,
-            aggregator=aggregator, server_optimizer=server_opt,
-            server_lr=args.server_lr,
-            opt_state_policy=args.opt_state_policy, unroll=unroll))
-        afed = fed.init_async_state(
-            jax.random.PRNGKey(args.seed + 1), params["client"], delays,
-            aggregator=aggregator, server_optimizer=server_opt,
-            server_params=params["server"])
-        thread_fed = False
-        fed_state = None
-    elif args.no_scan:
-        thread_fed = False
-        fed_state = None
-        step = jax.jit(engine.make_split_step(model, sc, backend="lace",
-                                              optimizer=opt, schedule=sched))
-    else:
-        thread_fed = (scheduler is not None or aggregator.stateful
-                      or server_opt is not None)
-        fed_state = (fed.init_fed_state(jax.random.PRNGKey(args.seed + 1),
-                                        aggregator, scheduler, num_clients=C,
-                                        server_optimizer=server_opt,
-                                        server_params=params["server"])
-                     if thread_fed else None)
-        round_fn = jax.jit(engine.make_round_runner(
-            model, sc, backend="lace", optimizer=opt, schedule=sched,
-            unroll=unroll, aggregator=aggregator, participation=scheduler,
-            opt_state_policy=args.opt_state_policy,
-            slot_gather=args.slot_gather, server_optimizer=server_opt,
-            server_lr=args.server_lr))
-    rng = np.random.default_rng(args.seed)
-
-    for rnd in range(args.rounds):
+    step = jax.jit(engine.make_split_step(model, sc, backend="lace",
+                                          optimizer=opt, schedule=sched))
+    rng = np.random.default_rng(spec.seed)
+    for rnd in range(spec.rounds):
         t0 = time.time()
-        if scheduler is not None or args.async_mode:
-            selected = np.arange(args.clients)   # all slots; mask in-program
-        else:
-            selected = sample_clients(args.clients, C, rng)
+        selected = sample_clients(sc.num_clients, C, rng)
         batches = lm_round_batches(data, selected, sc.server_batch,
                                    sc.local_iters, rng)
         sizes = jnp.asarray(batches.pop("sizes"))
-        extra = ""
-        if args.async_mode:
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            state, afed, metrics = round_fn(state, afed, batches, sizes)
-            extra = (f" t={float(metrics['t_event']):.2f}"
-                     f" stale={float(metrics['staleness_mean']):.2f}")
-        elif args.no_scan:
-            metrics = None
-            for t in range(sc.local_iters):
-                batch_t = {k: jnp.asarray(v[t]) for k, v in batches.items()}
-                state, metrics = step(state, batch_t)
-            state = dataclasses.replace(
-                state, params=engine.scala_aggregate(state.params, sizes))
-        else:
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            if thread_fed:
-                state, fed_state, metrics = round_fn(state, batches, sizes,
-                                                     fed_state)
-            else:
-                state, metrics = round_fn(state, batches, sizes)
-        dt = time.time() - t0
-        label = "event" if args.async_mode else "round"
-        print(f"{label} {rnd:3d} loss_s={float(metrics['loss_server']):.4f} "
-              f"loss_c={float(metrics['loss_client']):.4f}{extra} ({dt:.1f}s)",
-              flush=True)
+        metrics = None
+        for t in range(sc.local_iters):
+            batch_t = {k: jnp.asarray(v[t]) for k, v in batches.items()}
+            state, metrics = step(state, batch_t)
+        state = dataclasses.replace(
+            state, params=engine.scala_aggregate(state.params, sizes))
+        print(f"round {rnd:3d} "
+              f"loss_s={float(metrics['loss_server']):.4f} "
+              f"loss_c={float(metrics['loss_client']):.4f} "
+              f"({time.time() - t0:.1f}s)", flush=True)
         if args.checkpoint_dir:
             save(args.checkpoint_dir, rnd, state.params)
-
     print("done")
     return state.params
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+
+    try:
+        if args.config:
+            with open(args.config) as f:
+                spec = api.ExperimentSpec.from_json(f.read())
+        else:
+            spec = spec_from_args(args)
+    except ValueError as e:
+        raise SystemExit(str(e))
+
+    if args.dump_config is not None:
+        try:
+            spec.validate()        # a dumped manifest must be runnable
+        except ValueError as e:
+            raise SystemExit(str(e))
+        payload = spec.to_json()
+        if args.dump_config == "-":
+            print(payload)
+        else:
+            with open(args.dump_config, "w") as f:
+                f.write(payload + "\n")
+            print(f"wrote {args.dump_config}", file=sys.stderr)
+        return spec
+
+    if args.no_scan:
+        if spec.execution.mode == "async":
+            raise SystemExit("--async compiles whole events; drop --no-scan")
+        return _run_no_scan(spec, args)
+
+    try:
+        spec.validate()
+    except ValueError as e:
+        raise SystemExit(str(e))
+
+    cfg = spec.model_config()
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+    assert cfg.frontend is None, "LM driver supports text archs"
+
+    trainer = api.Trainer(spec)
+    meta = trainer.program.metadata
+    n_params = sum(x.size for x in jax.tree.leaves(
+        trainer.state.inner.params["server"]))
+    print(f"server params: {n_params/1e6:.1f}M, "
+          f"mode: {meta['mode']} (slots: {meta['slots']}), "
+          f"participation: {spec.fed.participation or spec.scala.participation}, "
+          f"aggregator: {spec.fed.aggregator}, "
+          f"opt-state: {spec.fed.opt_state_policy}, "
+          f"optimizer: {spec.optim.spec}, schedule: {spec.optim.schedule}")
+    if meta["mode"] == "async":
+        print(f"async: delay={spec.execution.delay} "
+              f"cohort={spec.execution.resolve_cohort(meta['slots'])}"
+              f"/{meta['slots']} "
+              f"staleness_decay={spec.execution.staleness_decay} "
+              f"mix_rate={spec.execution.mix_rate}")
+
+    label = "event" if meta["mode"] == "async" else "round"
+
+    def on_round(rnd, metrics, dt):
+        extra = ""
+        if "t_event" in metrics:
+            extra = (f" t={metrics['t_event']:.2f}"
+                     f" stale={metrics['staleness_mean']:.2f}")
+        print(f"{label} {rnd:3d} loss_s={metrics['loss_server']:.4f} "
+              f"loss_c={metrics['loss_client']:.4f}{extra} ({dt:.1f}s)",
+              flush=True)
+        if args.checkpoint_dir:
+            save(args.checkpoint_dir, rnd, trainer.state.inner.params)
+
+    trainer.run(on_round=on_round)
+    print("done")
+    return trainer
+
+
+# --- legacy kwarg-style helpers (deprecated; warn once per process) -------
+
+
+def _legacy_build_data(cfg, num_clients: int, docs_per_client: int, seq: int,
+                       seed: int):
+    return api.build_lm_data(cfg, num_clients, docs_per_client, seq, seed)
+
+
+def _legacy_build_schedule(args, total_steps: int):
+    return api.OptimSpec(name="sgd", lr=args.lr, schedule=args.schedule,
+                         warmup=args.warmup).make_schedule(total_steps)
+
+
+_DEPRECATED_HELPERS = {
+    "build_data": (_legacy_build_data, "repro.api.build_lm_data (or an "
+                                       "api.DataSpec inside api.Trainer)"),
+    "build_schedule": (_legacy_build_schedule,
+                       "repro.api.OptimSpec.make_schedule"),
+}
+
+
+def __getattr__(name):
+    if name in _DEPRECATED_HELPERS:
+        fn, use = _DEPRECATED_HELPERS[name]
+        api.warn_once(f"repro.launch.train.{name}", use)
+        return fn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 if __name__ == "__main__":
