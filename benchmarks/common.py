@@ -58,7 +58,10 @@ def experiment_spec(method: str, *, alpha: Optional[int] = None,
                     opt_state_policy: str = "carry",
                     execution: str = "subset",
                     server_optimizer: Optional[str] = None,
-                    server_lr: float = 1.0) -> api.ExperimentSpec:
+                    server_lr: float = 1.0,
+                    rounds_per_call: int = 1,
+                    precision: str = "f32",
+                    donate: bool = True) -> api.ExperimentSpec:
     """The paper-table kwargs -> a declarative ExperimentSpec."""
     in_program = execution in ("masked", "sparse")
     server_opt = (api.OptimSpec.parse(server_optimizer, default_lr=server_lr)
@@ -74,7 +77,9 @@ def experiment_spec(method: str, *, alpha: Optional[int] = None,
         # full unroll: XLA:CPU runs rolled-loop bodies with reduced
         # parallelism (benchmarks/round_loop)
         execution=api.ExecutionSpec(mode=execution, backend="logits",
-                                    server_optimizer=server_opt, unroll=0),
+                                    server_optimizer=server_opt, unroll=0,
+                                    rounds_per_call=rounds_per_call,
+                                    precision=precision, donate=donate),
         data=api.DataSpec(kind="image_synthetic", n_train=n_train,
                           num_classes=num_classes, alpha=alpha, beta=beta))
 
@@ -100,7 +105,12 @@ def run_experiment(method: str, **kw) -> Dict:
     ``server_optimizer``: optional optimizer spec for the server side —
     FedOpt over the SCALA server half's round delta, or over the FL
     baselines' aggregated-model round delta (FedAvgM / FedAdam) —
-    applied at ``server_lr``."""
+    applied at ``server_lr``.
+
+    ``rounds_per_call`` / ``precision`` / ``donate``: the
+    :class:`repro.api.ExecutionSpec` dispatch-efficiency knobs (round
+    fusion, bf16 compute against f32 master params, state buffer
+    donation — see ``benchmarks/dispatch.py``)."""
     t0 = time.time()
     trainer = api.Trainer(experiment_spec(method, **kw))
     trainer.run()

@@ -195,6 +195,24 @@ def bench_participation(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Dispatch benchmark (round fusion x donation x precision; no paper
+# table — backs the PR-5 dispatch-efficiency layer).
+# ---------------------------------------------------------------------------
+
+def bench_dispatch(quick: bool) -> None:
+    from benchmarks.dispatch import bench_dispatch as _bench
+
+    res = _bench(rounds=48 if quick else 192)
+    for mode, entry in res["modes"].items():
+        for key, row in entry.items():
+            if key == "fused_speedup":
+                print(f"dispatch,{mode},fused_speedup,{row},,", flush=True)
+            else:
+                print(f"dispatch,{mode},{key},{row['rounds_per_sec']},,"
+                      f"{row['seconds']}", flush=True)
+
+
+# ---------------------------------------------------------------------------
 # Async execution-layer benchmark (sparse-slot gather + event throughput;
 # no paper table — backs the asynchronous split-federated runtime).
 # ---------------------------------------------------------------------------
@@ -225,6 +243,7 @@ TABLES = {
     "round_loop": bench_round_loop,
     "participation": bench_participation,
     "async": bench_async,
+    "dispatch": bench_dispatch,
     "roofline": bench_roofline,
 }
 
@@ -233,8 +252,11 @@ def smoke() -> None:
     """Minimal end-to-end pass of the harness (CI bit-rot check): one
     tiny accuracy experiment through each sync execution mode (the
     ``api.ExecutionSpec`` names; ``async`` is covered by
-    ``benchmarks.async_rounds --smoke``), plus the roofline reprint.
-    The dispatch benches have their own --smoke."""
+    ``benchmarks.async_rounds --smoke``), one fused/bf16 run through the
+    dispatch knobs, the dispatch fusion regression guard, plus the
+    roofline reprint. The dispatch benches also have their own --smoke."""
+    from benchmarks.dispatch import smoke_guard
+
     print(HEADER, flush=True)
     for execution in ("subset", "masked", "sparse"):
         res = run_experiment("scala", alpha=2, K=4, r=0.5, T=2, rounds=2,
@@ -244,6 +266,15 @@ def smoke() -> None:
                          n_train=300, server_optimizer="momentum",
                          server_lr=0.9)
     _emit("SMOKE", "fedavgm", "fedavg", res)
+    res = run_experiment("scala", alpha=2, K=4, r=0.5, T=2, rounds=3,
+                         n_train=300, execution="masked",
+                         rounds_per_call=2, precision="bf16")
+    _emit("SMOKE", "fused+bf16", "scala", res)
+    # regression guard: fused rounds must be >= as fast as unfused ones
+    # (shared with `benchmarks.dispatch --smoke`)
+    guard = smoke_guard()
+    print("SMOKE,dispatch_guard,fused_speedup,"
+          f"{guard['modes']['async']['fused_speedup']},,", flush=True)
     bench_roofline(True)
 
 

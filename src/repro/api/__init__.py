@@ -25,7 +25,12 @@ exchange. The kwarg-style constructors (``engine.make_round_runner``,
 ``fed.make_async_runner``, ``baselines.make_fl_round``) remain the
 internal layer the builder calls.
 """
-from repro.api.build import ProgramState, RoundProgram, build  # noqa: F401
+from repro.api.build import (  # noqa: F401
+    ProgramState,
+    RoundProgram,
+    build,
+    donated_jit,
+)
 from repro.api.deprecation import warn_once  # noqa: F401
 from repro.api.specs import (  # noqa: F401
     EXECUTION_MODES,
@@ -52,5 +57,5 @@ __all__ = [
     "OPTIMIZERS", "SCALA_METHODS", "SFL_METHODS",
     "DataSpec", "ExecutionSpec", "ExperimentSpec", "FedSpec", "OptimSpec",
     "ProgramState", "RoundProgram", "Trainer", "build", "build_image_data",
-    "build_lm_data", "warn_once",
+    "build_lm_data", "donated_jit", "warn_once",
 ]

@@ -56,13 +56,20 @@ class RoundProgram:
 
     * ``init() -> ProgramState`` — params, optimizer state, and
       federation/async state from the spec's seed;
-    * ``step(state, batches, sizes) -> (state, metrics)`` — ONE round
-      (or async event). ``batches`` leaves are always (T, C, Bk, ...)
-      — the baselines' (C, T, ...) layout is an internal detail;
+    * ``step(state, batches, sizes) -> (state, metrics)`` — ONE
+      dispatch: one round (or async event) by default; with
+      ``execution.rounds_per_call = R > 1`` the step is an outer
+      ``lax.scan`` over R whole rounds — ``batches``/``sizes`` leaves
+      gain a leading (R,) axis and metrics come back stacked. With
+      ``execution.donate`` (the default) the ``state`` argument's
+      buffers are donated: the state you pass in is dead after the
+      call — keep only the returned state;
     * ``predict(state, batch) -> logits`` — the current global model's
-      forward (slot-0 client half + server half for split methods);
+      forward (slot-0 client half + server half for split methods;
+      always full f32, independent of ``execution.precision``);
     * ``metadata`` — static facts a driver wants without re-deriving:
-      ``mode``, ``slots``, ``thread_fed``, ``backend``, ``method``.
+      ``mode``, ``slots``, ``thread_fed``, ``backend``, ``method``,
+      ``precision``, ``rounds_per_call``, ``donate``.
     """
 
     spec: ExperimentSpec
@@ -71,6 +78,52 @@ class RoundProgram:
     step: Callable[..., Any]
     predict: Callable[..., Any]
     metadata: Dict[str, Any]
+
+
+def donated_jit(fn, donate: bool = True):
+    """jit a round/step function with its state argument (argnum 0)
+    donated, so the stacked client params, optimizer moments, and
+    federation state update in place instead of being copied every
+    dispatch. The one rule donation imposes: the state you pass in is
+    dead after the call — keep only the returned state. This wrapper is
+    THE jit every driver should use for a step; the legacy
+    ``launch/train.py --no-scan`` branch shares it too.
+    """
+    return jax.jit(fn, donate_argnums=(0,)) if donate else jax.jit(fn)
+
+
+def _fuse_rounds(step, unroll):
+    """Fuse ``R = rounds_per_call`` whole rounds into one XLA program:
+    an outer ``lax.scan`` over the per-round step. ``batches`` / ``sizes``
+    leaves carry a leading (R,) axis (R is read from the shapes, so one
+    jitted program handles full chunks and the remainder chunk alike via
+    shape-specialized recompilation); metrics come back stacked (R, ...)
+    and are pulled to host once per chunk by the Trainer."""
+
+    def fused(state, batches, sizes):
+        R = jax.tree.leaves(batches)[0].shape[0]
+        if unroll is True or R == 1:
+            # trace-time unroll: a plain round chain with static slices.
+            # Structurally identical to R sequential dispatches (lax.scan
+            # — even fully unrolled — compiles the body a hair
+            # differently: one-ulp conv drift and an extra carry copy),
+            # so the fused chunk stays bit-identical to sequential
+            # rounds and XLA updates the round state in place.
+            ms = []
+            for r in range(R):
+                state, m = step(state,
+                                jax.tree.map(lambda a: a[r], batches),
+                                jax.tree.map(lambda a: a[r], sizes))
+                ms.append(m)
+            return state, jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+
+        def body(st, inp):
+            b, sz = inp
+            return step(st, b, sz)
+
+        return jax.lax.scan(body, state, (batches, sizes), unroll=unroll)
+
+    return fused
 
 
 def _fed_key(spec: ExperimentSpec):
@@ -150,10 +203,28 @@ def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
     else:
         program = _build_fl(spec)
 
+    program.metadata.update(precision=ex.precision,
+                            rounds_per_call=ex.rounds_per_call,
+                            donate=ex.donate)
+    step = program.step
+    if ex.rounds_per_call > 1:
+        step = _fuse_rounds(step, ex.resolve_unroll())
     if jit:
-        program = dataclasses.replace(program,
-                                      step=jax.jit(program.step),
+        step = donated_jit(step, donate=ex.donate)
+        init = program.init
+        if ex.donate:
+            # the un-donated init closes over the built param buffers, so
+            # two init() calls would share them — and a donated step may
+            # neither receive the same buffer twice (the async snapshots
+            # alias the stacked client half) nor consume a buffer a
+            # previous init() handed out. A leaf-wise copy makes every
+            # init() a fresh, donation-safe state.
+            _raw_init = program.init
+            init = lambda: jax.tree.map(jnp.copy, _raw_init())
+        program = dataclasses.replace(program, step=step, init=init,
                                       predict=jax.jit(program.predict))
+    elif step is not program.step:
+        program = dataclasses.replace(program, step=step)
     return program
 
 
@@ -193,7 +264,7 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             staleness_decay=ex.staleness_decay, mix_rate=ex.mix_rate,
             aggregator=agg, server_optimizer=server_opt,
             server_lr=server_lr, opt_state_policy=fd.opt_state_policy,
-            unroll=unroll)
+            unroll=unroll, precision=ex.precision)
 
         def init() -> ProgramState:
             afed = fed.init_async_state(
@@ -214,7 +285,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             unroll=unroll, aggregator=agg, participation=scheduler,
             opt_state_policy=fd.opt_state_policy,
             slot_gather=ex.mode == "sparse", server_optimizer=server_opt,
-            server_lr=server_lr, mesh=mesh, batch_specs=batch_specs)
+            server_lr=server_lr, mesh=mesh, batch_specs=batch_specs,
+            precision=ex.precision)
         thread_fed = (scheduler is not None or agg.stateful
                       or server_opt is not None)
 
@@ -273,7 +345,8 @@ def _build_fl(spec: ExperimentSpec) -> RoundProgram:
     round_fn = B.make_fl_round(spec.method, model,
                                lr=spec.optim.resolve_lr(spec.scala.lr),
                                aggregator=agg, server_optimizer=server_opt,
-                               server_lr=server_lr)
+                               server_lr=server_lr,
+                               precision=spec.execution.precision)
 
     def init() -> ProgramState:
         return ProgramState(
@@ -322,7 +395,8 @@ def _build_sfl(spec: ExperimentSpec) -> RoundProgram:
 
     round_fn = B.make_sfl_round(spec.method, model,
                                 lr=spec.optim.resolve_lr(spec.scala.lr),
-                                aux_head_fwd=aux_head_fwd, aggregator=agg)
+                                aux_head_fwd=aux_head_fwd, aggregator=agg,
+                                precision=spec.execution.precision)
 
     def init() -> ProgramState:
         return ProgramState(inner=state0, fed=())

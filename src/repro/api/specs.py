@@ -234,6 +234,26 @@ class ExecutionSpec:
     ``"fedadam:0.01"`` with ``OptimSpec.parse(s, default_lr=1.0)``).
     ``unroll``: scan unroll factor — ``-1`` auto (full on CPU),
     ``0`` full, ``N`` factor.
+
+    Dispatch-efficiency knobs (benchmarked in
+    ``benchmarks/BENCH_dispatch.json``):
+
+    * ``precision`` — engine compute policy
+      (:data:`repro.core.engine.PRECISIONS`): ``"f32"`` exact (default),
+      ``"bf16"`` bf16 forward/backward against f32 master params (the
+      priors, loss reductions, updates, and aggregation stay f32).
+    * ``rounds_per_call`` — how many whole rounds (or async events) one
+      jitted ``RoundProgram.step`` dispatch executes, as an outer
+      ``lax.scan`` over the per-round program. Batches/sizes gain a
+      leading ``(R,)`` axis and metrics come back stacked;
+      :class:`repro.api.Trainer` chunks transparently (remainder rounds
+      recompile once for the smaller leading axis). Keep it at 1 while
+      debugging or when a host callback must run every round.
+    * ``donate`` — donate the program-state argument's buffers to the
+      jitted step (``donate_argnums``), updating the round state in
+      place instead of copying the stacked client params + optimizer
+      moments every dispatch. On by default; a donated state must not
+      be reused after stepping it.
     """
 
     mode: str = "masked"
@@ -244,9 +264,12 @@ class ExecutionSpec:
     mix_rate: float = 1.0
     server_optimizer: Optional[OptimSpec] = None
     unroll: int = -1
+    precision: str = "f32"
+    rounds_per_call: int = 1
+    donate: bool = True
 
     def __post_init__(self):
-        from repro.core.engine import BACKENDS
+        from repro.core.engine import BACKENDS, PRECISIONS
         from repro.fed import make_delays
 
         if self.mode not in EXECUTION_MODES:
@@ -255,6 +278,12 @@ class ExecutionSpec:
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected {BACKENDS}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"expected {PRECISIONS}")
+        if self.rounds_per_call < 1:
+            raise ValueError(f"rounds_per_call must be >= 1, got "
+                             f"{self.rounds_per_call}")
         make_delays(self.delay)                      # structural validation
         if self.cohort < 0:
             raise ValueError(f"cohort must be >= 0, got {self.cohort}")

@@ -103,6 +103,7 @@ class Trainer:
         self.state = self.program.init()
         self.history: List[Dict[str, float]] = []
         self.round = 0
+        self._rpc = self.program.metadata.get("rounds_per_call", 1)
         self._cfg = spec.model_config()
         if spec.data.kind == "image_synthetic":
             self._data, self._test = build_image_data(spec)
@@ -140,16 +141,42 @@ class Trainer:
 
     # ------------------------------------------------------------------
 
-    def step(self):
-        """One round (or async event): assemble batches, advance state.
+    def step(self, rounds: Optional[int] = None):
+        """One program dispatch: assemble batches, advance state.
 
-        Returns the round's scalar metrics as floats."""
-        batches, sizes = self._next_round_batches()
+        With ``execution.rounds_per_call = 1`` (the default) this is one
+        round (or async event). With ``R > 1`` one dispatch executes
+        ``min(R, rounds)`` whole rounds fused into a single XLA program:
+        the per-round batches are assembled host-side in exactly the
+        order the unfused path would draw them (same RNG stream), stacked
+        along a leading round axis, and the stacked metrics are pulled to
+        host once. One history entry is appended per *round* either way.
+
+        Returns the last executed round's scalar metrics as floats."""
+        n = self._rpc if rounds is None else min(rounds, self._rpc)
+        if self._rpc == 1:
+            batches, sizes = self._next_round_batches()
+            self.state, metrics = self.program.step(self.state, batches,
+                                                    sizes)
+            scalars = {k: float(v) for k, v in metrics.items()
+                       if jnp.ndim(v) == 0}
+            self.history.append(scalars)
+            self.round += 1
+            return scalars
+        per_round = [self._next_round_batches() for _ in range(n)]
+        batches = {k: jnp.stack([b[k] for b, _ in per_round])
+                   for k in per_round[0][0]}
+        sizes = jnp.stack([s for _, s in per_round])
         self.state, metrics = self.program.step(self.state, batches, sizes)
-        scalars = {k: float(v) for k, v in metrics.items()
-                   if jnp.ndim(v) == 0}
-        self.history.append(scalars)
-        self.round += 1
+        # per-round scalars carry the leading (n,) round axis now; ONE
+        # device-to-host pull per metric for the whole chunk
+        stacked = {k: np.asarray(v) for k, v in metrics.items()
+                   if jnp.ndim(v) == 1}
+        scalars = None
+        for r in range(n):
+            scalars = {k: float(v[r]) for k, v in stacked.items()}
+            self.history.append(scalars)
+        self.round += n
         return scalars
 
     def run(self, rounds: Optional[int] = None, *,
@@ -157,13 +184,25 @@ class Trainer:
                                         Any]] = None):
         """Run ``rounds`` rounds (default ``spec.rounds``); returns the
         full metric history (one dict of floats per round so far).
-        ``on_round(index, metrics, seconds)`` is called after each."""
+        ``on_round(index, metrics, seconds)`` is called for every round;
+        under ``rounds_per_call`` fusion it fires once per round after
+        each chunk, with ``seconds`` amortized over the chunk (fuse less
+        if you need a true per-round host callback). A trailing
+        remainder chunk (``rounds % rounds_per_call``) just recompiles
+        the step once for the smaller leading axis."""
         n = self.spec.rounds if rounds is None else rounds
-        for _ in range(n):
+        done = 0
+        while done < n:
+            k = min(self._rpc, n - done)
             t0 = time.time()
-            scalars = self.step()
+            self.step(k)
+            dt = time.time() - t0
+            done += k
             if on_round is not None:
-                on_round(self.round - 1, scalars, time.time() - t0)
+                for j in range(k):
+                    on_round(self.round - k + j,
+                             self.history[len(self.history) - k + j],
+                             dt / k)
         return self.history
 
     # ------------------------------------------------------------------

@@ -20,6 +20,7 @@ setting) with state threaded through the local-iteration scans.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, TYPE_CHECKING
 
@@ -47,6 +48,32 @@ class FedModel:
     num_classes: int
     # optional feature extractor for FedDecorr
     features: Optional[Callable[[Any, Any], Any]] = None
+
+
+def cast_fed_model(model: FedModel, precision: str) -> FedModel:
+    """The FL-baseline mirror of :func:`repro.core.engine.cast_to_compute`:
+    ``"bf16"`` casts params and inputs to bfloat16 inside the wrapped
+    forward (master params stay f32; the cast's transpose upcasts the
+    param grads back to f32); the losses themselves already reduce in
+    f32."""
+    if precision not in engine.PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected "
+                         f"{engine.PRECISIONS}")
+    if precision == "f32":
+        return model
+    bf16 = jnp.bfloat16
+
+    def forward(p, x):
+        return model.forward(engine.cast_floats(p, bf16),
+                             engine.cast_floats(x, bf16))
+
+    features = None
+    if model.features is not None:
+        def features(p, x):
+            return model.features(engine.cast_floats(p, bf16),
+                                  engine.cast_floats(x, bf16))
+
+    return dataclasses.replace(model, forward=forward, features=features)
 
 
 # ---------------------------------------------------------------------------
@@ -177,9 +204,13 @@ def make_fl_round(method: str, model: FedModel, lr: float,
                   optimizer: Optional[optimizers.Optimizer] = None,
                   aggregator: Optional[Aggregator] = None,
                   server_optimizer: Optional[optimizers.Optimizer] = None,
-                  server_lr: float = 1.0, **kw):
+                  server_lr: float = 1.0, precision: str = "f32", **kw):
     """Returns round(w_global, round_batches, client_labels_counts, state)
     -> (w_global', state'). round_batches leaves: (C, T, Bk, ...).
+
+    ``precision``: compute policy (:func:`cast_fed_model`) — ``"bf16"``
+    runs the local forward/backward in bfloat16 against f32 master
+    params; aggregation and FedOpt stay f32.
 
     ``aggregator``: optional stateless :mod:`repro.fed` aggregator for
     the FL phase (default: data-size FedAvg). Prior-aware aggregators
@@ -193,6 +224,7 @@ def make_fl_round(method: str, model: FedModel, lr: float,
     init with ``init_fl_state(..., server_optimizer=)``. Plain SGD at
     ``server_lr=1.0`` reproduces the unmodified FedAvg round.
     """
+    model = cast_fed_model(model, precision)
     loss_fn = make_local_loss(method, model, **kw)
     alpha = kw.get("alpha", 0.01)
 
@@ -265,7 +297,8 @@ def init_fl_state(method: str, w_global, num_clients: int,
 def make_sfl_round(method: str, model: SplitModel, lr: float,
                    aux_head_fwd=None,
                    optimizer: Optional[optimizers.Optimizer] = None,
-                   aggregator: Optional[Aggregator] = None):
+                   aggregator: Optional[Aggregator] = None,
+                   precision: str = "f32"):
     """SFL-family round functions.
 
     State layout: {'wc': stacked (C,...) or shared, 'ws': ..., 'aux': ...}.
@@ -275,8 +308,11 @@ def make_sfl_round(method: str, model: SplitModel, lr: float,
     local scans and reset at each round boundary (clients restart from
     the aggregated model). ``aggregator``: optional stateless
     :mod:`repro.fed` aggregator for the averaged halves (default:
-    data-size FedAvg).
+    data-size FedAvg). ``precision``: compute policy
+    (:func:`repro.core.engine.cast_to_compute`) — ``"bf16"`` local
+    compute against f32 master params.
     """
+    model = engine.cast_to_compute(model, precision)
     opt = optimizer if optimizer is not None else optimizers.sgd()
 
     def _agg(stacked, data_sizes, round_batches):

@@ -80,6 +80,16 @@ from repro.optim import optimizers, schedules
 
 BACKENDS = ("logits", "lace", "lace_dp")
 
+#: compute-precision policies for the split step. ``"f32"`` is exact
+#: (legacy HLO); ``"bf16"`` runs the client forward, the concat-
+#: activation server trunk, and both backward passes in bfloat16 while
+#: the master params, optimizer state, label priors / logit
+#: adjustments, loss reductions, and the FL aggregation stay float32
+#: (the LACE kernels upcast per chunk, so the fused loss composes
+#: unchanged). Halves the live activation set AND the split-boundary
+#: wire traffic.
+PRECISIONS = ("f32", "bf16")
+
 
 # ---------------------------------------------------------------------------
 # model adapter
@@ -108,6 +118,58 @@ class SplitModel:
     # replicated-head ("dp") profile: route the fused loss through the
     # shard_map LACE so the head grad is psummed once (§Perf iteration 3)
     dp_loss: bool = False
+
+
+# ---------------------------------------------------------------------------
+# mixed precision
+# ---------------------------------------------------------------------------
+
+
+def cast_floats(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (ints/keys pass
+    through untouched)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a, tree)
+
+
+def cast_to_compute(model: SplitModel, precision: str) -> SplitModel:
+    """Wrap a :class:`SplitModel` with a compute-precision policy.
+
+    ``"f32"`` returns the model unchanged. ``"bf16"`` casts the param
+    halves and float batch inputs to bfloat16 *inside* each wrapped
+    forward, so activations and both backward passes run in bf16 while
+    the master params stay f32 — and because the cast sits inside the
+    differentiated functions, its transpose upcasts the cotangents and
+    every param gradient lands back in f32. The fused-loss hooks
+    (``head_weight``) hand the LACE ops a bf16 head; the ops upcast per
+    chunk, so loss values and logit adjustments are still computed in
+    f32 (``head_grad_merge`` receives the chunk-accumulated f32 partial
+    cast to the head dtype, exactly as before).
+    """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected "
+                         f"{PRECISIONS}")
+    if precision == "f32":
+        return model
+    bf16 = jnp.bfloat16
+
+    def client_fwd(wc, batch):
+        return model.client_fwd(cast_floats(wc, bf16),
+                                cast_floats(batch, bf16))
+
+    def server_fwd(ws, acts):
+        return model.server_fwd(cast_floats(ws, bf16), acts)
+
+    kw = {}
+    if model.server_trunk is not None:
+        kw["server_trunk"] = (
+            lambda ws, acts: model.server_trunk(cast_floats(ws, bf16), acts))
+    if model.head_weight is not None:
+        kw["head_weight"] = (
+            lambda ws: cast_floats(model.head_weight(ws), bf16))
+    return dataclasses.replace(model, client_fwd=client_fwd,
+                               server_fwd=server_fwd, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -241,13 +303,19 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
                      backend: str = "logits",
                      ce_chunk: Optional[int] = None,
                      axes: Optional[MeshAxes] = None,
-                     mask=None):
+                     mask=None,
+                     precision: str = "f32"):
     """Stages 1-4 of the SCALA local iteration for any loss backend.
 
     params: {'client': stacked (C,...), 'server': ...}; batch leaves
     (C, B_k, ...). Returns (grads, metrics) with grads mirroring params —
     no parameter update applied. ``axes`` must be set iff
     ``backend == "lace_dp"`` (the caller wraps this in ``shard_map``).
+
+    ``precision`` (:data:`PRECISIONS`) selects the compute policy via
+    :func:`cast_to_compute`: ``"bf16"`` runs stages 2-4 in bfloat16
+    against the f32 master params; stage 1 (priors), the loss
+    reductions, and stage 5 (updates) stay f32.
 
     ``mask`` is an optional (C,) 0/1 participation mask (the client count
     stays static; see :mod:`repro.fed.participation`). It folds into the
@@ -265,6 +333,7 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
     if backend != "logits" and model.server_trunk is None:
         raise ValueError(f"backend {backend!r} needs model.server_trunk/"
                          "head_weight (fused LACE path)")
+    model = cast_to_compute(model, precision)
 
     N = model.num_classes
     labels = batch["labels"]
@@ -480,7 +549,8 @@ def _dp_specs(mesh, axes: MeshAxes, tree):
 
 def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
                backend: str = "logits", lr: Optional[float] = None,
-               ce_chunk: Optional[int] = None, mesh=None, batch_specs=None):
+               ce_chunk: Optional[int] = None, mesh=None, batch_specs=None,
+               precision: str = "f32"):
     """One stateless SCALA local iteration with plain SGD (eqs. 7/9) —
     the legacy-shaped entry point behind :mod:`repro.core.scala`.
 
@@ -502,7 +572,8 @@ def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
         def body(p, b):
             grads, metrics = split_step_grads(model, p, b, scala,
                                               backend="lace_dp",
-                                              ce_chunk=ce_chunk, axes=axes)
+                                              ce_chunk=ce_chunk, axes=axes,
+                                              precision=precision)
             return sgd_apply(p, grads, lr), metrics
 
         fn = compat.shard_map(body, mesh=mesh,
@@ -511,7 +582,8 @@ def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
         return fn(params, batch)
 
     grads, metrics = split_step_grads(model, params, batch, scala,
-                                      backend=backend, ce_chunk=ce_chunk)
+                                      backend=backend, ce_chunk=ce_chunk,
+                                      precision=precision)
     return sgd_apply(params, grads, lr), metrics
 
 
@@ -520,14 +592,17 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
                     optimizer: Optional[optimizers.Optimizer] = None,
                     schedule: Optional[Callable] = None,
                     ce_chunk: Optional[int] = None,
-                    mesh=None, batch_specs=None):
+                    mesh=None, batch_specs=None,
+                    precision: str = "f32"):
     """Build the stateful engine step: (TrainState, batch[, mask]) ->
     (TrainState, metrics), jit/scan-compatible.
 
     ``optimizer`` defaults to plain SGD (the paper's eq. 7/9) and
     ``schedule`` to a constant ``scala.lr``; any combination from
     :mod:`repro.optim` works, with the lr driven by ``state.step`` (one
-    increment per local iteration).
+    increment per local iteration). ``precision`` is the compute policy
+    of :func:`split_step_grads` (``"bf16"`` = bf16 forward/backward
+    against f32 master params and f32 updates).
 
     The optional third ``mask`` argument is a (C,) 0/1 participation mask
     (see :func:`split_step_grads`); for ``lace_dp`` it is passed into the
@@ -557,7 +632,7 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
                 grads, metrics = split_step_grads(
                     model, st.params, b, scala, backend="lace_dp",
                     ce_chunk=ce_chunk, axes=axes,
-                    mask=m[0] if m else None)
+                    mask=m[0] if m else None, precision=precision)
                 return _apply_updates(opt, st, grads, sched(st.step)), metrics
 
             # the (C,) mask, when present, shards like the client axis
@@ -574,7 +649,7 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
     def step(state: TrainState, batch, mask=None):
         grads, metrics = split_step_grads(model, state.params, batch, scala,
                                           backend=backend, ce_chunk=ce_chunk,
-                                          mask=mask)
+                                          mask=mask, precision=precision)
         return _apply_updates(opt, state, grads, sched(state.step)), metrics
 
     return step
@@ -684,7 +759,8 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                       slot_gather: bool = False,
                       server_optimizer: Optional[optimizers.Optimizer] = None,
                       server_lr: float = 1.0,
-                      mesh=None, batch_specs=None):
+                      mesh=None, batch_specs=None,
+                      precision: str = "f32"):
     """Build the fused round program: T local iterations (``lax.scan``
     over the engine step) + the pluggable FL phase, all in one jittable
     fn. All backends are supported, including ``lace_dp`` (pass ``mesh``
@@ -761,6 +837,11 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     while-loop bodies with reduced parallelism, so for CPU-scale models
     pass ``unroll=True`` (full unroll): still one dispatch per round,
     no loop serialization (see benchmarks/round_loop.py).
+
+    ``precision`` (:data:`PRECISIONS`) is the engine step's compute
+    policy: ``"bf16"`` runs forward/backward in bfloat16 against f32
+    master params while the priors, both loss reductions, the stage-5
+    updates, and the FL-phase aggregation all stay f32.
     """
     from repro import fed as _fed
 
@@ -790,7 +871,8 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                  and k_active < participation.num_clients)
     step = make_split_step(model, scala, backend=backend, optimizer=opt,
                            schedule=schedule, ce_chunk=ce_chunk,
-                           mesh=mesh, batch_specs=batch_specs)
+                           mesh=mesh, batch_specs=batch_specs,
+                           precision=precision)
 
     def round_fn(state: TrainState, round_batches, data_sizes=None,
                  fed_state=None):
@@ -882,13 +964,14 @@ def scala_round_scan(model: SplitModel, state: TrainState, round_batches,
                      optimizer: Optional[optimizers.Optimizer] = None,
                      schedule: Optional[Callable] = None,
                      ce_chunk: Optional[int] = None,
-                     unroll=1):
+                     unroll=1, precision: str = "f32"):
     """One-shot convenience over :func:`make_round_runner`: T local
     iterations + aggregation as a single scanned program. For a training
     loop, build the runner once and jit it instead."""
     runner = make_round_runner(model, scala, backend=backend,
                                optimizer=optimizer, schedule=schedule,
-                               ce_chunk=ce_chunk, unroll=unroll)
+                               ce_chunk=ce_chunk, unroll=unroll,
+                               precision=precision)
     return runner(state, round_batches, data_sizes)
 
 

@@ -170,7 +170,8 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       server_optimizer: Optional[optimizers.Optimizer] = None,
                       server_lr: float = 1.0,
                       opt_state_policy: str = "carry",
-                      unroll=1):
+                      unroll=1,
+                      precision: str = "f32"):
     """Build the async event program: ``async_fn(state, afed,
     round_batches, data_sizes=None) -> (state, afed, metrics)``.
 
@@ -201,6 +202,11 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
       back to their slots (busy clients' moments are untouched),
       ``reset`` zeroes the cohort's, ``average`` redistributes the
       cohort-weighted mean over the cohort slots.
+    * ``precision`` — the engine step's compute policy
+      (:data:`repro.core.engine.PRECISIONS`): ``"bf16"`` runs the
+      cohort's local forward/backward in bfloat16 against f32 master
+      params; the staleness weights, priors, and delayed aggregation
+      stay f32.
 
     ``state.params["client"]`` always holds the *current* global client
     half broadcast over the K slots (checkpoint/eval-compatible with the
@@ -225,7 +231,7 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
     agg = aggregator if aggregator is not None else _agg.weighted()
     step = engine.make_split_step(model, scala, backend=backend,
                                   optimizer=opt, schedule=schedule,
-                                  ce_chunk=ce_chunk)
+                                  ce_chunk=ce_chunk, precision=precision)
 
     def async_fn(state: engine.TrainState, afed: AsyncFedState,
                  round_batches, data_sizes=None):

@@ -25,10 +25,34 @@ import numpy as np
 
 
 def _pick_chunk(n: int, target: int) -> int:
-    c = min(n, target)
-    while n % c:
-        c -= 1
-    return c
+    """The scan chunk along the token axis: always ``min(n, target)``.
+
+    Non-divisible N is handled by padding the token axis up to the next
+    chunk multiple with zero-weight tokens (:func:`_pad_tokens`) — NOT
+    by shrinking the chunk, which used to degrade to chunk=1 for prime
+    N (one (G, 1, V) matmul per token)."""
+    return min(n, target)
+
+
+def _pad_tokens(c, feats, labels, weights):
+    """Pad the token axis to the next multiple of the chunk ``c``.
+
+    Padding tokens carry weight 0 and label 0: they contribute exactly
+    zero to the weighted NLL sum, the weight sum, and every gradient
+    (the backward's per-token cotangent is scaled by the weight), so
+    loss values and grads match the unpadded math. Returns
+    (feats, labels, weights, n_orig) — ``weights`` materialized even
+    when the caller passed None, so the zero-weight rows are explicit.
+    """
+    G, N, _ = feats.shape
+    if weights is None:
+        weights = jnp.ones((G, N), jnp.float32)
+    pad = (-N) % c
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    return feats, labels, weights, N
 
 
 def _chunk_logits(f_c, w_head, lp_c, tau):
@@ -75,10 +99,13 @@ def _prep(feats, labels, prior_rows, prior_ids, weights, tau, eps):
 
 def _fwd_impl(feats, w_head, labels, prior_rows, prior_ids, weights,
               tau, eps, chunk, mean):
-    G, N, d = feats.shape
+    res_in = (feats, w_head, labels, prior_rows, prior_ids, weights)
+    G, N0, d = feats.shape
+    c = _pick_chunk(N0, chunk)
+    feats, labels, weights, _ = _pad_tokens(c, feats, labels, weights)
+    N = feats.shape[1]
     weights_f, lp = _prep(feats, labels, prior_rows, prior_ids, weights,
                           tau, eps)
-    c = _pick_chunk(N, chunk)
     nc = N // c
 
     fc = feats.reshape(G, nc, c, d).swapaxes(0, 1)       # (nc, G, c, d)
@@ -96,21 +123,22 @@ def _fwd_impl(feats, w_head, labels, prior_rows, prior_ids, weights,
         body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
         (fc, lc, wc))
     out = nll_sum / jnp.maximum(w_sum, 1e-8) if mean else nll_sum
-    res = (feats, w_head, labels, prior_rows, prior_ids, weights, w_sum)
-    return out, res
+    return out, res_in + (w_sum,)
 
 
 def _bwd_impl(tau, eps, chunk, mean, res, g):
     feats, w_head, labels, prior_rows, prior_ids, weights, w_sum = res
-    G, N, d = feats.shape
+    G, N0, d = feats.shape
     V = w_head.shape[1]
-    weights_f, lp = _prep(feats, labels, prior_rows, prior_ids, weights,
-                          tau, eps)
-    c = _pick_chunk(N, chunk)
+    c = _pick_chunk(N0, chunk)
+    feats_p, labels_p, weights_p, _ = _pad_tokens(c, feats, labels, weights)
+    N = feats_p.shape[1]
+    weights_f, lp = _prep(feats_p, labels_p, prior_rows, prior_ids,
+                          weights_p, tau, eps)
     nc = N // c
 
-    fc = feats.reshape(G, nc, c, d).swapaxes(0, 1)
-    lc = labels.reshape(G, nc, c).swapaxes(0, 1)
+    fc = feats_p.reshape(G, nc, c, d).swapaxes(0, 1)
+    lc = labels_p.reshape(G, nc, c).swapaxes(0, 1)
     wc = weights_f.reshape(G, nc, c).swapaxes(0, 1)
     scale = g / jnp.maximum(w_sum, 1e-8) if mean else g
 
@@ -128,7 +156,7 @@ def _bwd_impl(tau, eps, chunk, mean, res, g):
         return dw, df_c
 
     dw, dfc = jax.lax.scan(body, jnp.zeros((d, V), jnp.float32), (fc, lc, wc))
-    dfeats = dfc.swapaxes(0, 1).reshape(G, N, d).astype(feats.dtype)
+    dfeats = dfc.swapaxes(0, 1).reshape(G, N, d)[:, :N0].astype(feats.dtype)
     zeros_prior = (None if prior_rows is None
                    else jnp.zeros_like(prior_rows))
     f0 = lambda a: (None if a is None else

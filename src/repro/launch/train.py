@@ -43,6 +43,13 @@ runtime (:mod:`repro.fed.runtime`) with ``--delay-spec`` / ``--cohort``
 / ``--staleness-decay`` / ``--mix-rate``; ``--delay-spec zero --cohort
 K`` reproduces the synchronous rounds exactly.
 
+Dispatch-efficiency knobs (README §Performance,
+``benchmarks/BENCH_dispatch.json``): ``--precision bf16`` runs the
+engine compute in bfloat16 against f32 master params,
+``--rounds-per-call R`` fuses R whole rounds into one compiled dispatch
+(bit-identical to unfused rounds at f32; keep 1 while debugging), and
+``--no-donate`` disables the in-place (donated) round-state update.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
       --rounds 20 --clients 16 --participation uniform:0.25 --seq 128 \
       --aggregator bias_compensated --optimizer momentum \
@@ -109,7 +116,9 @@ def spec_from_args(args) -> api.ExperimentSpec:
             mode=mode, backend="lace", delay=args.delay_spec,
             cohort=args.cohort, staleness_decay=args.staleness_decay,
             mix_rate=args.mix_rate, server_optimizer=server_opt,
-            unroll=args.unroll),
+            unroll=args.unroll, precision=args.precision,
+            rounds_per_call=args.rounds_per_call,
+            donate=not args.no_donate),
         data=api.DataSpec(kind="lm_synthetic", seq=args.seq,
                           docs_per_client=args.docs_per_client))
 
@@ -185,6 +194,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "CPU, where XLA runs while-loop bodies with "
                          "reduced parallelism; rolled elsewhere to keep "
                          "the HLO small), 0 = full unroll, N = factor")
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
+                    help="engine compute policy: bf16 forward/backward "
+                         "against f32 master params (priors, losses, "
+                         "updates, aggregation stay f32)")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="rounds fused into one jitted dispatch (outer "
+                         "lax.scan over whole rounds; keep 1 when "
+                         "debugging or checkpointing every round)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable buffer donation of the round state "
+                         "(donation updates params/opt-state in place; "
+                         "disable only for debugging aliasing issues)")
     ap.add_argument("--checkpoint-dir", default="")
     return ap
 
@@ -203,11 +224,13 @@ def _run_no_scan(spec: api.ExperimentSpec, args):
     if (spec.execution.mode != "subset"
             or spec.fed.aggregator != "weighted"
             or spec.fed.opt_state_policy != "carry"
-            or spec.execution.server_optimizer is not None):
+            or spec.execution.server_optimizer is not None
+            or spec.execution.rounds_per_call != 1):
         raise SystemExit("--no-scan supports only the legacy federation "
                          "settings (fraction participation, no "
                          "--slot-gather, weighted aggregator, carry "
-                         "opt-state policy, no server optimizer)")
+                         "opt-state policy, no server optimizer, "
+                         "--rounds-per-call 1)")
     cfg = spec.model_config()
     sc = spec.scala
     data = api.build_lm_data(cfg, sc.num_clients, spec.data.docs_per_client,
@@ -218,8 +241,13 @@ def _run_no_scan(spec: api.ExperimentSpec, args):
     sched = spec.optim.make_schedule(spec.rounds * sc.local_iters,
                                      default_lr=sc.lr)
     state = engine.init_train_state(params, opt)
-    step = jax.jit(engine.make_split_step(model, sc, backend="lace",
-                                          optimizer=opt, schedule=sched))
+    # the shared donated jit wrapper from repro.api: even the legacy
+    # per-step loop updates params/opt-state in place instead of copying
+    step = api.donated_jit(
+        engine.make_split_step(model, sc, backend="lace", optimizer=opt,
+                               schedule=sched,
+                               precision=spec.execution.precision),
+        donate=spec.execution.donate)
     rng = np.random.default_rng(spec.seed)
     for rnd in range(spec.rounds):
         t0 = time.time()
@@ -302,6 +330,7 @@ def main(argv=None):
               f"mix_rate={spec.execution.mix_rate}")
 
     label = "event" if meta["mode"] == "async" else "round"
+    rpc = meta["rounds_per_call"]
 
     def on_round(rnd, metrics, dt):
         extra = ""
@@ -311,7 +340,12 @@ def main(argv=None):
         print(f"{label} {rnd:3d} loss_s={metrics['loss_server']:.4f} "
               f"loss_c={metrics['loss_client']:.4f}{extra} ({dt:.1f}s)",
               flush=True)
-        if args.checkpoint_dir:
+        # under round fusion trainer.state only advances per chunk, so a
+        # per-round save would write the chunk-boundary params R times
+        # under R wrong labels; save once per chunk, at the round the
+        # params actually correspond to
+        at_boundary = (rnd + 1) % rpc == 0 or rnd == spec.rounds - 1
+        if args.checkpoint_dir and at_boundary:
             save(args.checkpoint_dir, rnd, trainer.state.inner.params)
 
     trainer.run(on_round=on_round)
