@@ -217,6 +217,22 @@ def bench_dispatch(quick: bool) -> None:
 # no paper table — backs the asynchronous split-federated runtime).
 # ---------------------------------------------------------------------------
 
+def bench_scale(quick: bool) -> None:
+    from benchmarks.scale import bench_scale as _bench
+
+    res = _bench(ks=(100, 10_000) if quick else (100, 10_000, 1_000_000),
+                 events=8 if quick else 16)
+    for K, entry in res["K"].items():
+        for leg in ("dense", "delta"):
+            row = entry.get(leg, {})
+            if "rounds_per_sec" in row:
+                print(f"scale,K={K},{leg},{row['rounds_per_sec']},"
+                      f"{row['state_bytes']['snapshot_bytes']},"
+                      f"{row['seconds']}", flush=True)
+    for K, flat in res["delta_flatness"].items():
+        print(f"scale,K={K},delta_flatness,{flat},,", flush=True)
+
+
 def bench_async(quick: bool) -> None:
     from benchmarks.async_rounds import bench_async as _bench
 
@@ -244,6 +260,7 @@ TABLES = {
     "participation": bench_participation,
     "async": bench_async,
     "dispatch": bench_dispatch,
+    "scale": bench_scale,
     "roofline": bench_roofline,
 }
 
@@ -253,9 +270,11 @@ def smoke() -> None:
     tiny accuracy experiment through each sync execution mode (the
     ``api.ExecutionSpec`` names; ``async`` is covered by
     ``benchmarks.async_rounds --smoke``), one fused/bf16 run through the
-    dispatch knobs, the dispatch fusion regression guard, plus the
-    roofline reprint. The dispatch benches also have their own --smoke."""
+    dispatch knobs, the dispatch fusion regression guard, the
+    delta-vs-dense snapshot scale guard, plus the roofline reprint. The
+    dispatch/scale benches also have their own --smoke."""
     from benchmarks.dispatch import smoke_guard
+    from benchmarks.scale import smoke_guard as scale_smoke_guard
 
     print(HEADER, flush=True)
     for execution in ("subset", "masked", "sparse"):
@@ -275,6 +294,12 @@ def smoke() -> None:
     guard = smoke_guard()
     print("SMOKE,dispatch_guard,fused_speedup,"
           f"{guard['modes']['async']['fused_speedup']},,", flush=True)
+    # regression guard: O(cohort + ring) delta snapshots must be >= as
+    # fast as the dense (K, ...) scatter at K=1e4 (shared with
+    # `benchmarks.scale --smoke`)
+    sguard = scale_smoke_guard()
+    print("SMOKE,scale_guard,delta_speedup_vs_dense,"
+          f"{sguard['K']['10000']['delta_speedup_vs_dense']},,", flush=True)
     bench_roofline(True)
 
 

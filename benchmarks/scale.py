@@ -1,0 +1,203 @@
+"""Scale benchmark: the client axis from 1e2 to 1e6 simulated clients.
+
+The tentpole claim of the O(cohort + ring) async state
+(``ExecutionSpec.snapshots="delta"``): event throughput at a FIXED
+arrival cohort must be flat in the total client count K, because nothing
+per-event touches O(K) *param-sized* state — snapshots are reconstructed
+from a ``ring_size``-deep ring of recent global client halves
+(:func:`repro.fed.runtime.ring_lookup`), the cohort trains on
+cohort-sized batches, and only the (K,) version/finish-time scalars (8
+bytes/client) remain per-client. The dense baseline scatters a (K, ...)
+snapshot copy of the client half every event, so its rounds/s decays
+with K and its resident bytes grow as O(K x |w_c|).
+
+Both legs run the REAL runtime program (:func:`fed.make_async_runner`,
+``backend="logits"``, micro AlexNet split, lognormal delays,
+``emit_client_metrics=False``) on cohort-sized batches; per K the bench
+reports rounds/s (warm, median-of-``reps``) and the
+:func:`fed.async_state_bytes` accounting. Dense is skipped above
+``--dense-max-k`` (default 1e5) — at K=1e6 the dense snapshots alone
+would materialize ~K x |w_c| bytes, which is the point.
+
+Headline numbers land in ``BENCH_scale.json`` (README §Scaling the
+client axis); ``delta_flatness`` is rounds/s at the smallest K over
+rounds/s at K, per K (acceptance: within 1.3x through K=1e4).
+
+  PYTHONPATH=src python -m benchmarks.scale [--events 16] [--cohort 8]
+  PYTHONPATH=src python -m benchmarks.scale --smoke   # CI guard:
+      asserts delta rounds/s >= dense at the K=1e4 micro config
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import fed, optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.core.scala import alexnet_split_model
+from repro.core.split import stack_client_params
+from repro.models import alexnet as A
+
+KS = (100, 10_000, 1_000_000)
+DENSE_MAX_K = 100_000
+
+
+def _setup_model(width: float, num_classes: int = 10):
+    model = alexnet_split_model("s2", num_classes=num_classes)
+    full = A.init_params(jax.random.PRNGKey(0), num_classes=num_classes,
+                         width=width)
+    wc, ws = A.split_params(full, "s2")
+    return model, wc, ws
+
+
+def _cohort_batches(cohort: int, T: int, Bk: int, num_classes: int = 10):
+    """Cohort-sized round batches — (T, cohort, Bk, ...), never (T, K,
+    ...): the arrivals consume them directly, so batch materialization
+    is O(cohort) regardless of K."""
+    key = jax.random.PRNGKey(2)
+    return {"x": jax.random.normal(key, (T, cohort, Bk, 32, 32, 3),
+                                   jnp.float32),
+            "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                         (T, cohort, Bk), 0, num_classes),
+            "weights": jnp.ones((T, cohort, Bk), jnp.float32)}
+
+
+def _mk_leg(model, wc, ws, *, K: int, cohort: int, snapshots: str,
+            ring: int):
+    sc = ScalaConfig(lr=0.05)
+    dm = fed.make_delays("lognormal:1:1")
+    runner = jax.jit(fed.make_async_runner(
+        model, sc, backend="logits", delays=dm, cohort=cohort,
+        snapshots=snapshots, ring_size=ring, num_clients=K,
+        emit_client_metrics=False), donate_argnums=(0, 1))
+    slots = 1 if snapshots == "delta" else K
+    params = {"client": stack_client_params(wc, slots), "server": ws}
+    # the stacked client half and the afed snapshots alias the same
+    # broadcast buffers — donation needs every argument leaf distinct
+    state = jax.tree.map(jnp.copy,
+                         engine.init_train_state(params, optim.sgd()))
+    afed = fed.init_async_state(jax.random.PRNGKey(1), params["client"], dm,
+                                snapshots=snapshots, ring_size=ring,
+                                num_clients=K)
+    return runner, state, afed
+
+
+def _time_leg(runner, state, afed, batches, events: int, reps: int = 3):
+    """Warm the program, then time ``events`` async events (state
+    threads call to call, donated); median of ``reps``."""
+    state, afed, _ = runner(state, afed, batches)
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(events):
+            state, afed, _ = runner(state, afed, batches)
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+        times.append(time.perf_counter() - t0)
+    secs = sorted(times)[len(times) // 2]
+    return ({"seconds": round(secs, 4),
+             "rounds_per_sec": round(events / secs, 2)}, afed)
+
+
+def bench_scale(ks=KS, cohort: int = 8, T: int = 2, Bk: int = 4,
+                events: int = 16, width: float = 0.03125, ring: int = 64,
+                reps: int = 3, dense_max_k: int = DENSE_MAX_K):
+    """Returns the result dict (also printed/serialized by main)."""
+    model, wc, ws = _setup_model(width)
+    batches = _cohort_batches(cohort, T, Bk)
+    res = {
+        "bench": "scale",
+        "config": {"cohort": cohort, "local_iters": T,
+                   "per_client_batch": Bk, "events": events,
+                   "model": f"alexnet-w{width}", "ring_size": ring,
+                   "delays": "lognormal:1:1", "dense_max_k": dense_max_k},
+        "backend": jax.default_backend(),
+        "K": {},
+    }
+    for K in ks:
+        # a 1e6-client pop costs an O(K log K) lexsort per event —
+        # fewer timed events keep the sweep tractable without touching
+        # the per-event cost being measured
+        ev = events if K <= 100_000 else max(2, events // 8)
+        entry = {}
+        for snapshots in ("dense", "delta"):
+            if snapshots == "dense" and K > dense_max_k:
+                entry["dense"] = {"skipped":
+                                  f"K={K} dense snapshots would "
+                                  "materialize K x |w_c| bytes"}
+                continue
+            runner, state, afed = _mk_leg(model, wc, ws, K=K, cohort=cohort,
+                                          snapshots=snapshots, ring=ring)
+            timing, afed = _time_leg(runner, state, afed, batches, ev,
+                                     reps=reps)
+            timing["state_bytes"] = fed.async_state_bytes(afed)
+            entry[snapshots] = timing
+        if "rounds_per_sec" in entry.get("dense", {}):
+            entry["delta_speedup_vs_dense"] = round(
+                entry["delta"]["rounds_per_sec"]
+                / entry["dense"]["rounds_per_sec"], 3)
+        res["K"][str(K)] = entry
+    base = res["K"][str(ks[0])]["delta"]["rounds_per_sec"]
+    res["delta_flatness"] = {
+        str(K): round(base / res["K"][str(K)]["delta"]["rounds_per_sec"], 3)
+        for K in ks}
+    return res
+
+
+def smoke_guard():
+    """The delta-vs-dense regression guard shared by
+    ``benchmarks.scale --smoke`` and ``benchmarks.run --smoke``.
+
+    At the K=1e4 micro config the dense leg scatters a (K, ...) snapshot
+    copy per event while delta touches O(cohort + ring); asserts delta
+    rounds/s >= dense. Wall-clock ratios are noisy even at median-of-3,
+    so a sub-1.0 first measurement gets ONE re-measure before failing —
+    a real regression fails twice, a scheduler hiccup doesn't. Returns
+    the last measured result dict."""
+    res = None
+    for attempt in (0, 1):
+        res = bench_scale(ks=(10_000,), events=8, reps=3)
+        ratio = res["K"]["10000"]["delta_speedup_vs_dense"]
+        print(f"delta-vs-dense rounds/s ratio at K=1e4: {ratio}"
+              + (" (retry)" if attempt else ""))
+        if ratio >= 1.0:
+            break
+    assert ratio >= 1.0, (
+        f"delta snapshots regressed: {ratio}x the dense event rate at "
+        "K=1e4 (expected >= 1; reproduced twice)")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ks", type=int, nargs="+", default=list(KS))
+    ap.add_argument("--cohort", type=int, default=8)
+    ap.add_argument("--T", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--events", type=int, default=16)
+    ap.add_argument("--width", type=float, default=0.03125)
+    ap.add_argument("--ring", type=int, default=64)
+    ap.add_argument("--dense-max-k", type=int, default=DENSE_MAX_K)
+    ap.add_argument("--smoke", action="store_true",
+                    help="K=1e4 only, no json written; asserts the delta "
+                         "event rate is >= the dense one (CI guard)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        res = smoke_guard()
+    else:
+        res = bench_scale(ks=tuple(args.ks), cohort=args.cohort, T=args.T,
+                          Bk=args.batch, events=args.events,
+                          width=args.width, ring=args.ring,
+                          dense_max_k=args.dense_max_k)
+    from benchmarks.common import emit_bench
+    emit_bench(res, args.out, "BENCH_scale.json", args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -209,6 +209,15 @@ def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
     step = program.step
     if ex.rounds_per_call > 1:
         step = _fuse_rounds(step, ex.resolve_unroll())
+    if program.metadata.get("client_major"):
+        # the FL/SFL baselines consume client-major (C, T, ...) batches;
+        # the driver-facing layout stays iteration-major (T, C, ...), so
+        # transpose once per dispatch HERE — outside the fused-rounds
+        # scan — instead of re-transposing every round inside the chunk
+        inner_step = step
+        a0, a1 = (1, 2) if ex.rounds_per_call > 1 else (0, 1)
+        step = lambda st, b, s: inner_step(
+            st, jax.tree.map(lambda a: jnp.swapaxes(a, a0, a1), b), s)
     if jit:
         step = donated_jit(step, donate=ex.donate)
         init = program.init
@@ -249,11 +258,16 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
     server_opt, server_lr = _server_optimizer(spec)
     unroll = ex.resolve_unroll()
 
+    # delta snapshots carry the global client half over ONE param slot
+    # (the ring replaces the per-client stacking) — the logical client
+    # count stays `slots` everywhere else (versions, delays, batches)
+    delta = ex.mode == "async" and ex.snapshots == "delta"
+    param_slots = 1 if delta else slots
     if cfg.family == "cnn":
         model, wc, ws, _, _ = _cnn_split_init(spec)
-        params = {"client": _broadcast_slots(wc, slots), "server": ws}
+        params = {"client": _broadcast_slots(wc, param_slots), "server": ws}
     else:
-        model, params = text_split_init(spec, slots)
+        model, params = text_split_init(spec, param_slots)
 
     if ex.mode == "async":
         delays = ex.make_delays()
@@ -264,12 +278,17 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             staleness_decay=ex.staleness_decay, mix_rate=ex.mix_rate,
             aggregator=agg, server_optimizer=server_opt,
             server_lr=server_lr, opt_state_policy=fd.opt_state_policy,
-            unroll=unroll, precision=ex.precision)
+            unroll=unroll, precision=ex.precision,
+            snapshots=ex.snapshots, ring_size=ex.ring_size,
+            lr_scale=ex.lr_scale, num_clients=slots,
+            mesh=mesh, batch_specs=batch_specs)
 
         def init() -> ProgramState:
             afed = fed.init_async_state(
                 _fed_key(spec), params["client"], delays, aggregator=agg,
-                server_optimizer=server_opt, server_params=params["server"])
+                server_optimizer=server_opt, server_params=params["server"],
+                snapshots=ex.snapshots, ring_size=ex.ring_size,
+                num_clients=slots)
             return ProgramState(inner=engine.init_train_state(params, opt),
                                 fed=afed)
 
@@ -318,7 +337,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
     return RoundProgram(
         spec=spec, model=model, init=init, step=step, predict=predict,
         metadata=dict(method=spec.method, mode=ex.mode, slots=slots,
-                      backend=ex.backend, thread_fed=thread_fed))
+                      backend=ex.backend, thread_fed=thread_fed,
+                      snapshots=ex.snapshots))
 
 
 def _build_fl(spec: ExperimentSpec) -> RoundProgram:
@@ -354,9 +374,11 @@ def _build_fl(spec: ExperimentSpec) -> RoundProgram:
             fed=B.init_fl_state(spec.method, w0, slots,
                                 server_optimizer=server_opt))
 
+    # client-major step: batches arrive (C, T, ...) — the (T, C) -> (C, T)
+    # transpose is hoisted into build()'s dispatch wrapper, so a fused
+    # rounds_per_call chunk transposes ONCE instead of once per round
     def step(state: ProgramState, batches, sizes):
-        rb = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), batches)
-        w, fl_state = round_fn(state.inner, rb, sizes, state.fed)
+        w, fl_state = round_fn(state.inner, batches, sizes, state.fed)
         return ProgramState(inner=w, fed=fl_state), {}
 
     def predict(state: ProgramState, batch):
@@ -365,7 +387,7 @@ def _build_fl(spec: ExperimentSpec) -> RoundProgram:
     return RoundProgram(
         spec=spec, model=model, init=init, step=step, predict=predict,
         metadata=dict(method=spec.method, mode="subset", slots=slots,
-                      backend="logits", thread_fed=True))
+                      backend="logits", thread_fed=True, client_major=True))
 
 
 def _build_sfl(spec: ExperimentSpec) -> RoundProgram:
@@ -401,9 +423,10 @@ def _build_sfl(spec: ExperimentSpec) -> RoundProgram:
     def init() -> ProgramState:
         return ProgramState(inner=state0, fed=())
 
+    # client-major step — see _build_fl: the batch transpose is hoisted
+    # into build()'s dispatch wrapper
     def step(state: ProgramState, batches, sizes):
-        rb = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), batches)
-        return ProgramState(inner=round_fn(state.inner, rb, sizes),
+        return ProgramState(inner=round_fn(state.inner, batches, sizes),
                             fed=state.fed), {}
 
     def predict(state: ProgramState, batch):
@@ -415,4 +438,5 @@ def _build_sfl(spec: ExperimentSpec) -> RoundProgram:
     return RoundProgram(
         spec=spec, model=model, init=init, step=step, predict=predict,
         metadata=dict(method=spec.method, mode="subset", slots=slots,
-                      backend="logits", thread_fed=False))
+                      backend="logits", thread_fed=False,
+                      client_major=True))

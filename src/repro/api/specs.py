@@ -17,11 +17,12 @@ to_dict` / :meth:`ExperimentSpec.from_dict` JSON — the unit a sweep
 manifest stores and ``launch/train.py --config/--dump-config`` consume.
 
 Validation happens at *spec* time (:meth:`ExperimentSpec.validate`,
-called by :func:`repro.api.build`): incoherent combinations — e.g. the
-``lace_dp`` backend with sparse slots, a stateful aggregator without
-stable client identities, async execution with a participation
-scheduler — are rejected with a targeted error instead of failing deep
-inside jit.
+called by :func:`repro.api.build`): incoherent combinations — e.g. a
+stateful aggregator without stable client identities, async execution
+with a participation scheduler, delta snapshots with a stateful local
+optimizer, a non-shard-decomposable aggregator on the sharded
+``lace_dp`` sparse/async paths — are rejected with a targeted error
+instead of failing deep inside jit.
 """
 from __future__ import annotations
 
@@ -163,11 +164,14 @@ class FedSpec:
     strings (kept verbatim, so the round-trip is lossless):
 
     * aggregator — ``"fedavg"`` | ``"weighted"`` |
-      ``"bias_compensated[:GAMMA]"`` | ``"staleness_weighted[:DECAY]"``
+      ``"bias_compensated[:GAMMA]"`` | ``"staleness_weighted[:DECAY]"`` |
+      ``"hierarchical:EDGES[:EDGE[:TOP]]"``
       (:func:`repro.fed.make_aggregator`);
     * participation — ``None`` (full participation / legacy subset
-      sampling) or ``"full"`` | ``"uniform:FRAC"`` |
-      ``"dirichlet:FRAC[:ALPHA]"`` (:func:`repro.fed.make_participation`).
+      sampling) or ``"full"`` | ``"uniform:FRAC[:SHARDS]"`` |
+      ``"dirichlet:FRAC[:ALPHA]"`` (:func:`repro.fed.make_participation`;
+      SHARDS balances the subset over contiguous slot blocks — required
+      on the sharded ``lace_dp`` sparse path).
 
     ``opt_state_policy`` is the client optimizer state's round-boundary
     behavior (``carry | reset | average`` — see
@@ -254,6 +258,27 @@ class ExecutionSpec:
       place instead of copying the stacked client params + optimizer
       moments every dispatch. On by default; a donated state must not
       be reused after stepping it.
+
+    Client-axis scaling knobs (mode ``"async"``; benchmarked in
+    ``benchmarks/BENCH_scale.json``):
+
+    * ``snapshots`` — the :class:`repro.fed.runtime.AsyncFedState`
+      storage layout (:data:`repro.fed.SNAPSHOT_MODES`): ``"dense"``
+      materializes one client-half snapshot per slot (O(K) memory, the
+      legacy layout); ``"delta"`` stores a ``ring_size``-deep ring of
+      recent global client halves instead — O(cohort + ring) resident,
+      bit-identical to dense while every arrival's staleness stays
+      below ``ring_size`` (bounded-staleness eviction past it). Delta
+      needs a stateless local optimizer (sgd) or
+      ``fed.opt_state_policy="reset"``.
+    * ``ring_size`` — the delta ring depth (max reconstructable
+      staleness).
+    * ``lr_scale`` — per-arrival lr scaling
+      (:data:`repro.fed.LR_SCALES`): ``"cohort"`` multiplies the lr
+      schedule by ``cohort / num_clients`` so per-event aggregate
+      movement matches the sync round's per-participant scale;
+      ``"none"`` (default) is the historical behavior. At
+      ``cohort == num_clients`` the two are bit-identical.
     """
 
     mode: str = "masked"
@@ -267,10 +292,13 @@ class ExecutionSpec:
     precision: str = "f32"
     rounds_per_call: int = 1
     donate: bool = True
+    snapshots: str = "dense"
+    ring_size: int = 64
+    lr_scale: str = "none"
 
     def __post_init__(self):
         from repro.core.engine import BACKENDS, PRECISIONS
-        from repro.fed import make_delays
+        from repro.fed import LR_SCALES, SNAPSHOT_MODES, make_delays
 
         if self.mode not in EXECUTION_MODES:
             raise ValueError(f"unknown execution mode {self.mode!r}; "
@@ -287,6 +315,14 @@ class ExecutionSpec:
         make_delays(self.delay)                      # structural validation
         if self.cohort < 0:
             raise ValueError(f"cohort must be >= 0, got {self.cohort}")
+        if self.snapshots not in SNAPSHOT_MODES:
+            raise ValueError(f"unknown snapshots mode {self.snapshots!r}; "
+                             f"expected {SNAPSHOT_MODES}")
+        if self.ring_size < 1:
+            raise ValueError(f"ring_size must be >= 1, got {self.ring_size}")
+        if self.lr_scale not in LR_SCALES:
+            raise ValueError(f"unknown lr_scale {self.lr_scale!r}; "
+                             f"expected {LR_SCALES}")
 
     @property
     def in_program(self) -> bool:
@@ -422,11 +458,24 @@ class ExperimentSpec:
 
         # --- backend coherence ---
         if ex.backend == "lace_dp" and ex.mode in ("sparse", "async"):
-            raise ValueError(
-                f"backend 'lace_dp' is incompatible with mode {ex.mode!r}: "
-                "the manual-SPMD step shards the client axis over the mesh, "
-                "so the sparse-slot gather / async runtime cannot cross it "
-                "(ROADMAP open item)")
+            # sparse/async run whole-event/whole-round inside one
+            # shard_map: the aggregation must decompose per client shard
+            # (local edge fold + psum), which rules out stateful /
+            # prior-dependent aggregators and the cross-slot "average"
+            # opt-state policy. Mesh-dependent divisibility (cohort,
+            # subset size, scheduler shards vs the client shard count)
+            # is checked at build time when the mesh is known.
+            if agg.shard_local is None or agg.stateful or agg.needs_priors:
+                raise ValueError(
+                    f"backend 'lace_dp' with mode {ex.mode!r} needs a "
+                    "stateless, prior-free, shard-decomposable aggregator "
+                    "(fedavg / weighted / hierarchical); got "
+                    f"{agg.name!r}")
+            if fd.opt_state_policy == "average":
+                raise ValueError(
+                    "backend 'lace_dp' with mode 'sparse'/'async' does not "
+                    "support opt_state_policy 'average'; use 'carry' or "
+                    "'reset'")
         if ex.backend != "logits" and cfg.family == "cnn":
             raise ValueError(
                 f"backend {ex.backend!r} needs a trunk/head split; the CNN "
@@ -467,6 +516,24 @@ class ExperimentSpec:
         if ex.mode == "async" and ex.cohort > sc.num_clients:
             raise ValueError(f"cohort {ex.cohort} exceeds the "
                              f"{sc.num_clients} client slots")
+        if ex.snapshots == "delta":
+            if ex.mode != "async":
+                raise ValueError(
+                    "snapshots='delta' is an async-runtime storage layout; "
+                    f"mode {ex.mode!r} has no per-client snapshots")
+            if fd.opt_state_policy == "average":
+                raise ValueError(
+                    "snapshots='delta' stores no per-client optimizer "
+                    "state to average; use opt_state_policy 'reset' (or "
+                    "'carry' with a stateless optimizer)")
+            if fd.opt_state_policy == "carry" and self.optim.name != "sgd":
+                raise ValueError(
+                    f"snapshots='delta' cannot carry {self.optim.name!r} "
+                    "per-client moments (no per-client state is stored); "
+                    "use optim 'sgd' or fed.opt_state_policy='reset'")
+        if ex.lr_scale != "none" and ex.mode != "async":
+            raise ValueError("lr_scale applies to mode 'async' only (the "
+                             "cohort/K factor is an event-schedule knob)")
 
         # --- baselines ---
         if self.method not in SCALA_METHODS:

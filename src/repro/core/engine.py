@@ -547,6 +547,18 @@ def _dp_specs(mesh, axes: MeshAxes, tree):
             "server": jax.tree.map(lambda _: P(), tree["server"])}
 
 
+def client_shard_count(mesh) -> int:
+    """How many ways the stacked client axis splits on this mesh — the
+    product of the client mesh-axis sizes (:func:`mesh_axes`). 1 on a
+    mesh with no client axes (pure tensor parallelism)."""
+    axes = mesh_axes(mesh)
+    sizes = dict(mesh.shape)
+    n = 1
+    for a in axes.client:
+        n *= sizes[a]
+    return n
+
+
 def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
                backend: str = "logits", lr: Optional[float] = None,
                ce_chunk: Optional[int] = None, mesh=None, batch_specs=None,
@@ -811,8 +823,15 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     phase; the one divergence is stateful-optimizer moments of *absent*
     clients under ``opt_state_policy="carry"`` — the masked round ticks
     them with zero gradients (momentum keeps decaying), the gathered
-    round freezes them. Not available on the ``lace_dp`` backend (the
-    client axis is sharded over the mesh there).
+    round freezes them. On the ``lace_dp`` backend the gather happens
+    *in-shard*: the whole round runs inside one ``shard_map`` and each
+    shard of the client mesh axes packs its own participating slots into
+    a dense local ``[K_active / n_shards]`` axis, with the FL phase as a
+    local (edge) weighted partial + one psum (server fold). Requires a
+    shards-balanced scheduler (``uniform:FRAC:SHARDS`` with SHARDS a
+    multiple of the client shard count) and a stateless prior-free
+    aggregator exposing ``shard_local`` (fedavg / weighted /
+    hierarchical).
 
     Server-side FedOpt (``server_optimizer=``): after the round, the
     *server* half's round delta ``w_s_start - w_s_end`` is treated as a
@@ -853,10 +872,6 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
             raise ValueError("slot_gather needs a participation scheduler "
                              "(the static K_active comes from its "
                              "subset_size)")
-        if backend == "lace_dp":
-            raise ValueError("slot_gather is not supported on the 'lace_dp' "
-                             "backend (the client axis is sharded over the "
-                             "mesh)")
         if participation.subset_size is None:
             raise ValueError(
                 f"slot_gather needs a scheduler with a static subset_size; "
@@ -869,10 +884,108 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 if participation is not None else None)
     do_gather = (slot_gather and participation is not None
                  and k_active < participation.num_clients)
+    dp_gather = do_gather and backend == "lace_dp"
+    if dp_gather:
+        # in-shard gather: each shard of the client mesh axes packs ITS
+        # OWN participating slots into a dense local [K_active/n] axis,
+        # inside one whole-round shard_map. Needs a shards-balanced
+        # scheduler so the local subset size is static and equal.
+        if mesh is None or batch_specs is None:
+            raise ValueError("backend 'lace_dp' needs mesh and batch_specs")
+        n_shards = client_shard_count(mesh)
+        if getattr(participation, "shards", 1) % n_shards:
+            raise ValueError(
+                f"lace_dp slot_gather needs a shards-balanced participation "
+                f"scheduler: scheduler shards "
+                f"{getattr(participation, 'shards', 1)} must be a multiple "
+                f"of the {n_shards} client mesh shards (use "
+                f"'uniform:FRAC:{n_shards}')")
+        if k_active % n_shards or participation.num_clients % n_shards:
+            raise ValueError(
+                f"subset size {k_active} and client count "
+                f"{participation.num_clients} must divide over the "
+                f"{n_shards} client shards")
+        if agg.shard_local is None or agg.stateful or agg.needs_priors:
+            raise ValueError(
+                f"aggregator {agg.name!r} cannot run inside the sharded "
+                "client axis; lace_dp slot_gather needs a stateless, "
+                "prior-free, shard-decomposable aggregator (fedavg / "
+                "weighted / hierarchical)")
+        if opt_state_policy == "average":
+            raise ValueError("opt_state_policy 'average' is not supported "
+                             "with lace_dp slot_gather; use 'carry' or "
+                             "'reset'")
     step = make_split_step(model, scala, backend=backend, optimizer=opt,
                            schedule=schedule, ce_chunk=ce_chunk,
                            mesh=mesh, batch_specs=batch_specs,
                            precision=precision)
+
+    if dp_gather:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.logical import round_specs as _round_specs
+
+        axes = mesh_axes(mesh)
+        k_l = k_active // n_shards
+        sched = (schedule if schedule is not None
+                 else schedules.constant(scala.lr))
+        rb_specs = _round_specs(batch_specs)
+        cspec = P(axes.client or None)
+        m_specs = {"loss_server": P(), "loss_client": P(), "aux": P()}
+
+        def dp_round(state: TrainState, round_batches, mask, sizes):
+            s_specs = TrainState(
+                params=_dp_specs(mesh, axes, state.params),
+                opt_state=_dp_specs(mesh, axes, state.opt_state),
+                step=P())
+
+            def body(st, rb, mask_l, sizes_l):
+                idx = slot_gather_indices(mask_l, k_l)
+                sub = _gather_clients(st, idx)
+                sub_b = jax.tree.map(lambda a: jnp.take(a, idx, axis=1), rb)
+
+                def step_body(s, b):
+                    grads, mets = split_step_grads(
+                        model, s.params, b, scala, backend="lace_dp",
+                        ce_chunk=ce_chunk, axes=axes, precision=precision)
+                    return _apply_updates(opt, s, grads,
+                                          sched(s.step)), mets
+
+                sub, ms = jax.lax.scan(step_body, sub, sub_b, unroll=unroll)
+                st = _scatter_clients(st, sub, idx)
+                metrics = jax.tree.map(lambda a: a[-1], ms)
+                if aggregate:
+                    # two-tier FL phase: local weighted partial per shard
+                    # (the edge fold), one psum for the server fold
+                    w_l = agg.shard_local(mask_l, sizes_l, axes.client,
+                                          n_shards)
+                    raw = w_l * mask_l
+                    denom = raw.sum()
+                    if axes.client:
+                        denom = jax.lax.psum(denom, axes.client)
+                    w_n = raw / jnp.maximum(denom, 1e-8)
+                    part = weighted_mean(st.params["client"], w_n)
+                    avg = (jax.tree.map(
+                        lambda a: jax.lax.psum(a, axes.client), part)
+                        if axes.client else part)
+                    K_l = jax.tree.leaves(
+                        st.params["client"])[0].shape[0]
+                    params = {"client": stack_client_params(avg, K_l),
+                              "server": st.params["server"]}
+                    opt_state = st.opt_state
+                    if opt_state_policy == "reset":
+                        opt_state = {
+                            "client": jax.vmap(opt.init)(params["client"]),
+                            "server": st.opt_state["server"]}
+                    st = TrainState(params=params, opt_state=opt_state,
+                                    step=st.step)
+                return st, metrics
+
+            fn = compat.shard_map(
+                body, mesh=mesh,
+                in_specs=(s_specs, rb_specs, cspec, cspec),
+                out_specs=(s_specs, m_specs), check_vma=False)
+            return fn(state, round_batches, mask, sizes)
 
     def round_fn(state: TrainState, round_batches, data_sizes=None,
                  fed_state=None):
@@ -901,7 +1014,12 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
             mask, sched_state = participation.sample(sched_state)
         else:
             mask = None
-        if do_gather:
+        if dp_gather:
+            sizes = (data_sizes if data_sizes is not None
+                     else jnp.ones((participation.num_clients,),
+                                   jnp.float32))
+            state, metrics = dp_round(state, round_batches, mask, sizes)
+        elif do_gather:
             idx = slot_gather_indices(mask, k_active)
             sub = _gather_clients(state, idx)
             sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
@@ -915,9 +1033,10 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 else step
             state, ms = jax.lax.scan(body, state, round_batches,
                                      unroll=unroll)
-        metrics = jax.tree.map(lambda a: a[-1], ms)
+        if not dp_gather:
+            metrics = jax.tree.map(lambda a: a[-1], ms)
 
-        if aggregate:
+        if aggregate and not dp_gather:
             C = jax.tree.leaves(state.params["client"])[0].shape[0]
             p_k = p_global = None
             if agg.needs_priors:

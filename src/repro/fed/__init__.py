@@ -25,6 +25,7 @@ from repro.fed.aggregators import (  # noqa: F401
     aggregation_priors,
     bias_compensated,
     fedavg,
+    hierarchical,
     make_aggregator,
     staleness_weighted,
     weighted,
@@ -43,10 +44,14 @@ from repro.fed.participation import (  # noqa: F401
     uniform,
 )
 from repro.fed.runtime import (  # noqa: F401
+    LR_SCALES,
+    SNAPSHOT_MODES,
     AsyncFedState,
     arrival_cohort,
+    async_state_bytes,
     init_async_state,
     make_async_runner,
+    ring_lookup,
 )
 
 

@@ -22,6 +22,9 @@ an :class:`Aggregator` the round runner composes with:
   :func:`staleness_weighted`    ``mask_k * n_k * decay^age_k``  (GAS-style:
                                 age_k = rounds since client k last
                                 participated, tracked in aggregator state)
+  :func:`hierarchical`          ``within_edge_k * top_e`` (two-tier: edges
+                                fold their own cohort first, the server
+                                folds the edge results)
   ============================  ============================================
 
 All weights go through the mask-safe
@@ -39,12 +42,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.label_stats import client_and_concat_priors
 from repro.core.split import normalize_client_weights, weighted_mean
 
-AGGREGATORS = ("fedavg", "weighted", "bias_compensated", "staleness_weighted")
+AGGREGATORS = ("fedavg", "weighted", "bias_compensated", "staleness_weighted",
+               "hierarchical")
 
 
 def aggregation_priors(num_classes: int, labels, weights=None,
@@ -117,6 +122,14 @@ class Aggregator:
     client_weights: Callable[[AggContext, Any], Tuple[Any, Any]]
     needs_priors: bool = False
     stateful: bool = False
+    #: shard-decomposable weight kernel for the manual-SPMD (shard_map)
+    #: execution paths: ``shard_local(mask_l, sizes_l, client_axes,
+    #: n_shards=1) -> (C_l,) raw weights`` over one shard's *local* slot
+    #: block, such that the caller's global renormalization of
+    #: ``raw * decay * mask`` (psum over ``client_axes``) reproduces the
+    #: flat ``client_weights`` path up to float association. None means
+    #: the aggregator cannot run inside a sharded client axis.
+    shard_local: Optional[Callable] = None
 
     def aggregate(self, stacked_params, ctx: AggContext, state=()):
         """(stacked (C,...) client params, ctx, state) ->
@@ -137,8 +150,12 @@ def fedavg() -> Aggregator:
         w = jnp.ones((ctx.C,), jnp.float32)
         return normalize_client_weights(w, ctx.mask), state
 
+    def shard_local(mask_l, sizes_l, client_axes, n_shards: int = 1):
+        return jnp.ones_like(mask_l, dtype=jnp.float32)
+
     return Aggregator(name="fedavg", init=_stateless_init,
-                      client_weights=client_weights)
+                      client_weights=client_weights,
+                      shard_local=shard_local)
 
 
 def weighted() -> Aggregator:
@@ -149,8 +166,12 @@ def weighted() -> Aggregator:
         w = ctx.base_weights()
         return normalize_client_weights(w, ctx.mask), state
 
+    def shard_local(mask_l, sizes_l, client_axes, n_shards: int = 1):
+        return sizes_l.astype(jnp.float32)
+
     return Aggregator(name="weighted", init=_stateless_init,
-                      client_weights=client_weights)
+                      client_weights=client_weights,
+                      shard_local=shard_local)
 
 
 def bias_compensated(gamma: float = 2.0) -> Aggregator:
@@ -212,12 +233,95 @@ def staleness_weighted(decay: float = 0.5) -> Aggregator:
                       client_weights=client_weights, stateful=True)
 
 
+def hierarchical(edges: int, edge: str = "weighted",
+                 top: str = "weighted") -> Aggregator:
+    """Two-tier (edge -> server) aggregation over contiguous slot blocks.
+
+    The C static slots split into ``edges`` contiguous blocks ("edge
+    aggregators" — a geo region, a silo, or one shard of the sharded
+    client mesh axis). Each edge folds its own participating clients
+    first with the ``edge`` rule (``"weighted"``: data-size proportional,
+    eq. 10 within the edge; ``"fedavg"``: uniform), then the server folds
+    the edge results with the ``top`` rule (``"weighted"``: by the edge's
+    participating data mass; ``"fedavg"``: uniform over non-empty edges).
+    The composition is expressed as one flat (C,) weight vector
+
+        w_k  =  within_edge(k) * top(edge_of(k)),
+
+    so the engine/runtime consume it like any other aggregator and the
+    model average is a single :func:`weighted_mean` — the two-tier
+    *communication* shape materializes on the sharded backends, where
+    ``shard_local`` computes each shard's edges locally and only the
+    O(params) edge partials cross shards (a psum). Priors / logit
+    adjustments are orthogonal: they are recomputed per participating
+    subset by the round program, not per edge.
+
+    ``edge="weighted", top="weighted"`` is exactly flat :func:`weighted`
+    (w_k ∝ mask_k n_k — test-enforced); differing tiers change the
+    geometry, e.g. ``top="fedavg"`` gives every region equal say
+    regardless of its data mass. An edge with no participants gets zero
+    weight; a round with no participants at all falls back to the flat
+    mask-safe normalization.
+
+    C must divide by ``edges``; on a sharded client axis ``edges`` must
+    divide by the shard count so every edge lives whole on one shard.
+    """
+    if edge not in ("fedavg", "weighted") or top not in ("fedavg",
+                                                         "weighted"):
+        raise ValueError(f"hierarchical tiers must be 'fedavg' or "
+                         f"'weighted', got edge={edge!r} top={top!r}")
+    if edges < 1:
+        raise ValueError(f"edges must be >= 1, got {edges}")
+
+    def _tiers(mask, sizes, n_edges: int):
+        """-> (within-edge weights (C,), edge masses (E,))."""
+        C = mask.shape[0]
+        if C % n_edges:
+            raise ValueError(f"{C} client slots do not divide into "
+                             f"{n_edges} edges")
+        base = sizes if edge == "weighted" else jnp.ones_like(sizes)
+        raw = (base * mask).reshape(n_edges, C // n_edges)
+        S = raw.sum(axis=1)
+        within = (raw / jnp.maximum(S, 1e-8)[:, None]).reshape(C)
+        T = jnp.where(S > 0, S if top == "weighted" else 1.0, 0.0)
+        return within, T
+
+    def client_weights(ctx: AggContext, state):
+        C = ctx.C
+        mask = (ctx.mask.astype(jnp.float32) if ctx.mask is not None
+                else jnp.ones((C,), jnp.float32))
+        within, T = _tiers(mask, ctx.base_weights(), edges)
+        tot = T.sum()
+        w = within * jnp.repeat(T / jnp.maximum(tot, 1e-8), C // edges)
+        fallback = normalize_client_weights(jnp.ones((C,), jnp.float32),
+                                            ctx.mask)
+        return jnp.where(tot > 0, w, fallback), state
+
+    def shard_local(mask_l, sizes_l, client_axes, n_shards: int = 1):
+        if edges % n_shards:
+            raise ValueError(f"hierarchical edges={edges} must divide over "
+                             f"the {n_shards} client shards")
+        edges_l = edges // n_shards
+        within, T = _tiers(mask_l.astype(jnp.float32),
+                           sizes_l.astype(jnp.float32), edges_l)
+        tot = T.sum()
+        if client_axes:
+            tot = jax.lax.psum(tot, client_axes)
+        C_l = mask_l.shape[0]
+        return within * jnp.repeat(T / jnp.maximum(tot, 1e-8),
+                                   C_l // edges_l)
+
+    return Aggregator(name="hierarchical", init=_stateless_init,
+                      client_weights=client_weights,
+                      shard_local=shard_local)
+
+
 def make_aggregator(spec: str, **kw) -> Aggregator:
     """Registry: build an aggregator from a compact spec string.
 
     ``"fedavg"`` | ``"weighted"`` | ``"bias_compensated[:GAMMA]"`` |
-    ``"staleness_weighted[:DECAY]"`` (keyword overrides still accepted
-    for the parameterized aggregators).
+    ``"staleness_weighted[:DECAY]"`` | ``"hierarchical:EDGES[:EDGE[:TOP]]"``
+    (keyword overrides still accepted for the parameterized aggregators).
     """
     parts = spec.split(":")
     name, args = parts[0], parts[1:]
@@ -234,6 +338,13 @@ def make_aggregator(spec: str, **kw) -> Aggregator:
                              "'bias_compensated[:GAMMA]'")
         gamma = float(args[0]) if args else kw.get("gamma", 2.0)
         return bias_compensated(gamma=gamma)
+    if name == "hierarchical":
+        if not args or len(args) > 3:
+            raise ValueError("hierarchical spec is "
+                             "'hierarchical:EDGES[:EDGE[:TOP]]'")
+        return hierarchical(edges=int(args[0]),
+                            edge=args[1] if len(args) > 1 else "weighted",
+                            top=args[2] if len(args) > 2 else "weighted")
     if name in ("staleness_weighted", "staleness"):
         if len(args) > 1:
             raise ValueError("staleness_weighted spec is "

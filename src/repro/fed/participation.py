@@ -55,6 +55,12 @@ class ParticipationScheduler:
     sample: Callable[[Any], Tuple[Any, Any]]
     stateful: bool = True
     subset_size: Optional[int] = None
+    #: per-round ones are balanced over this many contiguous slot blocks
+    #: (``subset_size / shards`` per block). 1 = unconstrained sampling.
+    #: The sharded (lace_dp) sparse round requires a scheduler whose
+    #: ``shards`` is a multiple of the client-axis shard count, so every
+    #: shard's local gather has the same static size.
+    shards: int = 1
 
 
 def _subset_size(num_clients: int, frac: float) -> int:
@@ -76,21 +82,49 @@ def full(num_clients: int) -> ParticipationScheduler:
                                   subset_size=num_clients)
 
 
-def uniform(num_clients: int, frac: float) -> ParticipationScheduler:
-    """Uniform-without-replacement sampling of round(frac*C) clients."""
+def uniform(num_clients: int, frac: float,
+            shards: int = 1) -> ParticipationScheduler:
+    """Uniform-without-replacement sampling of round(frac*C) clients.
+
+    ``shards > 1`` balances the subset over ``shards`` contiguous slot
+    blocks: ``m / shards`` clients sampled uniformly within each block of
+    ``C / shards`` slots (m is rounded up to a multiple of ``shards``).
+    This is the sharded-client-axis sampler — each mesh shard owning a
+    block gathers exactly its share of the subset, so the in-shard
+    sparse gather has a static local size — and doubles as a per-region
+    quota (every edge of a matching :func:`repro.fed.aggregators.hierarchical`
+    setup contributes equally many participants).
+    """
+    if shards < 1 or num_clients % shards:
+        raise ValueError(f"{num_clients} clients do not divide into "
+                         f"{shards} shards")
     m = _subset_size(num_clients, frac)
+    m = min(num_clients, ((m + shards - 1) // shards) * shards)
+    block = num_clients // shards
+    m_l = m // shards
 
     def init(key):
         return {"key": key}
 
     def sample(state):
         key, sub = jax.random.split(state["key"])
-        perm = jax.random.permutation(sub, num_clients)
-        mask = jnp.zeros((num_clients,), jnp.float32).at[perm[:m]].set(1.0)
+        if shards == 1:
+            perm = jax.random.permutation(sub, num_clients)
+            mask = jnp.zeros((num_clients,),
+                             jnp.float32).at[perm[:m]].set(1.0)
+        else:
+            perms = jax.vmap(
+                lambda k: jax.random.permutation(k, block))(
+                    jax.random.split(sub, shards))
+            picks = (perms[:, :m_l]
+                     + (jnp.arange(shards) * block)[:, None]).reshape(-1)
+            mask = jnp.zeros((num_clients,),
+                             jnp.float32).at[picks].set(1.0)
         return mask, {"key": key}
 
     return ParticipationScheduler(name="uniform", num_clients=num_clients,
-                                  init=init, sample=sample, subset_size=m)
+                                  init=init, sample=sample, subset_size=m,
+                                  shards=shards)
 
 
 def dirichlet(num_clients: int, frac: float,
@@ -119,16 +153,18 @@ def dirichlet(num_clients: int, frac: float,
 def make_participation(spec: str, num_clients: int) -> ParticipationScheduler:
     """Parse a launcher-flag spec into a scheduler.
 
-    ``"full"`` | ``"uniform:FRAC"`` | ``"dirichlet:FRAC[:ALPHA]"``.
+    ``"full"`` | ``"uniform:FRAC[:SHARDS]"`` |
+    ``"dirichlet:FRAC[:ALPHA]"``.
     """
     parts = spec.split(":")
     name = parts[0]
     if name == "full":
         return full(num_clients)
     if name == "uniform":
-        if len(parts) != 2:
-            raise ValueError("uniform spec is 'uniform:FRAC'")
-        return uniform(num_clients, float(parts[1]))
+        if len(parts) not in (2, 3):
+            raise ValueError("uniform spec is 'uniform:FRAC[:SHARDS]'")
+        shards = int(parts[2]) if len(parts) == 3 else 1
+        return uniform(num_clients, float(parts[1]), shards=shards)
     if name == "dirichlet":
         if len(parts) not in (2, 3):
             raise ValueError("dirichlet spec is 'dirichlet:FRAC[:ALPHA]'")

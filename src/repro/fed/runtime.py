@@ -39,6 +39,29 @@ event with staleness 0, the cohort average is the full FedAvg, and
 synchronous round runner (test-enforced at fp32 tolerance in
 ``tests/test_async.py``).
 
+Snapshot storage (``snapshots=``):
+
+* ``"dense"`` — the legacy layout: ``client_params`` materializes one
+  client-half snapshot *per slot*, O(K x |w_c|) memory.
+* ``"delta"`` — the million-client layout. The state invariant below
+  says ``client_params[k]`` IS the global client half as of
+  ``version[k]``: the per-client delta against the tagged server
+  version is **identically zero**, so nothing per-client needs storing.
+  A fixed-size **ring** of the ``ring_size`` most recent global client
+  halves (slot ``v % ring_size`` holds global@v) plus the existing
+  (K,) ``version`` tags reconstruct any snapshot on gather:
+  ``ring[max(version_k, server_version - ring_size + 1) % ring_size]``.
+  Resident snapshot memory is O(ring_size x |w_c| + cohort) — flat in
+  K — and the path is **bit-identical** to dense storage while every
+  arrival's staleness is < ``ring_size`` (test-enforced). A snapshot
+  whose base version aged out of the ring is clamped to the oldest
+  retained version — bounded-staleness eviction: the straggler trains
+  from a slightly newer global model than it was dispatched with,
+  which only *reduces* its effective staleness. Per-client optimizer
+  state is not stored either, so ``"delta"`` requires a stateless
+  local optimizer (plain SGD — the paper's setting) or
+  ``opt_state_policy="reset"``.
+
 :class:`AsyncFedState` invariants (maintained by :func:`init_async_state`
 and every runner call; rely on them, don't re-derive):
 
@@ -46,13 +69,25 @@ and every runner call; rely on them, don't re-derive):
   increments by exactly 1 per event.
 * ``client_params[k]`` is the global client half as of ``version[k]`` —
   slots with ``version[k] == server_version`` hold the *current* global
-  model.
+  model. (``snapshots="delta"`` stores this redundancy-free: the ring
+  holds one entry per recent version instead of one per client.)
 * ``finish_time[k] >= now`` for busy clients; arrivals satisfy
   ``finish_time[k] <= new now`` at the event that pops them and are
   re-armed strictly into the future (for nonzero delays).
 * ``server_version - version`` is the per-client staleness age — under a
   full-barrier schedule it reproduces the sync
   :func:`repro.fed.aggregators.staleness_weighted` age bookkeeping.
+
+The manual-SPMD backend (``backend="lace_dp"``, pass ``mesh`` and
+``batch_specs``) runs the whole event inside one ``shard_map``: each
+shard of the client mesh axes pops ``cohort / n_shards`` of *its own*
+earliest finishers (a balanced two-tier schedule — the shard is the
+"edge", the psum across shards is the server fold), gathers them from
+its local slots (or the replicated ring), and the cohort-weight
+normalization / cohort average / event clock are combined with psums.
+The per-shard pop is the one scheduling difference vs the single-program
+runner: arrivals are balanced per shard rather than popped globally
+(with zero delays and ``cohort=K`` the two schedules coincide).
 """
 from __future__ import annotations
 
@@ -61,6 +96,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ScalaConfig
 from repro.core import engine
@@ -68,7 +104,16 @@ from repro.core.split import (normalize_client_weights, stack_client_params,
                               weighted_mean)
 from repro.fed import aggregators as _agg
 from repro.fed.delays import DelayModel
-from repro.optim import optimizers
+from repro.optim import optimizers, schedules
+
+#: snapshot storage layouts for :class:`AsyncFedState`.
+SNAPSHOT_MODES = ("dense", "delta")
+
+#: per-arrival lr scaling policies (see :func:`make_async_runner`).
+LR_SCALES = ("none", "cohort")
+
+#: ring_versions tag for a slot that has never been written.
+_NO_VERSION = jnp.int32(-(2 ** 30))
 
 
 @dataclass(frozen=True)
@@ -76,7 +121,8 @@ class AsyncFedState:
     """Per-client dispatch state threaded through async events.
 
     client_params: (K, ...) stacked per-client snapshots of the global
-    client half (what each client is training from);
+    client half (what each client is training from) — ``()`` under
+    ``snapshots="delta"``, where the ring replaces it;
     version: (K,) int32 server version each snapshot was taken at;
     server_version: () int32 global version (events applied so far);
     finish_time: (K,) float32 simulated completion time per client;
@@ -84,7 +130,11 @@ class AsyncFedState:
     key: PRNG key driving delay sampling;
     agg_state: aggregator carry (e.g. staleness ages) — usually () since
     the runtime tracks ages itself via ``version``;
-    server_opt: server-side FedOpt optimizer state (or ()).
+    server_opt: server-side FedOpt optimizer state (or ());
+    ring: (ring_size, ...) recent global client halves, slot
+    ``v % ring_size`` holding global@v (``snapshots="delta"`` only);
+    ring_versions: (ring_size,) int32 version tag per ring slot
+    (un-written slots carry a large negative sentinel).
     """
 
     client_params: Any
@@ -95,35 +145,68 @@ class AsyncFedState:
     key: Any
     agg_state: Any = ()
     server_opt: Any = ()
+    ring: Any = ()
+    ring_versions: Any = ()
 
 
 jax.tree_util.register_dataclass(
     AsyncFedState,
     data_fields=("client_params", "version", "server_version", "finish_time",
-                 "now", "key", "agg_state", "server_opt"),
+                 "now", "key", "agg_state", "server_opt", "ring",
+                 "ring_versions"),
     meta_fields=())
 
 
 def init_async_state(key, client_params, delays: DelayModel, *,
                      aggregator=None,
                      server_optimizer: Optional[optimizers.Optimizer] = None,
-                     server_params=None) -> AsyncFedState:
+                     server_params=None,
+                     snapshots: str = "dense",
+                     ring_size: int = 64,
+                     num_clients: Optional[int] = None) -> AsyncFedState:
     """Dispatch all K clients at version 0.
 
-    ``client_params`` is the stacked (K, ...) client half (every slot
-    holds the same init — :func:`repro.core.split.stack_client_params`);
-    each client's first completion delay is sampled immediately, so the
-    first event pops the cohort of earliest finishers. Pass the same
+    ``client_params`` is the stacked client half (every slot holds the
+    same init — :func:`repro.core.split.stack_client_params`); each
+    client's first completion delay is sampled immediately, so the first
+    event pops the cohort of earliest finishers. Pass the same
     ``aggregator`` / ``server_optimizer`` the runner was built with so
     their state is initialized to matching shapes.
+
+    With ``snapshots="delta"`` the per-client snapshots are NOT
+    materialized: pass the global client half stacked over a single slot
+    (or any stacked layout — row 0 is taken) plus ``num_clients=K``, and
+    the state carries a ``ring_size``-deep ring of recent global client
+    halves instead — O(ring_size), not O(K). ``ring_size`` bounds the
+    reconstructable staleness (see the module docstring's eviction
+    semantics).
     """
-    K = jax.tree.leaves(client_params)[0].shape[0]
+    if snapshots not in SNAPSHOT_MODES:
+        raise ValueError(f"unknown snapshots mode {snapshots!r}; expected "
+                         f"{SNAPSHOT_MODES}")
+    lead = jax.tree.leaves(client_params)[0].shape[0]
+    K = lead if num_clients is None else num_clients
+    if snapshots == "dense" and num_clients is not None and lead != K:
+        raise ValueError(f"dense snapshots need client_params stacked over "
+                         f"all {K} clients, got {lead} slots")
     k_delay, k_carry = jax.random.split(jnp.asarray(key))
     if server_optimizer is not None and server_params is None:
         raise ValueError("init_async_state needs server_params when a "
                          "server_optimizer is given")
+    if snapshots == "delta":
+        if ring_size < 1:
+            raise ValueError(f"ring_size must be >= 1, got {ring_size}")
+        global_c = jax.tree.map(lambda a: a[0], client_params)
+        snap = ()
+        ring = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (ring_size,) + g.shape),
+            global_c)
+        ring_versions = jnp.full((ring_size,), _NO_VERSION,
+                                 jnp.int32).at[0].set(0)
+    else:
+        snap, ring, ring_versions = client_params, (), ()
     return AsyncFedState(
-        client_params=client_params,
+        client_params=snap,
         version=jnp.zeros((K,), jnp.int32),
         server_version=jnp.zeros((), jnp.int32),
         finish_time=delays.sample(k_delay, (K,)).astype(jnp.float32),
@@ -131,7 +214,9 @@ def init_async_state(key, client_params, delays: DelayModel, *,
         key=k_carry,
         agg_state=aggregator.init(K) if aggregator is not None else (),
         server_opt=(server_optimizer.init(server_params)
-                    if server_optimizer is not None else ()))
+                    if server_optimizer is not None else ()),
+        ring=ring,
+        ring_versions=ring_versions)
 
 
 def arrival_cohort(finish_time, cohort: int, version=None):
@@ -157,6 +242,75 @@ def arrival_cohort(finish_time, cohort: int, version=None):
     return idx, mask, t_event
 
 
+def ring_lookup(ring, versions, server_version, ring_size: int):
+    """Reconstruct dense snapshots for slots ``versions`` from the ring.
+
+    ``versions`` (m,) int32 snapshot tags; returns (snapshots with a
+    leading (m,) axis, effective versions (m,)). A version older than
+    the ring depth is clamped to the oldest retained version
+    ``server_version - ring_size + 1`` (bounded-staleness eviction);
+    otherwise the lookup is exact — ring slot ``v % ring_size`` holds
+    the global client half written at version ``v``, and any v within
+    the last ``ring_size`` versions is the slot's latest write.
+    """
+    eff = jnp.maximum(versions,
+                      server_version - jnp.int32(ring_size - 1))
+    slot = eff % ring_size
+    return jax.tree.map(lambda r: jnp.take(r, slot, axis=0), ring), eff
+
+
+def async_state_bytes(afed: AsyncFedState) -> dict:
+    """Resident-memory accounting of an :class:`AsyncFedState`.
+
+    ``snapshot_bytes`` is the param-sized component — O(K x |w_c|) for
+    dense snapshots, O(ring_size x |w_c|) for the delta ring — and
+    ``per_client_scalar_bytes`` the unavoidable (K,) tags (version +
+    finish_time, ~8 bytes/client). The O(cohort + ring) scaling claim
+    (BENCH_scale.json) is about the param-sized component.
+    """
+
+    def nbytes(tree) -> int:
+        return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                       for l in jax.tree.leaves(tree)))
+
+    snap = nbytes(afed.client_params) + nbytes(afed.ring)
+    per_client = nbytes(afed.version) + nbytes(afed.finish_time)
+    other = nbytes((afed.ring_versions, afed.server_version, afed.now,
+                    afed.key, afed.agg_state, afed.server_opt))
+    return {"snapshot_bytes": snap,
+            "per_client_scalar_bytes": per_client,
+            "other_bytes": other,
+            "total_bytes": snap + per_client + other}
+
+
+def _resolve_schedule(schedule, scala: ScalaConfig, lr_scale: str,
+                      cohort: int, num_clients: Optional[int]):
+    """The event schedule's lr policy (``lr_scale``).
+
+    The global ``step`` counter advances once per *local iteration* of
+    whichever cohort arrived — with ``cohort < K`` the schedule ticks
+    K/cohort times faster per unit of fleet-wide work than the sync
+    round's, and each event moves the global model a full ``mix_rate``
+    step from a cohort-sized sample. ``"cohort"`` scales the lr by
+    ``cohort / K`` so per-event aggregate movement matches the sync
+    round's per-participant scale; at ``cohort == K`` the factor is
+    exactly 1.0 and the schedule is bit-identical to ``"none"``
+    (test-enforced sync-equivalence).
+    """
+    if lr_scale not in LR_SCALES:
+        raise ValueError(f"unknown lr_scale {lr_scale!r}; expected "
+                         f"{LR_SCALES}")
+    sched = schedule if schedule is not None else schedules.constant(scala.lr)
+    if lr_scale == "none":
+        return sched
+    if num_clients is None:
+        raise ValueError("lr_scale='cohort' needs num_clients= (the factor "
+                         "is cohort / K)")
+    factor = jnp.float32(cohort / num_clients)
+    base = sched
+    return lambda step: base(step) * factor
+
+
 def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       delays: DelayModel,
                       cohort: int,
@@ -171,14 +325,24 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       server_lr: float = 1.0,
                       opt_state_policy: str = "carry",
                       unroll=1,
-                      precision: str = "f32"):
+                      precision: str = "f32",
+                      snapshots: str = "dense",
+                      ring_size: int = 64,
+                      lr_scale: str = "none",
+                      num_clients: Optional[int] = None,
+                      emit_client_metrics: bool = True,
+                      mesh=None, batch_specs=None):
     """Build the async event program: ``async_fn(state, afed,
     round_batches, data_sizes=None) -> (state, afed, metrics)``.
 
     ``round_batches`` leaves are (T, K, Bk, ...) — one local-iteration
     schedule for every static slot; only the arrival cohort's columns are
     computed (sparse-slot gather), so the per-event cost is
-    ~``cohort / K`` of a full sync round.
+    ~``cohort / K`` of a full sync round. Alternatively the leaves may be
+    (T, cohort, Bk, ...) — *cohort-sized* batches consumed by the
+    arrivals directly, skipping the O(K) batch materialization entirely
+    (the million-client path; requires a prior-free aggregator since the
+    (K,)-indexed aggregation priors cannot be derived from them).
 
     * ``delays`` / ``cohort`` — the event schedule: completion delays per
       dispatch, and how many arrivals each event waits for
@@ -207,37 +371,82 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
       cohort's local forward/backward in bfloat16 against f32 master
       params; the staleness weights, priors, and delayed aggregation
       stay f32.
+    * ``snapshots`` / ``ring_size`` — the :class:`AsyncFedState`
+      storage layout (module docstring): ``"delta"`` replaces the
+      (K, ...) per-client snapshots with a ``ring_size``-deep ring of
+      recent global client halves, bit-identical to ``"dense"`` while
+      staleness stays below ``ring_size`` and O(cohort + ring) resident
+      otherwise. Requires a stateless optimizer or
+      ``opt_state_policy="reset"`` (no per-client moments are stored)
+      and builds ``state.params["client"]`` over ONE slot.
+    * ``lr_scale`` — per-arrival lr scaling (:data:`LR_SCALES`):
+      ``"cohort"`` multiplies the schedule by ``cohort / num_clients``
+      (pass ``num_clients=``); ``"none"`` is the historical behavior.
+    * ``emit_client_metrics`` — include the (K,) ``arrival_mask`` /
+      ``staleness`` vectors in the metrics (default). Disable at large K
+      so the per-event host transfer stays O(cohort).
+    * ``mesh`` / ``batch_specs`` — required iff ``backend="lace_dp"``:
+      the whole event runs inside one ``shard_map`` with the client axis
+      sharded over the mesh's client axes; each shard pops
+      ``cohort / n_shards`` of its local finishers (balanced two-tier
+      schedule, module docstring). Requires cohort and K divisible by
+      the client-shard count and a shard-decomposable aggregator
+      (``Aggregator.shard_local``).
 
     ``state.params["client"]`` always holds the *current* global client
     half broadcast over the K slots (checkpoint/eval-compatible with the
-    sync runner); the per-client training snapshots live in
-    ``afed.client_params``.
+    sync runner) — over a single slot under ``snapshots="delta"``; the
+    per-client training snapshots live in ``afed.client_params`` (dense)
+    or ``afed.ring`` (delta).
 
     Metrics extend the engine's with the async observables:
-    ``arrival_mask`` (K,), ``staleness`` (K,) pre-event ages,
-    ``staleness_mean`` over the cohort, ``t_event``, and
-    ``server_version`` post-event.
+    ``arrival_mask`` (K,), ``staleness`` (K,) pre-event ages (both
+    gated on ``emit_client_metrics``), ``staleness_mean`` over the
+    cohort, ``t_event``, and ``server_version`` post-event.
     """
     if opt_state_policy not in engine.OPT_STATE_POLICIES:
         raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
                          f"expected {engine.OPT_STATE_POLICIES}")
-    if backend == "lace_dp":
-        raise ValueError("make_async_runner does not support the 'lace_dp' "
-                         "backend (the sparse-slot gather crosses the "
-                         "sharded client axis); use 'lace'")
+    if snapshots not in SNAPSHOT_MODES:
+        raise ValueError(f"unknown snapshots mode {snapshots!r}; expected "
+                         f"{SNAPSHOT_MODES}")
+    if snapshots == "delta" and opt_state_policy == "average":
+        raise ValueError(
+            "snapshots='delta' stores no per-client optimizer state to "
+            "average; use opt_state_policy 'reset' (or 'carry' with a "
+            "stateless optimizer)")
     if cohort < 1:
         raise ValueError(f"cohort must be >= 1, got {cohort}")
+    delta = snapshots == "delta"
     opt = optimizer if optimizer is not None else optimizers.sgd()
     agg = aggregator if aggregator is not None else _agg.weighted()
+    sched = _resolve_schedule(schedule, scala, lr_scale, cohort, num_clients)
+
+    if backend == "lace_dp":
+        return _make_async_runner_dp(
+            model, scala, delays=delays, cohort=cohort, opt=opt, sched=sched,
+            ce_chunk=ce_chunk, staleness_decay=staleness_decay,
+            mix_rate=mix_rate, agg=agg, server_optimizer=server_optimizer,
+            server_lr=server_lr, opt_state_policy=opt_state_policy,
+            unroll=unroll, precision=precision, delta=delta,
+            ring_size=ring_size, emit_client_metrics=emit_client_metrics,
+            mesh=mesh, batch_specs=batch_specs)
+
     step = engine.make_split_step(model, scala, backend=backend,
-                                  optimizer=opt, schedule=schedule,
+                                  optimizer=opt, schedule=sched,
                                   ce_chunk=ce_chunk, precision=precision)
 
     def async_fn(state: engine.TrainState, afed: AsyncFedState,
                  round_batches, data_sizes=None):
-        K = jax.tree.leaves(afed.client_params)[0].shape[0]
+        K = afed.version.shape[0]
         if cohort > K:
             raise ValueError(f"cohort {cohort} exceeds the {K} client slots")
+        if delta and opt_state_policy == "carry" \
+                and jax.tree.leaves(state.opt_state["client"]):
+            raise ValueError(
+                "snapshots='delta' cannot carry per-client optimizer "
+                "moments (none are stored); use a stateless optimizer "
+                "(plain sgd) or opt_state_policy='reset'")
 
         # --- event pop: who arrives, and when ---
         idx, arrival_mask, t_event = arrival_cohort(afed.finish_time, cohort,
@@ -245,15 +454,37 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
         staleness = (afed.server_version - afed.version).astype(jnp.float32)
 
         # --- sparse-slot local compute from the per-client snapshots:
-        # the engine's gather, sourced from the snapshots rather than the
-        # (slot-unified) global stacked params ---
-        sub = engine._gather_clients(
-            engine.TrainState(
-                params={"client": afed.client_params,
-                        "server": state.params["server"]},
-                opt_state=state.opt_state, step=state.step), idx)
-        sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
-                                   round_batches)
+        # the engine's gather, sourced from the snapshots (dense) or
+        # reconstructed from the version ring (delta) ---
+        if delta:
+            snap_c, _ = ring_lookup(afed.ring, jnp.take(afed.version, idx),
+                                    afed.server_version, ring_size)
+            sub = engine.TrainState(
+                params={"client": snap_c, "server": state.params["server"]},
+                opt_state={"client": jax.vmap(opt.init)(snap_c),
+                           "server": state.opt_state["server"]},
+                step=state.step)
+        else:
+            sub = engine._gather_clients(
+                engine.TrainState(
+                    params={"client": afed.client_params,
+                            "server": state.params["server"]},
+                    opt_state=state.opt_state, step=state.step), idx)
+        b_lead = jax.tree.leaves(round_batches)[0].shape[1]
+        if b_lead == K:
+            sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
+                                       round_batches)
+        elif b_lead == cohort:
+            if agg.needs_priors:
+                raise ValueError(
+                    f"aggregator {agg.name!r} needs (K,)-indexed aggregation "
+                    "priors, which cohort-sized round_batches cannot "
+                    "provide; pass full (T, K, ...) batches")
+            sub_batches = round_batches
+        else:
+            raise ValueError(
+                f"round_batches client axis is {b_lead}; expected the {K} "
+                f"static slots or the {cohort}-sized arrival cohort")
         # priors / logit adjustments recompute over the arrival cohort:
         # the gathered batch IS the cohort's concatenated batch
         sub, ms = jax.lax.scan(step, sub, sub_batches, unroll=unroll)
@@ -284,33 +515,50 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
         new_ws = sub.params["server"]
         server_opt_state = afed.server_opt
         if server_optimizer is not None:
-            delta = jax.tree.map(
+            ws_delta = jax.tree.map(
                 lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
                 state.params["server"], new_ws)
             new_ws, server_opt_state = server_optimizer.update(
-                delta, server_opt_state, state.params["server"], server_lr)
+                ws_delta, server_opt_state, state.params["server"], server_lr)
 
         # --- cohort opt-state at the event boundary ---
-        sub_opt_c = sub.opt_state["client"]
-        if opt_state_policy == "reset":
-            sub_opt_c = jax.vmap(opt.init)(sub.params["client"])
-        elif opt_state_policy == "average":
-            r_sub = jnp.take(r_hat, idx)
+        if delta:
+            new_client = stack_client_params(new_global, 1)
+            opt_c = jax.vmap(opt.init)(new_client)
+        else:
+            sub_opt_c = sub.opt_state["client"]
+            if opt_state_policy == "reset":
+                sub_opt_c = jax.vmap(opt.init)(sub.params["client"])
+            elif opt_state_policy == "average":
+                r_sub = jnp.take(r_hat, idx)
 
-            def avg(a):
-                wb = r_sub.reshape((-1,) + (1,) * (a.ndim - 1))
-                m = (a.astype(jnp.float32) * wb).sum(axis=0).astype(a.dtype)
-                return jnp.broadcast_to(m[None], a.shape)
+                def avg(a):
+                    wb = r_sub.reshape((-1,) + (1,) * (a.ndim - 1))
+                    m = (a.astype(jnp.float32) * wb).sum(axis=0) \
+                        .astype(a.dtype)
+                    return jnp.broadcast_to(m[None], a.shape)
 
-            sub_opt_c = jax.tree.map(avg, sub_opt_c)
-        opt_c = engine.scatter_rows(state.opt_state["client"], sub_opt_c, idx)
+                sub_opt_c = jax.tree.map(avg, sub_opt_c)
+            opt_c = engine.scatter_rows(state.opt_state["client"], sub_opt_c,
+                                        idx)
+            new_client = stack_client_params(new_global, K)
 
         # --- re-dispatch the cohort at the new version ---
         new_version = afed.server_version + 1
         k_delay, k_carry = jax.random.split(afed.key)
         new_delays = delays.sample(k_delay, (cohort,)).astype(jnp.float32)
-        snap = engine.scatter_rows(
-            afed.client_params, stack_client_params(new_global, cohort), idx)
+        if delta:
+            slot = new_version % ring_size
+            snap = afed.client_params
+            ring = jax.tree.map(
+                lambda r, g: r.at[slot].set(g.astype(r.dtype)),
+                afed.ring, new_global)
+            ring_versions = afed.ring_versions.at[slot].set(new_version)
+        else:
+            snap = engine.scatter_rows(
+                afed.client_params, stack_client_params(new_global, cohort),
+                idx)
+            ring, ring_versions = afed.ring, afed.ring_versions
         new_afed = AsyncFedState(
             client_params=snap,
             version=afed.version.at[idx].set(new_version),
@@ -319,18 +567,247 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             now=t_event,
             key=k_carry,
             agg_state=agg_state,
-            server_opt=server_opt_state)
+            server_opt=server_opt_state,
+            ring=ring,
+            ring_versions=ring_versions)
         new_state = engine.TrainState(
-            params={"client": stack_client_params(new_global, K),
-                    "server": new_ws},
+            params={"client": new_client, "server": new_ws},
             opt_state={"client": opt_c, "server": sub.opt_state["server"]},
             step=sub.step)
         metrics = dict(metrics)
-        metrics.update(arrival_mask=arrival_mask, staleness=staleness,
-                       staleness_mean=(staleness * arrival_mask).sum()
-                       / jnp.maximum(arrival_mask.sum(), 1.0),
-                       t_event=t_event,
-                       server_version=new_version)
+        if emit_client_metrics:
+            metrics.update(
+                arrival_mask=arrival_mask, staleness=staleness,
+                staleness_mean=(staleness * arrival_mask).sum()
+                / jnp.maximum(arrival_mask.sum(), 1.0))
+        else:
+            metrics.update(staleness_mean=jnp.take(staleness, idx).mean())
+        metrics.update(t_event=t_event, server_version=new_version)
         return new_state, new_afed, metrics
+
+    return async_fn
+
+
+# ---------------------------------------------------------------------------
+# the manual-SPMD ("lace_dp") event program
+# ---------------------------------------------------------------------------
+
+
+def _half_specs(tree, client_spec):
+    """{'client','server'} pytree -> PartitionSpecs: client leaves on
+    ``client_spec``, server leaves replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    return {"client": jax.tree.map(lambda _: client_spec, tree["client"]),
+            "server": jax.tree.map(lambda _: P(), tree["server"])}
+
+
+def _make_async_runner_dp(model, scala, *, delays, cohort, opt, sched,
+                          ce_chunk, staleness_decay, mix_rate, agg,
+                          server_optimizer, server_lr, opt_state_policy,
+                          unroll, precision, delta, ring_size,
+                          emit_client_metrics, mesh, batch_specs):
+    """The whole async event inside one ``shard_map`` (backend lace_dp).
+
+    See :func:`make_async_runner` — this builds the same
+    ``async_fn(state, afed, round_batches, data_sizes=None)`` with the
+    client axis sharded over the mesh's client axes and a *per-shard*
+    cohort pop (each shard waits for ``cohort / n_shards`` of its local
+    finishers — the balanced two-tier schedule).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.sharding.logical import round_specs
+
+    if mesh is None or batch_specs is None:
+        raise ValueError("backend 'lace_dp' needs mesh= and batch_specs=")
+    axes = engine.mesh_axes(mesh)
+    n_shards = engine.client_shard_count(mesh)
+    if cohort % n_shards:
+        raise ValueError(f"cohort {cohort} must divide over the {n_shards} "
+                         "client shards (per-shard balanced pop)")
+    if agg.shard_local is None:
+        raise ValueError(
+            f"aggregator {agg.name!r} is not shard-decomposable "
+            "(Aggregator.shard_local is None); the lace_dp event needs "
+            "fedavg / weighted / hierarchical")
+    if agg.stateful:
+        raise ValueError(f"aggregator {agg.name!r} is stateful; the lace_dp "
+                         "async event supports stateless aggregators only")
+    if opt_state_policy == "average":
+        raise ValueError("opt_state_policy 'average' is not supported on "
+                         "the lace_dp async event; use 'carry' or 'reset'")
+    cohort_l = cohort // n_shards
+    cspec = P(axes.client or None)
+    rb_specs = round_specs(batch_specs)
+    m_specs = {"loss_server": P(), "loss_client": P(), "aux": P(),
+               "staleness_mean": P(), "t_event": P(), "server_version": P()}
+    if emit_client_metrics:
+        m_specs.update(arrival_mask=cspec, staleness=cspec)
+
+    def async_fn(state: engine.TrainState, afed: AsyncFedState,
+                 round_batches, data_sizes=None):
+        K = afed.version.shape[0]
+        if K % n_shards:
+            raise ValueError(f"{K} client slots must divide over the "
+                             f"{n_shards} client shards")
+        if delta and opt_state_policy == "carry" \
+                and jax.tree.leaves(state.opt_state["client"]):
+            raise ValueError(
+                "snapshots='delta' cannot carry per-client optimizer "
+                "moments; use a stateless optimizer or "
+                "opt_state_policy='reset'")
+        if jax.tree.leaves(round_batches)[0].shape[1] != K:
+            raise ValueError("the lace_dp async event needs full (T, K, ...)"
+                             " round_batches (sharded over the client axes)")
+        if data_sizes is None:
+            data_sizes = jnp.ones((K,), jnp.float32)
+
+        pspec = P() if delta else cspec
+        s_specs = engine.TrainState(
+            params=_half_specs(state.params, pspec),
+            opt_state=_half_specs(state.opt_state, pspec),
+            step=P())
+        a_specs = AsyncFedState(
+            client_params=jax.tree.map(lambda _: cspec, afed.client_params),
+            version=cspec, server_version=P(), finish_time=cspec, now=P(),
+            key=P(),
+            agg_state=jax.tree.map(lambda _: P(), afed.agg_state),
+            server_opt=jax.tree.map(lambda _: P(), afed.server_opt),
+            ring=jax.tree.map(lambda _: P(), afed.ring),
+            ring_versions=P() if delta else ())
+
+        def body(st, af, rb, sizes_l):
+            # --- per-shard pop of the local cohort ---
+            idx, a_mask_l, t_l = arrival_cohort(af.finish_time, cohort_l,
+                                                af.version)
+            t_event = (jax.lax.pmax(t_l, axes.client) if axes.client
+                       else t_l)
+            stal_l = (af.server_version - af.version).astype(jnp.float32)
+
+            # --- gather the local arrivals' snapshots ---
+            if delta:
+                snap_c, _ = ring_lookup(af.ring, jnp.take(af.version, idx),
+                                        af.server_version, ring_size)
+                sub = engine.TrainState(
+                    params={"client": snap_c,
+                            "server": st.params["server"]},
+                    opt_state={"client": jax.vmap(opt.init)(snap_c),
+                               "server": st.opt_state["server"]},
+                    step=st.step)
+            else:
+                sub = engine._gather_clients(
+                    engine.TrainState(
+                        params={"client": af.client_params,
+                                "server": st.params["server"]},
+                        opt_state=st.opt_state, step=st.step), idx)
+            sub_b = jax.tree.map(lambda a: jnp.take(a, idx, axis=1), rb)
+
+            def step_body(s, b):
+                grads, mets = engine.split_step_grads(
+                    model, s.params, b, scala, backend="lace_dp",
+                    ce_chunk=ce_chunk, axes=axes, precision=precision)
+                return engine._apply_updates(opt, s, grads,
+                                             sched(s.step)), mets
+
+            sub, ms = jax.lax.scan(step_body, sub, sub_b, unroll=unroll)
+            metrics = dict(jax.tree.map(lambda a: a[-1], ms))
+
+            # --- two-tier delayed aggregation: each shard (edge) folds
+            # its cohort locally, the psum folds the edges ---
+            w_base_l = agg.shard_local(a_mask_l, sizes_l, axes.client,
+                                       n_shards)
+            decay_l = jnp.power(jnp.float32(staleness_decay), stal_l)
+            raw_l = w_base_l * decay_l * a_mask_l
+            denom = raw_l.sum()
+            if axes.client:
+                denom = jax.lax.psum(denom, axes.client)
+            r_l = raw_l / jnp.maximum(denom, 1e-8)
+            part = weighted_mean(sub.params["client"], jnp.take(r_l, idx))
+            cohort_avg = (jax.tree.map(
+                lambda a: jax.lax.psum(a, axes.client), part)
+                if axes.client else part)
+            mu = jnp.float32(mix_rate)
+            global_c = jax.tree.map(lambda a: a[0], st.params["client"])
+            new_global = jax.tree.map(
+                lambda g, c: ((1.0 - mu) * g.astype(jnp.float32)
+                              + mu * c.astype(jnp.float32)).astype(g.dtype),
+                global_c, cohort_avg)
+
+            # --- server half (replicated; identical on every shard) ---
+            new_ws = sub.params["server"]
+            so_state = af.server_opt
+            if server_optimizer is not None:
+                ws_delta = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)),
+                    st.params["server"], new_ws)
+                new_ws, so_state = server_optimizer.update(
+                    ws_delta, so_state, st.params["server"], server_lr)
+
+            # --- opt state / re-dispatch (local slots) ---
+            new_version = af.server_version + 1
+            k_delay, k_carry = jax.random.split(af.key)
+            shard_ix = jnp.int32(0)
+            for a in axes.client:
+                shard_ix = shard_ix * dict(mesh.shape)[a] \
+                    + jax.lax.axis_index(a)
+            new_delays = delays.sample(
+                jax.random.fold_in(k_delay, shard_ix),
+                (cohort_l,)).astype(jnp.float32)
+            if delta:
+                new_client = stack_client_params(new_global, 1)
+                opt_c = jax.vmap(opt.init)(new_client)
+                slot = new_version % ring_size
+                snap = af.client_params
+                ring = jax.tree.map(
+                    lambda r, g: r.at[slot].set(g.astype(r.dtype)),
+                    af.ring, new_global)
+                ring_versions = af.ring_versions.at[slot].set(new_version)
+            else:
+                sub_opt_c = sub.opt_state["client"]
+                if opt_state_policy == "reset":
+                    sub_opt_c = jax.vmap(opt.init)(sub.params["client"])
+                opt_c = engine.scatter_rows(st.opt_state["client"],
+                                            sub_opt_c, idx)
+                new_client = stack_client_params(new_global,
+                                                 af.version.shape[0])
+                snap = engine.scatter_rows(
+                    af.client_params,
+                    stack_client_params(new_global, cohort_l), idx)
+                ring, ring_versions = af.ring, af.ring_versions
+            new_af = AsyncFedState(
+                client_params=snap,
+                version=af.version.at[idx].set(new_version),
+                server_version=new_version,
+                finish_time=af.finish_time.at[idx].set(t_event + new_delays),
+                now=t_event,
+                key=k_carry,
+                agg_state=af.agg_state,
+                server_opt=so_state,
+                ring=ring,
+                ring_versions=ring_versions)
+            new_st = engine.TrainState(
+                params={"client": new_client, "server": new_ws},
+                opt_state={"client": opt_c,
+                           "server": sub.opt_state["server"]},
+                step=sub.step)
+            s_sum = (stal_l * a_mask_l).sum()
+            s_cnt = a_mask_l.sum()
+            if axes.client:
+                s_sum = jax.lax.psum(s_sum, axes.client)
+                s_cnt = jax.lax.psum(s_cnt, axes.client)
+            if emit_client_metrics:
+                metrics.update(arrival_mask=a_mask_l, staleness=stal_l)
+            metrics.update(staleness_mean=s_sum / jnp.maximum(s_cnt, 1.0),
+                           t_event=t_event, server_version=new_version)
+            return new_st, new_af, metrics
+
+        fn = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(s_specs, a_specs, rb_specs, cspec),
+            out_specs=(s_specs, a_specs, m_specs), check_vma=False)
+        return fn(state, afed, round_batches, data_sizes)
 
     return async_fn

@@ -9,7 +9,12 @@ gather), so vocab-sharded logits never force an all-gather under GSPMD.
 Shapes: feats (G, N, d) — G parallel groups (SCALA clients) sharded over
 the data axis, N tokens per group chunked sequentially; w_head (d, V);
 labels/weights (G, N); prior_rows (K, V) with prior_ids (G,) selecting
-each group's prior row (server loss: K=1; client loss: K=G).
+each group's prior row (server loss: K=1; client loss: K=G). The ops are
+shape-polymorphic in G — the sparse-slot and in-shard-gather paths call
+them with a *gathered* subset of the client groups (G = cohort or the
+shard-local K_active), with ``prior_ids`` indexing the gathered priors —
+so group-axis mismatches are validated statically up front
+(:func:`_check_args`) instead of broadcasting silently.
 
 ``impl='pallas'`` routes the inner chunk computation to the TPU kernel in
 :mod:`repro.kernels.lace.kernel` (validated in interpret mode on CPU).
@@ -53,6 +58,38 @@ def _pad_tokens(c, feats, labels, weights):
         labels = jnp.pad(labels, ((0, 0), (0, pad)))
         weights = jnp.pad(weights, ((0, 0), (0, pad)))
     return feats, labels, weights, N
+
+
+def _check_args(feats, w_head, labels, prior_rows, prior_ids, weights):
+    """Static shape validation for the fused ops.
+
+    The group axis G varies call-to-call (full K, a gathered cohort, a
+    shard-local subset), and numpy broadcasting would happily accept a
+    (K,)-sized ``prior_ids`` against cohort-sized feats — producing
+    wrong per-group adjustments with no error. Fail loudly instead.
+    """
+    if feats.ndim != 3:
+        raise ValueError(f"feats must be (G, N, d), got {feats.shape}")
+    G, N, d = feats.shape
+    if w_head.ndim != 2 or w_head.shape[0] != d:
+        raise ValueError(f"w_head must be (d={d}, V), got {w_head.shape}")
+    if labels.shape != (G, N):
+        raise ValueError(f"labels must be (G, N)=({G}, {N}), got "
+                         f"{labels.shape}")
+    if weights is not None and weights.shape != (G, N):
+        raise ValueError(f"weights must be (G, N)=({G}, {N}), got "
+                         f"{weights.shape}")
+    if prior_ids is not None:
+        if prior_rows is None:
+            raise ValueError("prior_ids given without prior_rows")
+        if prior_ids.shape != (G,):
+            raise ValueError(
+                f"prior_ids must be (G,)=({G},), got {prior_ids.shape} — "
+                "gathered-group callers must gather the prior ids (or "
+                "rows) alongside the feats")
+    if prior_rows is not None and prior_rows.shape[-1] != w_head.shape[1]:
+        raise ValueError(f"prior_rows vocab dim {prior_rows.shape[-1]} != "
+                         f"head vocab dim {w_head.shape[1]}")
 
 
 def _chunk_logits(f_c, w_head, lp_c, tau):
@@ -99,6 +136,7 @@ def _prep(feats, labels, prior_rows, prior_ids, weights, tau, eps):
 
 def _fwd_impl(feats, w_head, labels, prior_rows, prior_ids, weights,
               tau, eps, chunk, mean):
+    _check_args(feats, w_head, labels, prior_rows, prior_ids, weights)
     res_in = (feats, w_head, labels, prior_rows, prior_ids, weights)
     G, N0, d = feats.shape
     c = _pick_chunk(N0, chunk)

@@ -41,7 +41,12 @@ on the server half (the round delta as a pseudo-gradient at
 ``--server-lr``). ``--async`` switches to the asynchronous event
 runtime (:mod:`repro.fed.runtime`) with ``--delay-spec`` / ``--cohort``
 / ``--staleness-decay`` / ``--mix-rate``; ``--delay-spec zero --cohort
-K`` reproduces the synchronous rounds exactly.
+K`` reproduces the synchronous rounds exactly. ``--snapshots delta
+--ring-size R`` stores async snapshots as a ring of recent server
+versions instead of a dense (K, ...) per-client copy — O(cohort + ring)
+resident state, bit-identical updates (README §Scaling the client axis,
+``benchmarks/BENCH_scale.json``) — and ``--lr-scale cohort`` rescales
+the client schedule by cohort/clients.
 
 Dispatch-efficiency knobs (README §Performance,
 ``benchmarks/BENCH_dispatch.json``): ``--precision bf16`` runs the
@@ -118,7 +123,9 @@ def spec_from_args(args) -> api.ExperimentSpec:
             mix_rate=args.mix_rate, server_optimizer=server_opt,
             unroll=args.unroll, precision=args.precision,
             rounds_per_call=args.rounds_per_call,
-            donate=not args.no_donate),
+            donate=not args.no_donate,
+            snapshots=args.snapshots, ring_size=args.ring_size,
+            lr_scale=args.lr_scale),
         data=api.DataSpec(kind="lm_synthetic", seq=args.seq,
                           docs_per_client=args.docs_per_client))
 
@@ -170,6 +177,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-version decay of stale arrivals' weights")
     ap.add_argument("--mix-rate", type=float, default=1.0,
                     help="global-model mixing rate toward the cohort average")
+    ap.add_argument("--snapshots", default="dense",
+                    choices=("dense", "delta"),
+                    help="async snapshot storage: dense keeps a (K, ...) "
+                         "per-client copy of the client half; delta keeps "
+                         "only a ring of recent server states "
+                         "(O(cohort + ring) resident bytes)")
+    ap.add_argument("--ring-size", type=int, default=64,
+                    help="retained server versions for --snapshots delta")
+    ap.add_argument("--lr-scale", default="none",
+                    choices=("none", "cohort"),
+                    help="async learning-rate scaling: cohort multiplies "
+                         "the schedule by cohort/clients")
     ap.add_argument("--local-iters", type=int, default=5)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--server-batch", type=int, default=16)

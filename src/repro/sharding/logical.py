@@ -134,6 +134,19 @@ def tree_specs(axes_tree, shape_tree, mesh: Mesh, rules=None):
     return jax.tree.unflatten(treedef, specs)
 
 
+def round_specs(batch_specs):
+    """Per-step batch PartitionSpecs -> per-round (T-stacked) specs.
+
+    Round-granular programs (``core.engine.make_round_runner``,
+    ``fed.runtime`` async events) consume batches with a leading local-
+    iteration axis T prepended to every per-step leaf; T is a time axis
+    and never sharded, so each spec simply gains a leading ``None``.
+    """
+    return jax.tree.map(
+        lambda s: PartitionSpec(None, *s), batch_specs,
+        is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
 def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
     specs = tree_specs(axes_tree, shape_tree, mesh, rules)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,

@@ -278,15 +278,27 @@ def test_trainer_runs_each_mode_smoke():
 # --------------------------------------------------------------------------
 
 
-def test_validate_rejects_lace_dp_with_sparse_and_async():
+def test_validate_lace_dp_sparse_async_needs_shardable_aggregation():
+    # the in-shard gather runs aggregation per client shard, so the
+    # lace_dp sparse/async paths accept only stateless prior-free
+    # shard-decomposable aggregators (and no cross-slot opt averaging);
+    # a decomposable spec validates fine
     for mode in ("sparse", "async"):
-        spec = api.ExperimentSpec(
+        part = "uniform:0.5" if mode == "sparse" else None
+        api.ExperimentSpec(
             arch="qwen1.5-0.5b", reduced=True,
-            fed=api.FedSpec(
-                participation="uniform:0.5" if mode == "sparse" else None),
-            execution=api.ExecutionSpec(mode=mode, backend="lace_dp"))
-        with pytest.raises(ValueError, match="lace_dp.*incompatible"):
-            spec.validate()
+            fed=api.FedSpec(participation=part),
+            execution=api.ExecutionSpec(mode=mode,
+                                        backend="lace_dp")).validate()
+        for fed_kw, msg in (
+                (dict(aggregator="bias_compensated"), "shard-decomposable"),
+                (dict(opt_state_policy="average"), "average")):
+            spec = api.ExperimentSpec(
+                arch="qwen1.5-0.5b", reduced=True,
+                fed=api.FedSpec(participation=part, **fed_kw),
+                execution=api.ExecutionSpec(mode=mode, backend="lace_dp"))
+            with pytest.raises(ValueError, match=msg):
+                spec.validate()
 
 
 def test_validate_rejects_async_with_participation():

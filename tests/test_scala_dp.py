@@ -96,3 +96,78 @@ def test_dp_step_matches_fused():
     assert err["loss_client"] < 1e-5, err
     assert err["client"] < 5e-4, err
     assert err["server"] < 5e-4, err
+
+
+# The in-shard gather's mesh-dependent validation: the client shard
+# count comes from the mesh, so the shards-balanced-scheduler and
+# divisibility checks only fire on a real multi-device mesh (the
+# single-device suite can't reach them). Construction-only — no compute.
+GATHER_VALIDATION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+
+from repro import fed
+from repro.configs import ScalaConfig, get_config
+from repro.configs.base import InputShape
+from repro.core import engine
+from repro.core.scala import transformer_split_model
+from repro.launch import input_specs as ispec
+from repro.sharding.logical import RULES_DP, tree_specs
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+C, S = 4, 16
+model = transformer_split_model(cfg)
+sc = ScalaConfig(num_clients=C, participation=1.0, lr=0.05)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+assert engine.client_shard_count(mesh) == 2
+assert engine.client_shard_count(jax.make_mesh((1, 4),
+                                               ("data", "model"))) == 1
+shape = InputShape(name="t", seq_len=S, global_batch=C, mode="train")
+b_sh, b_ax = ispec.train_batch_specs(cfg, shape, C)
+b_specs = tree_specs(b_ax, b_sh, mesh, RULES_DP)
+
+def expect(msg, **kw):
+    kw.setdefault("mesh", mesh)
+    kw.setdefault("batch_specs", b_specs)
+    try:
+        engine.make_round_runner(model, sc, backend="lace_dp",
+                                 slot_gather=True, aggregator=kw.pop(
+                                     "aggregator", fed.weighted()), **kw)
+    except ValueError as e:
+        assert msg in str(e), (msg, str(e))
+    else:
+        raise AssertionError(f"no ValueError containing {msg!r}")
+
+# a legacy (shards=1) scheduler cannot balance 2 client shards
+expect("shards-balanced", participation=fed.uniform(C, 0.5))
+# per-shard aggregation needs a shard-decomposable aggregator
+expect("shard-decomposable",
+       participation=fed.make_participation("uniform:0.5:2", C),
+       aggregator=fed.bias_compensated())
+# cross-slot opt-state averaging cannot span shards
+expect("'average'", participation=fed.make_participation(
+    "uniform:0.5:2", C), opt_state_policy="average")
+# the balanced config constructs fine
+engine.make_round_runner(model, sc, backend="lace_dp", slot_gather=True,
+                         aggregator=fed.weighted(), mesh=mesh,
+                         batch_specs=b_specs,
+                         participation=fed.make_participation(
+                             "uniform:0.5:2", C))
+print("RESULT ok")
+"""
+
+
+@pytest.mark.slow
+def test_dp_slot_gather_mesh_validation():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", GATHER_VALIDATION_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESULT ok" in out.stdout, out.stdout[-2000:]
