@@ -218,7 +218,7 @@ def bench_dispatch(quick: bool) -> None:
 # ---------------------------------------------------------------------------
 
 def bench_scale(quick: bool) -> None:
-    from benchmarks.scale import bench_scale as _bench
+    from benchmarks.scale import bench_arrival, bench_scale as _bench
 
     res = _bench(ks=(100, 10_000) if quick else (100, 10_000, 1_000_000),
                  events=8 if quick else 16)
@@ -231,6 +231,15 @@ def bench_scale(quick: bool) -> None:
                       f"{row['seconds']}", flush=True)
     for K, flat in res["delta_flatness"].items():
         print(f"scale,K={K},delta_flatness,{flat},,", flush=True)
+    arr = bench_arrival(ks=(10_000,) if quick else (10_000, 1_000_000),
+                        events=8 if quick else 16)
+    for K, entry in arr["K"].items():
+        for leg in ("sort", "topk", "topk:sharded"):
+            print(f"scale,K={K},arrival={leg},"
+                  f"{entry[leg]['rounds_per_sec']},,"
+                  f"{entry[leg]['seconds']}", flush=True)
+        print(f"scale,K={K},topk_speedup_vs_sort,"
+              f"{entry['topk_speedup_vs_sort']},,", flush=True)
 
 
 def bench_async(quick: bool) -> None:
@@ -271,10 +280,12 @@ def smoke() -> None:
     ``api.ExecutionSpec`` names; ``async`` is covered by
     ``benchmarks.async_rounds --smoke``), one fused/bf16 run through the
     dispatch knobs, the dispatch fusion regression guard, the
-    delta-vs-dense snapshot scale guard, plus the roofline reprint. The
-    dispatch/scale benches also have their own --smoke."""
+    delta-vs-dense snapshot scale guard, the topk-vs-sort arrival-pop
+    guard, plus the roofline reprint. The dispatch/scale benches also
+    have their own --smoke."""
     from benchmarks.dispatch import smoke_guard
-    from benchmarks.scale import smoke_guard as scale_smoke_guard
+    from benchmarks.scale import (arrival_smoke_guard,
+                                  smoke_guard as scale_smoke_guard)
 
     print(HEADER, flush=True)
     for execution in ("subset", "masked", "sparse"):
@@ -300,6 +311,12 @@ def smoke() -> None:
     sguard = scale_smoke_guard()
     print("SMOKE,scale_guard,delta_speedup_vs_dense,"
           f"{sguard['K']['10000']['delta_speedup_vs_dense']},,", flush=True)
+    # regression guard: the O(K)-work top-k arrival pop must be >= as
+    # fast as the per-event lexsort at K=1e4 (shared with
+    # `benchmarks.scale --smoke`)
+    aguard = arrival_smoke_guard()
+    print("SMOKE,arrival_guard,topk_speedup_vs_sort,"
+          f"{aguard['K']['10000']['topk_speedup_vs_sort']},,", flush=True)
     bench_roofline(True)
 
 

@@ -23,9 +23,17 @@ Headline numbers land in ``BENCH_scale.json`` (README §Scaling the
 client axis); ``delta_flatness`` is rounds/s at the smallest K over
 rounds/s at K, per K (acceptance: within 1.3x through K=1e4).
 
+The :func:`bench_arrival` legs isolate the event *scheduler*: the delta
+runner with ``arrival`` = ``sort`` (per-event O(K log K) lexsort) vs
+``topk`` (O(K)-work composite-key ``lax.top_k`` pop, bit-identical) vs
+``topk:sharded`` (per-shard pop + merge through shard_map). At K=1e6
+the lexsort dominates the event, so ``topk_speedup_vs_sort`` is the
+tentpole headline.
+
   PYTHONPATH=src python -m benchmarks.scale [--events 16] [--cohort 8]
-  PYTHONPATH=src python -m benchmarks.scale --smoke   # CI guard:
-      asserts delta rounds/s >= dense at the K=1e4 micro config
+  PYTHONPATH=src python -m benchmarks.scale --smoke   # CI guards:
+      asserts delta rounds/s >= dense AND topk >= sort at the K=1e4
+      micro config
 """
 from __future__ import annotations
 
@@ -67,13 +75,14 @@ def _cohort_batches(cohort: int, T: int, Bk: int, num_classes: int = 10):
 
 
 def _mk_leg(model, wc, ws, *, K: int, cohort: int, snapshots: str,
-            ring: int):
+            ring: int, arrival: str = "sort", mesh=None):
     sc = ScalaConfig(lr=0.05)
     dm = fed.make_delays("lognormal:1:1")
     runner = jax.jit(fed.make_async_runner(
         model, sc, backend="logits", delays=dm, cohort=cohort,
         snapshots=snapshots, ring_size=ring, num_clients=K,
-        emit_client_metrics=False), donate_argnums=(0, 1))
+        emit_client_metrics=False, arrival=arrival, mesh=mesh),
+        donate_argnums=(0, 1))
     slots = 1 if snapshots == "delta" else K
     params = {"client": stack_client_params(wc, slots), "server": ws}
     # the stacked client half and the afed snapshots alias the same
@@ -82,7 +91,9 @@ def _mk_leg(model, wc, ws, *, K: int, cohort: int, snapshots: str,
                          engine.init_train_state(params, optim.sgd()))
     afed = fed.init_async_state(jax.random.PRNGKey(1), params["client"], dm,
                                 snapshots=snapshots, ring_size=ring,
-                                num_clients=K)
+                                num_clients=K,
+                                mesh=mesh if arrival == "topk:sharded"
+                                else None)
     return runner, state, afed
 
 
@@ -148,6 +159,62 @@ def bench_scale(ks=KS, cohort: int = 8, T: int = 2, Bk: int = 4,
     return res
 
 
+ARRIVAL_KS = (10_000, 1_000_000)
+
+
+def bench_arrival(ks=ARRIVAL_KS, cohort: int = 8, T: int = 2, Bk: int = 4,
+                  events: int = 16, width: float = 0.03125, ring: int = 64,
+                  reps: int = 3):
+    """The arrival-pop microbench: sort vs topk vs topk:sharded event
+    rate on the delta runner (the schedule pop is the only thing that
+    differs — the training work per event is identical, so the rate
+    ratio isolates the pop).
+
+    The legacy per-event lexsort is O(K log K) and dominates the event
+    at K=1e6; the composite-key top-k pop is O(K) work on the fast f32
+    ``lax.top_k`` path and bit-identical (tests/test_arrival.py). The
+    ``topk:sharded`` leg runs the per-shard pop + merge through
+    ``shard_map`` over ALL local devices — on a single-device CPU bench
+    box that measures the shard_map overhead, not a distribution win
+    (``shards`` in the config says which); its purpose at scale is the
+    memory layout (no (K,) scalar ever resident on one device), not
+    single-host rate.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    model, wc, ws = _setup_model(width)
+    batches = _cohort_batches(cohort, T, Bk)
+    mesh = Mesh(np.asarray(jax.devices()), ("data",))
+    res = {
+        "config": {"cohort": cohort, "local_iters": T,
+                   "per_client_batch": Bk, "events": events,
+                   "model": f"alexnet-w{width}", "ring_size": ring,
+                   "delays": "lognormal:1:1", "snapshots": "delta",
+                   "shards": jax.device_count()},
+        "K": {},
+    }
+    for K in ks:
+        entry = {}
+        for arrival in ("sort", "topk", "topk:sharded"):
+            # the sort leg at K=1e6 runs ~1.5 ev/s — time fewer events
+            # there so the sweep stays tractable (rates are normalized)
+            ev = (max(2, events // 8)
+                  if arrival == "sort" and K > 100_000 else events)
+            runner, state, afed = _mk_leg(
+                model, wc, ws, K=K, cohort=cohort, snapshots="delta",
+                ring=ring, arrival=arrival,
+                mesh=mesh if arrival == "topk:sharded" else None)
+            timing, _ = _time_leg(runner, state, afed, batches, ev,
+                                  reps=reps)
+            entry[arrival] = timing
+        entry["topk_speedup_vs_sort"] = round(
+            entry["topk"]["rounds_per_sec"]
+            / entry["sort"]["rounds_per_sec"], 3)
+        res["K"][str(K)] = entry
+    return res
+
+
 def smoke_guard():
     """The delta-vs-dense regression guard shared by
     ``benchmarks.scale --smoke`` and ``benchmarks.run --smoke``.
@@ -172,6 +239,28 @@ def smoke_guard():
     return res
 
 
+def arrival_smoke_guard():
+    """The topk-vs-sort pop regression guard shared by
+    ``benchmarks.scale --smoke`` and ``benchmarks.run --smoke``.
+
+    The top-k pop replaces the per-event lexsort with strictly less
+    work; asserts topk events/s >= sort at the K=1e4 micro config, with
+    the same one-re-measure-on-noise policy as :func:`smoke_guard`.
+    Returns the last measured result dict."""
+    res = None
+    for attempt in (0, 1):
+        res = bench_arrival(ks=(10_000,), events=8, reps=3)
+        ratio = res["K"]["10000"]["topk_speedup_vs_sort"]
+        print(f"topk-vs-sort event rate ratio at K=1e4: {ratio}"
+              + (" (retry)" if attempt else ""))
+        if ratio >= 1.0:
+            break
+    assert ratio >= 1.0, (
+        f"topk arrival pop regressed: {ratio}x the lexsort event rate "
+        "at K=1e4 (expected >= 1; reproduced twice)")
+    return res
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ks", type=int, nargs="+", default=list(KS))
@@ -190,11 +279,15 @@ def main():
 
     if args.smoke:
         res = smoke_guard()
+        res["arrival_smoke"] = arrival_smoke_guard()["K"]
     else:
         res = bench_scale(ks=tuple(args.ks), cohort=args.cohort, T=args.T,
                           Bk=args.batch, events=args.events,
                           width=args.width, ring=args.ring,
                           dense_max_k=args.dense_max_k)
+        res["arrival"] = bench_arrival(cohort=args.cohort, T=args.T,
+                                       Bk=args.batch, events=args.events,
+                                       width=args.width, ring=args.ring)
     from benchmarks.common import emit_bench
     emit_bench(res, args.out, "BENCH_scale.json", args.smoke)
 

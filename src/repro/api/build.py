@@ -195,6 +195,9 @@ def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
     if ex.backend == "lace_dp" and (mesh is None or batch_specs is None):
         raise ValueError("backend 'lace_dp' needs build(spec, mesh=, "
                          "batch_specs=)")
+    if ex.arrival == "topk:sharded" and mesh is None:
+        raise ValueError("arrival 'topk:sharded' pops per client-mesh "
+                         "shard; it needs build(spec, mesh=)")
 
     if spec.method in SCALA_METHODS:
         program = _build_scala(spec, mesh=mesh, batch_specs=batch_specs)
@@ -206,6 +209,24 @@ def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
     program.metadata.update(precision=ex.precision,
                             rounds_per_call=ex.rounds_per_call,
                             donate=ex.donate)
+    if program.metadata.get("host_paged"):
+        # the host-paged step is a two-phase host loop (predict the pop,
+        # gather the cohort's moments from the host store, run the jitted
+        # event, scatter back) — it jits and donates its event internally
+        # and cannot be wrapped in an outer jit or fused across rounds.
+        if not jit:
+            raise ValueError("opt_paging='host' builds a host-side "
+                             "two-phase step (its event is jitted "
+                             "internally); jit=False is not supported")
+        init = program.init
+        if ex.donate:
+            # same donation-safety copy as the jitted path below: the
+            # paged event donates the state, so every init() must hand
+            # out fresh buffers.
+            _raw_init = program.init
+            init = lambda: jax.tree.map(jnp.copy, _raw_init())
+        return dataclasses.replace(program, init=init,
+                                   predict=jax.jit(program.predict))
     step = program.step
     if ex.rounds_per_call > 1:
         step = _fuse_rounds(step, ex.resolve_unroll())
@@ -272,6 +293,7 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
     if ex.mode == "async":
         delays = ex.make_delays()
         cohort = ex.resolve_cohort(slots)
+        paged = ex.opt_paging == "host"
         round_fn = fed.make_async_runner(
             model, sc, backend=ex.backend, optimizer=opt, schedule=sched,
             delays=delays, cohort=cohort,
@@ -281,21 +303,55 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             unroll=unroll, precision=ex.precision,
             snapshots=ex.snapshots, ring_size=ex.ring_size,
             lr_scale=ex.lr_scale, num_clients=slots,
+            arrival=ex.arrival, paged_opt=paged,
             mesh=mesh, batch_specs=batch_specs)
+        pager = (fed.HostOptPager(
+            opt, jax.tree.map(lambda a: a[0], params["client"]), slots)
+            if paged else None)
+        sched_mesh = mesh if ex.arrival == "topk:sharded" else None
 
         def init() -> ProgramState:
             afed = fed.init_async_state(
                 _fed_key(spec), params["client"], delays, aggregator=agg,
                 server_optimizer=server_opt, server_params=params["server"],
                 snapshots=ex.snapshots, ring_size=ex.ring_size,
-                num_clients=slots)
+                num_clients=slots, mesh=sched_mesh)
+            if pager is not None:
+                pager.reset()
             return ProgramState(inner=engine.init_train_state(params, opt),
                                 fed=afed)
 
-        def step(state: ProgramState, batches, sizes):
-            inner, afed, metrics = round_fn(state.inner, state.fed, batches,
-                                            sizes)
-            return ProgramState(inner=inner, fed=afed), metrics
+        if paged:
+            import numpy as np
+
+            # predict the arrival pop OUTSIDE the event with the same
+            # deterministic pop the event applies internally, so the
+            # host gather/scatter indices match the event's cohort
+            # exactly. np.asarray blocks until the pop has consumed the
+            # schedule scalars, making the event's donation safe.
+            pop = jax.jit(fed.make_arrival_pop(cohort, ex.arrival,
+                                               mesh=sched_mesh))
+
+            def ev_fn(state: ProgramState, batches, sizes, cohort_opt):
+                inner, afed, metrics, new_co = round_fn(
+                    state.inner, state.fed, batches, sizes, cohort_opt)
+                return ProgramState(inner=inner, fed=afed), metrics, new_co
+
+            ev = donated_jit(ev_fn, donate=ex.donate)
+
+            def step(state: ProgramState, batches, sizes):
+                idx = np.asarray(
+                    pop(state.fed.finish_time, state.fed.version)[0])
+                cohort_opt = pager.gather(idx)
+                new_state, metrics, new_co = ev(state, batches, sizes,
+                                                cohort_opt)
+                pager.scatter(idx, new_co)
+                return new_state, metrics
+        else:
+            def step(state: ProgramState, batches, sizes):
+                inner, afed, metrics = round_fn(state.inner, state.fed,
+                                                batches, sizes)
+                return ProgramState(inner=inner, fed=afed), metrics
 
         thread_fed = True
     else:
@@ -338,7 +394,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
         spec=spec, model=model, init=init, step=step, predict=predict,
         metadata=dict(method=spec.method, mode=ex.mode, slots=slots,
                       backend=ex.backend, thread_fed=thread_fed,
-                      snapshots=ex.snapshots))
+                      snapshots=ex.snapshots, arrival=ex.arrival,
+                      host_paged=ex.opt_paging == "host"))
 
 
 def _build_fl(spec: ExperimentSpec) -> RoundProgram:

@@ -279,6 +279,27 @@ class ExecutionSpec:
       movement matches the sync round's per-participant scale;
       ``"none"`` (default) is the historical behavior. At
       ``cohort == num_clients`` the two are bit-identical.
+    * ``arrival`` — the event scheduler's cohort-pop algorithm
+      (:data:`repro.fed.ARRIVALS`): ``"sort"`` is the legacy per-event
+      O(K log K) lexsort over (finish_time, version); ``"topk"``
+      replaces it with an O(K)-work / O(log K)-depth blocked-tournament
+      selection (``jax.lax.top_k`` over a composite float32 key) that
+      is bit-identical to the lexsort, FIFO tie-break included;
+      ``"topk:sharded"`` additionally runs the pop per client-mesh
+      shard (local top-cohort + one O(cohort·shards) merge) so no
+      device ever materializes (K,) schedule work — requires a mesh
+      with a client axis at build time.
+    * ``opt_paging`` — per-client optimizer-moment residency:
+      ``"none"`` keeps moments wherever ``fed.opt_state_policy`` puts
+      them; ``"host"`` pages them to a host-memory store
+      (:class:`repro.fed.HostOptPager`) and gathers only the arrival
+      cohort's slots per event, which *lifts* the delta-snapshot
+      restriction to stateless optimizers — ``snapshots='delta'`` +
+      ``opt_state_policy='carry'`` now runs with any optimizer without
+      a dense (K, ...) moment stack on device. Host paging requires
+      mode 'async', snapshots 'delta', opt_state_policy 'carry', and
+      ``rounds_per_call == 1`` (the pop/gather/scatter round-trip is
+      one host step per event).
     """
 
     mode: str = "masked"
@@ -295,10 +316,13 @@ class ExecutionSpec:
     snapshots: str = "dense"
     ring_size: int = 64
     lr_scale: str = "none"
+    arrival: str = "sort"
+    opt_paging: str = "none"
 
     def __post_init__(self):
         from repro.core.engine import BACKENDS, PRECISIONS
-        from repro.fed import LR_SCALES, SNAPSHOT_MODES, make_delays
+        from repro.fed import (ARRIVALS, LR_SCALES, SNAPSHOT_MODES,
+                               make_delays)
 
         if self.mode not in EXECUTION_MODES:
             raise ValueError(f"unknown execution mode {self.mode!r}; "
@@ -323,6 +347,12 @@ class ExecutionSpec:
         if self.lr_scale not in LR_SCALES:
             raise ValueError(f"unknown lr_scale {self.lr_scale!r}; "
                              f"expected {LR_SCALES}")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival {self.arrival!r}; "
+                             f"expected {ARRIVALS}")
+        if self.opt_paging not in ("none", "host"):
+            raise ValueError(f"unknown opt_paging {self.opt_paging!r}; "
+                             f"expected ('none', 'host')")
 
     @property
     def in_program(self) -> bool:
@@ -526,14 +556,48 @@ class ExperimentSpec:
                     "snapshots='delta' stores no per-client optimizer "
                     "state to average; use opt_state_policy 'reset' (or "
                     "'carry' with a stateless optimizer)")
-            if fd.opt_state_policy == "carry" and self.optim.name != "sgd":
+            if fd.opt_state_policy == "carry" and self.optim.name != "sgd" \
+                    and ex.opt_paging != "host":
                 raise ValueError(
                     f"snapshots='delta' cannot carry {self.optim.name!r} "
                     "per-client moments (no per-client state is stored); "
-                    "use optim 'sgd' or fed.opt_state_policy='reset'")
+                    "use optim 'sgd', fed.opt_state_policy='reset', or "
+                    "execution.opt_paging='host' (host-paged moment store)")
         if ex.lr_scale != "none" and ex.mode != "async":
             raise ValueError("lr_scale applies to mode 'async' only (the "
                              "cohort/K factor is an event-schedule knob)")
+        if ex.arrival != "sort" and ex.mode != "async":
+            raise ValueError(
+                f"arrival {ex.arrival!r} applies to mode 'async' only (the "
+                "cohort pop is an event-schedule op); mode "
+                f"{ex.mode!r} has no arrival schedule")
+        if ex.arrival == "topk:sharded" and ex.backend == "lace_dp":
+            raise ValueError(
+                "arrival 'topk:sharded' is redundant under backend "
+                "'lace_dp': the shard_map event already pops per client "
+                "shard; use arrival 'topk' (applied per shard)")
+        if ex.opt_paging == "host":
+            if ex.mode != "async":
+                raise ValueError(
+                    "opt_paging='host' pages the async runtime's per-client "
+                    f"moments; mode {ex.mode!r} has none")
+            if ex.snapshots != "delta" or fd.opt_state_policy != "carry":
+                raise ValueError(
+                    "opt_paging='host' exists to carry per-client moments "
+                    "outside the delta snapshot state; it requires "
+                    "snapshots='delta' and fed.opt_state_policy='carry' "
+                    f"(got snapshots={ex.snapshots!r}, "
+                    f"opt_state_policy={fd.opt_state_policy!r})")
+            if ex.rounds_per_call != 1:
+                raise ValueError(
+                    "opt_paging='host' steps one event per host "
+                    "pop/gather/scatter round-trip; rounds_per_call must "
+                    f"be 1, got {ex.rounds_per_call}")
+            if ex.backend == "lace_dp":
+                raise ValueError(
+                    "opt_paging='host' predicts the arrival pop outside the "
+                    "compiled event; backend 'lace_dp' pops per shard "
+                    "inside its shard_map and is not supported")
 
         # --- baselines ---
         if self.method not in SCALA_METHODS:

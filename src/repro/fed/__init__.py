@@ -44,14 +44,18 @@ from repro.fed.participation import (  # noqa: F401
     uniform,
 )
 from repro.fed.runtime import (  # noqa: F401
+    ARRIVALS,
     LR_SCALES,
     SNAPSHOT_MODES,
     AsyncFedState,
+    HostOptPager,
     arrival_cohort,
     async_state_bytes,
     init_async_state,
+    make_arrival_pop,
     make_async_runner,
     ring_lookup,
+    sharded_arrival_cohort,
 )
 
 

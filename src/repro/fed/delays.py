@@ -41,6 +41,27 @@ class DelayModel:
     name: str
     sample: Callable[[Any, Tuple[int, ...]], Any]
 
+    def sample_sharded(self, key, n: int, mesh):
+        """Sample ``(n,)`` delays laid out over ``mesh``'s client axes.
+
+        The client-mesh-sharded schedule path (``init_async_state(mesh=
+        ...)``, ``arrival="topk:sharded"``): the sampling program
+        compiles with the sharded output layout
+        (:func:`repro.sharding.logical.client_scalar_spec`), so XLA
+        partitions the counter-based threefry draw across the shards
+        instead of materializing the (K,) vector on one device and
+        re-laying it out. Threefry is value-deterministic, so the
+        result is bit-identical to ``sample(key, (n,))``.
+        """
+        from jax.sharding import NamedSharding
+
+        from repro.sharding.logical import client_scalar_spec
+
+        sharding = NamedSharding(mesh, client_scalar_spec(mesh, n))
+        fn = jax.jit(lambda k: self.sample(k, (n,)).astype(jnp.float32),
+                     out_shardings=sharding)
+        return fn(key)
+
 
 def constant(d: float = 1.0) -> DelayModel:
     """Every client takes exactly ``d`` time units. ``d=0`` makes the

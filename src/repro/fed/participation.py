@@ -142,7 +142,11 @@ def dirichlet(num_clients: int, frac: float,
         avail = g / jnp.maximum(g.sum(), 1e-8)
         score = jnp.log(avail + 1e-20) + jax.random.gumbel(
             k_gumbel, (num_clients,))
-        top = jnp.argsort(-score)[:m]
+        # lax.top_k == the stable descending argsort's first m entries:
+        # both take the m largest scores, equal scores to the lower
+        # slot id — selection-identical without the O(K log K) full
+        # sort (test-enforced in tests/test_arrival.py)
+        _, top = jax.lax.top_k(score, m)
         mask = jnp.zeros((num_clients,), jnp.float32).at[top].set(1.0)
         return mask, {"key": key}
 

@@ -58,9 +58,19 @@ Snapshot storage (``snapshots=``):
   retained version — bounded-staleness eviction: the straggler trains
   from a slightly newer global model than it was dispatched with,
   which only *reduces* its effective staleness. Per-client optimizer
-  state is not stored either, so ``"delta"`` requires a stateless
-  local optimizer (plain SGD — the paper's setting) or
-  ``opt_state_policy="reset"``.
+  state is not stored on device either, so ``"delta"`` requires a
+  stateless local optimizer (plain SGD — the paper's setting),
+  ``opt_state_policy="reset"``, or the **host-paged moment store**
+  (``paged_opt=True`` + :class:`HostOptPager`): the cold (K, ...)
+  moment stack lives in host memory and only the arrival cohort's rows
+  page to the device per event.
+
+The arrival pop itself has three implementations (:data:`ARRIVALS`,
+``arrival=``): the legacy O(K log K) lexsort, an O(K)-work composite-key
+``lax.top_k`` pop (bit-identical, including ties), and a client-mesh-
+sharded pop (per-shard top-k + O(cohort x shards) merge) that keeps the
+(K,) ``version``/``finish_time`` scalars sharded — at K=1e6 the lexsort
+IS the event cost, see ``benchmarks/BENCH_scale.json``.
 
 :class:`AsyncFedState` invariants (maintained by :func:`init_async_state`
 and every runner call; rely on them, don't re-derive):
@@ -108,6 +118,14 @@ from repro.optim import optimizers, schedules
 
 #: snapshot storage layouts for :class:`AsyncFedState`.
 SNAPSHOT_MODES = ("dense", "delta")
+
+#: arrival-pop implementations for the event schedule (see
+#: :func:`arrival_cohort` / :func:`sharded_arrival_cohort`): ``"sort"``
+#: is the legacy O(K log K) lexsort, ``"topk"`` the O(K)-work composite
+#: -key ``lax.top_k`` pop (bit-identical), ``"topk:sharded"`` the
+#: client-mesh-sharded pop (per-shard local top-k + one O(cohort x
+#: shards) merge, bit-identical to the single-device pop).
+ARRIVALS = ("sort", "topk", "topk:sharded")
 
 #: per-arrival lr scaling policies (see :func:`make_async_runner`).
 LR_SCALES = ("none", "cohort")
@@ -163,7 +181,8 @@ def init_async_state(key, client_params, delays: DelayModel, *,
                      server_params=None,
                      snapshots: str = "dense",
                      ring_size: int = 64,
-                     num_clients: Optional[int] = None) -> AsyncFedState:
+                     num_clients: Optional[int] = None,
+                     mesh=None) -> AsyncFedState:
     """Dispatch all K clients at version 0.
 
     ``client_params`` is the stacked client half (every slot holds the
@@ -180,6 +199,16 @@ def init_async_state(key, client_params, delays: DelayModel, *,
     halves instead — O(ring_size), not O(K). ``ring_size`` bounds the
     reconstructable staleness (see the module docstring's eviction
     semantics).
+
+    With ``mesh=`` the (K,) schedule scalars — ``version`` and
+    ``finish_time`` — are laid out sharded over the mesh's client axes
+    (:func:`repro.sharding.logical.client_scalar_spec`), and the initial
+    delay sampling compiles with that output sharding
+    (:meth:`repro.fed.delays.DelayModel.sample_sharded` — threefry is
+    value-deterministic, so the sharded init is bit-identical to the
+    unsharded one). Pair with ``make_async_runner(arrival=
+    "topk:sharded", mesh=...)`` so no event materializes the (K,)
+    scalars on one device.
     """
     if snapshots not in SNAPSHOT_MODES:
         raise ValueError(f"unknown snapshots mode {snapshots!r}; expected "
@@ -205,11 +234,21 @@ def init_async_state(key, client_params, delays: DelayModel, *,
                                  jnp.int32).at[0].set(0)
     else:
         snap, ring, ring_versions = client_params, (), ()
+    version = jnp.zeros((K,), jnp.int32)
+    finish_time = delays.sample(k_delay, (K,)).astype(jnp.float32)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from repro.sharding.logical import client_scalar_spec
+
+        spec = client_scalar_spec(mesh, K)
+        version = jax.device_put(version, NamedSharding(mesh, spec))
+        finish_time = delays.sample_sharded(k_delay, K, mesh)
     return AsyncFedState(
         client_params=snap,
-        version=jnp.zeros((K,), jnp.int32),
+        version=version,
         server_version=jnp.zeros((), jnp.int32),
-        finish_time=delays.sample(k_delay, (K,)).astype(jnp.float32),
+        finish_time=finish_time,
         now=jnp.zeros((), jnp.float32),
         key=k_carry,
         agg_state=aggregator.init(K) if aggregator is not None else (),
@@ -219,7 +258,69 @@ def init_async_state(key, client_params, delays: DelayModel, *,
         ring_versions=ring_versions)
 
 
-def arrival_cohort(finish_time, cohort: int, version=None):
+def _pop_topk(finish_time, version, cohort: int):
+    """O(K)-work selection of the ``cohort`` minima under the composite
+    lexicographic key (finish_time, version, slot).
+
+    The composite key never materializes as one word — no available
+    dtype holds an exact (f32, i32, i32) pack — so the selection runs as
+    a short ladder of **float32** ``lax.top_k`` stages, one per key
+    component, each refining the boundary tie set of the previous one:
+
+    1. ``finish_time`` (native f32): one top-k gives the boundary value
+       ``b`` (the cohort-th earliest finish); everything strictly
+       earlier is selected, the ties at ``b`` continue.
+    2. ``version`` split into its 16-bit halves (``v >> 16`` and
+       ``v & 0xffff`` — two's-complement floor decomposition, each half
+       exactly representable in f32, lexicographically monotone in
+       ``v``): two more masked top-k passes over the tie set.
+    3. slot id: ``lax.top_k`` breaks equal values by *lower index
+       first*, so one final top-k over the residual tie mask pops the
+       remaining slots in ascending id order.
+
+    Every stage is O(K) work / O(log K) depth and stays on XLA's fast
+    f32 TopK path — int32 ``top_k`` would do stage 2 in one pass but
+    lowers to a full O(K log K) sort on CPU, which is the cost this
+    function exists to remove. Bit-identical to the lexsort pop
+    (test-enforced in ``tests/test_arrival.py``), including the FIFO
+    tie-break that prevents slot starvation.
+    """
+    K = finish_time.shape[0]
+    stages = [finish_time]
+    if version is not None:
+        v = version.astype(jnp.int32)
+        stages += [(v >> 16).astype(jnp.float32),
+                   (v & 0xFFFF).astype(jnp.float32)]
+    selected = jnp.zeros((K,), jnp.bool_)
+    eligible = jnp.ones((K,), jnp.bool_)
+    need = jnp.int32(cohort)            # stays >= 1: strictly-below-the-
+    for k in stages:                    # boundary counts are < need
+        kk = jnp.where(eligible, k.astype(jnp.float32), jnp.inf)
+        # the barrier keeps XLA from constant-folding a static slice of
+        # the top_k output into its sort-based rewrite (a full O(K log K)
+        # sort on CPU — the exact cost this pop exists to remove); with
+        # it the fast O(K) TopK custom call survives even on the first
+        # stage, where `need` is still the trace-time constant `cohort`
+        vals = jax.lax.optimization_barrier(jax.lax.top_k(-kk, cohort)[0])
+        b = -jnp.take(vals, need - 1)   # need-th smallest eligible key
+        strict = eligible & (kk < b)
+        selected |= strict
+        need -= strict.sum(dtype=jnp.int32)
+        eligible &= kk == b
+    # the residual ties differ only in slot id: top_k's lower-index-
+    # first rule pops the `need` lowest ids (the lexsort's stability)
+    tvals, tidx = jax.lax.top_k(eligible.astype(jnp.float32), cohort)
+    take = (jnp.arange(cohort, dtype=jnp.int32) < need) & (tvals > 0)
+    selected |= jnp.zeros((K,), jnp.bool_).at[tidx].set(take, mode="drop")
+    # ascending idx: all selected values are equal, ties -> index order
+    _, idx = jax.lax.top_k(selected.astype(jnp.float32), cohort)
+    mask = selected.astype(jnp.float32)
+    t_event = jnp.max(jnp.take(finish_time, idx))
+    return idx, mask, t_event
+
+
+def arrival_cohort(finish_time, cohort: int, version=None,
+                   method: str = "sort"):
     """The event schedule's pop: the ``cohort`` earliest finishers.
 
     Returns (idx (cohort,) ascending slot ids, mask (K,) 0/1 float32,
@@ -230,7 +331,19 @@ def arrival_cohort(finish_time, cohort: int, version=None):
     constant-tied delays with ``cohort < K``) would re-arm the lowest
     slot ids at the same finish time and starve every other slot; with
     it, zero delays pop slots round-robin in blocks of ``cohort``.
+
+    ``method`` picks the implementation (:data:`ARRIVALS`): ``"sort"``
+    is the O(K log K) lexsort, ``"topk"`` the O(K)-work composite-key
+    :func:`_pop_topk` — **bit-identical** outputs, including every tie
+    case (test-enforced). The mesh-sharded pop is
+    :func:`sharded_arrival_cohort`.
     """
+    if method == "topk":
+        return _pop_topk(finish_time, version, cohort)
+    if method != "sort":
+        raise ValueError(f"unknown arrival method {method!r}; expected "
+                         "'sort' or 'topk' (use sharded_arrival_cohort "
+                         "for 'topk:sharded')")
     if version is None:
         order = jnp.argsort(finish_time)
     else:
@@ -240,6 +353,85 @@ def arrival_cohort(finish_time, cohort: int, version=None):
     mask = jnp.zeros((K,), jnp.float32).at[idx].set(1.0)
     t_event = jnp.max(jnp.take(finish_time, idx))
     return idx, mask, t_event
+
+
+def sharded_arrival_cohort(finish_time, cohort: int, version, *, mesh):
+    """The pop with the (K,) schedule scalars sharded over the client
+    mesh axes: per-shard local top-``cohort`` candidates + one
+    O(cohort x shards) merge. Bit-identical to the single-device pop.
+
+    Each shard runs :func:`_pop_topk` on its local (K/S,) slice under
+    the SAME composite (finish_time, version, slot) order — the global
+    top-``cohort`` is contained in the union of per-shard top-cohorts,
+    because any globally selected slot has fewer than ``cohort``
+    predecessors globally, hence fewer within its own shard. The
+    all-gathered ``S x min(cohort, K/S)`` candidate triples are merged
+    with one small lexsort (slot id as the final key makes the merge
+    deterministic and exact). No step materializes a (K,) array on one
+    device: the inputs stay sharded, the merge is O(cohort x shards),
+    and the returned ``mask`` is sharded like the inputs.
+
+    Returns (idx (cohort,) global slot ids ascending — replicated,
+    mask (K,) float32 sharded over the client axes, t_event —
+    replicated).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    axes = engine.mesh_axes(mesh)
+    n_shards = engine.client_shard_count(mesh)
+    K = finish_time.shape[0]
+    if K % n_shards:
+        raise ValueError(f"{K} client slots must divide over the "
+                         f"{n_shards} client shards for the sharded pop")
+    K_l = K // n_shards
+    c_l = min(cohort, K_l)
+    cspec = P(axes.client or None)
+
+    def body(ft_l, v_l):
+        li, _, _ = _pop_topk(ft_l, v_l, c_l)
+        shard_ix = jnp.int32(0)
+        for a in axes.client:
+            shard_ix = shard_ix * dict(mesh.shape)[a] + jax.lax.axis_index(a)
+        cand = (jnp.take(ft_l, li), jnp.take(v_l, li), li + shard_ix * K_l)
+        if axes.client:
+            cand = tuple(jax.lax.all_gather(c, axes.client, tiled=True)
+                         for c in cand)
+        ft_c, v_c, g_c = cand
+        # O(cohort x shards) merge under the composite order; global
+        # slot ids are distinct so the order is total and exact
+        order = jnp.lexsort((g_c, v_c, ft_c))[:cohort]
+        idx = jnp.sort(jnp.take(g_c, order))
+        t_event = jnp.max(jnp.take(ft_c, order))
+        loc = idx - shard_ix * K_l
+        loc = jnp.where((loc >= 0) & (loc < K_l), loc, K_l)
+        mask_l = jnp.zeros((K_l,), jnp.float32).at[loc].set(1.0, mode="drop")
+        return idx, mask_l, t_event
+
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(cspec, cspec),
+                          out_specs=(P(), cspec, P()), check_vma=False)
+    return fn(finish_time, version)
+
+
+def make_arrival_pop(cohort: int, arrival: str = "sort", *, mesh=None):
+    """The configured pop as one function ``pop(finish_time, version) ->
+    (idx, mask, t_event)`` (:data:`ARRIVALS` vocabulary).
+
+    The async runner builds its in-event pop through this, and the
+    host-paged optimizer path (:class:`HostOptPager`) uses the SAME
+    constructor for its pre-event idx prediction — the two pops are the
+    same deterministic function of the same state, so the host gather
+    always addresses the slots the event actually pops.
+    """
+    if arrival not in ARRIVALS:
+        raise ValueError(f"unknown arrival {arrival!r}; expected {ARRIVALS}")
+    if arrival == "topk:sharded":
+        if mesh is None:
+            raise ValueError("arrival='topk:sharded' needs mesh= (the "
+                             "client axes the schedule scalars shard over)")
+        return lambda ft, v: sharded_arrival_cohort(ft, cohort, v, mesh=mesh)
+    return lambda ft, v: arrival_cohort(ft, cohort, v, method=arrival)
 
 
 def ring_lookup(ring, versions, server_version, ring_size: int):
@@ -281,6 +473,74 @@ def async_state_bytes(afed: AsyncFedState) -> dict:
             "per_client_scalar_bytes": per_client,
             "other_bytes": other,
             "total_bytes": snap + per_client + other}
+
+
+class HostOptPager:
+    """Host-paged per-client optimizer moments for ``opt_state_policy=
+    "carry"`` at large K.
+
+    ``snapshots="delta"`` keeps the param-sized async state O(cohort +
+    ring) but stores no per-client optimizer state, which restricted it
+    to stateless sgd or ``opt_state_policy="reset"``. The pager lifts
+    that restriction without re-growing device memory: the cold (K, ...)
+    moment stack lives in **host memory** (numpy buffers, paged to the
+    device on demand), and each event gathers only the arrival cohort's
+    ``(cohort, ...)`` rows to the device, feeds them through the local
+    scan as the cohort's carried moments, and scatters the updated rows
+    back. Device-resident optimizer state stays O(cohort); host state is
+    O(K x |moments|) where it is cheap.
+
+    Choreography (what :func:`repro.api.build` wires up for
+    ``ExecutionSpec.opt_paging="host"``):
+
+    1. ``pop = make_arrival_pop(cohort, arrival, ...)`` predicts the
+       event's arrival ``idx`` from ``afed`` — the same deterministic
+       function the event program applies internally, so the prediction
+       is exact.
+    2. ``cohort_opt = pager.gather(idx)`` pages the cohort's moments in.
+    3. the paged event (``make_async_runner(paged_opt=True)``) consumes
+       ``cohort_opt`` and returns the post-scan moments as a fourth
+       output.
+    4. ``pager.scatter(idx, new_cohort_opt)`` pages them back out.
+
+    One pager backs one live training state (it is mutable host
+    memory); call :meth:`reset` when re-initializing the state.
+    """
+
+    def __init__(self, opt: optimizers.Optimizer, client_template,
+                 num_clients: int):
+        """``client_template`` is ONE client's (unstacked) client half;
+        the store is ``num_clients`` stacked rows of
+        ``opt.init(client_template)``'s shapes (zero-initialized,
+        exactly ``vmap(opt.init)`` over identical snapshots)."""
+        proto = jax.eval_shape(opt.init, client_template)
+        self.num_clients = num_clients
+        self._store = jax.tree.map(
+            lambda s: np.zeros((num_clients,) + tuple(s.shape), s.dtype),
+            proto)
+
+    def reset(self):
+        """Zero every moment row (a fresh ``opt.init`` for all K)."""
+        jax.tree.map(lambda a: a.fill(0), self._store)
+
+    def gather(self, idx):
+        """Page rows ``idx`` in: host (K, ...) -> device (cohort, ...)."""
+        idx = np.asarray(idx)
+        return jax.tree.map(lambda a: jnp.asarray(a[idx]), self._store)
+
+    def scatter(self, idx, cohort_opt):
+        """Page the cohort's updated moments back out to rows ``idx``."""
+        idx = np.asarray(idx)
+
+        def put(a, s):
+            a[idx] = np.asarray(s).astype(a.dtype, copy=False)
+            return a
+
+        jax.tree.map(put, self._store, cohort_opt)
+
+    def nbytes(self) -> int:
+        """Host-resident bytes of the cold moment stack."""
+        return int(sum(a.nbytes for a in jax.tree.leaves(self._store)))
 
 
 def _resolve_schedule(schedule, scala: ScalaConfig, lr_scale: str,
@@ -331,6 +591,8 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       lr_scale: str = "none",
                       num_clients: Optional[int] = None,
                       emit_client_metrics: bool = True,
+                      arrival: str = "sort",
+                      paged_opt: bool = False,
                       mesh=None, batch_specs=None):
     """Build the async event program: ``async_fn(state, afed,
     round_batches, data_sizes=None) -> (state, afed, metrics)``.
@@ -385,6 +647,23 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
     * ``emit_client_metrics`` — include the (K,) ``arrival_mask`` /
       ``staleness`` vectors in the metrics (default). Disable at large K
       so the per-event host transfer stays O(cohort).
+    * ``arrival`` — the pop implementation (:data:`ARRIVALS`):
+      ``"sort"`` the legacy O(K log K) lexsort, ``"topk"`` the O(K)-work
+      composite-key ``lax.top_k`` pop (bit-identical, the large-K
+      default-to-be), ``"topk:sharded"`` the client-mesh-sharded pop —
+      pass ``mesh=`` (its client axes; works with any backend) and
+      initialize with ``init_async_state(mesh=...)`` so the (K,)
+      schedule scalars never land on one device. Under
+      ``backend="lace_dp"`` the pop is already per-shard; ``"sort"`` /
+      ``"topk"`` pick the local method there and ``"topk:sharded"`` is
+      rejected.
+    * ``paged_opt`` — host-paged per-client optimizer moments
+      (:class:`HostOptPager`; requires ``snapshots="delta"`` and
+      ``opt_state_policy="carry"``). The event takes an extra
+      ``cohort_opt`` argument (the cohort's paged-in moments, replacing
+      the fresh ``opt.init`` delta snapshots otherwise use) and returns
+      the post-scan moments as a FOURTH output for the pager to write
+      back — this is what lifts delta's stateless/reset restriction.
     * ``mesh`` / ``batch_specs`` — required iff ``backend="lace_dp"``:
       the whole event runs inside one ``shard_map`` with the client axis
       sharded over the mesh's client axes; each shard pops
@@ -417,12 +696,28 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             "stateless optimizer)")
     if cohort < 1:
         raise ValueError(f"cohort must be >= 1, got {cohort}")
+    if arrival not in ARRIVALS:
+        raise ValueError(f"unknown arrival {arrival!r}; expected {ARRIVALS}")
+    if paged_opt and (snapshots != "delta" or opt_state_policy != "carry"):
+        raise ValueError(
+            "paged_opt pages per-client moments for snapshots='delta' + "
+            "opt_state_policy='carry' (dense snapshots already store them "
+            f"on device); got snapshots={snapshots!r}, "
+            f"opt_state_policy={opt_state_policy!r}")
     delta = snapshots == "delta"
     opt = optimizer if optimizer is not None else optimizers.sgd()
     agg = aggregator if aggregator is not None else _agg.weighted()
     sched = _resolve_schedule(schedule, scala, lr_scale, cohort, num_clients)
 
     if backend == "lace_dp":
+        if arrival == "topk:sharded":
+            raise ValueError(
+                "backend 'lace_dp' pops per shard already (the balanced "
+                "two-tier schedule); arrival 'sort' or 'topk' picks its "
+                "local pop method")
+        if paged_opt:
+            raise ValueError("paged_opt is not supported on the lace_dp "
+                             "event (its delta path keeps moments local)")
         return _make_async_runner_dp(
             model, scala, delays=delays, cohort=cohort, opt=opt, sched=sched,
             ce_chunk=ce_chunk, staleness_decay=staleness_decay,
@@ -430,27 +725,33 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             server_lr=server_lr, opt_state_policy=opt_state_policy,
             unroll=unroll, precision=precision, delta=delta,
             ring_size=ring_size, emit_client_metrics=emit_client_metrics,
-            mesh=mesh, batch_specs=batch_specs)
+            arrival=arrival, mesh=mesh, batch_specs=batch_specs)
+    pop = make_arrival_pop(cohort, arrival, mesh=mesh)
 
     step = engine.make_split_step(model, scala, backend=backend,
                                   optimizer=opt, schedule=sched,
                                   ce_chunk=ce_chunk, precision=precision)
 
     def async_fn(state: engine.TrainState, afed: AsyncFedState,
-                 round_batches, data_sizes=None):
+                 round_batches, data_sizes=None, cohort_opt=None):
         K = afed.version.shape[0]
         if cohort > K:
             raise ValueError(f"cohort {cohort} exceeds the {K} client slots")
-        if delta and opt_state_policy == "carry" \
+        if paged_opt and cohort_opt is None:
+            raise ValueError(
+                "the paged event needs cohort_opt= (the arrival cohort's "
+                "paged-in moments — HostOptPager.gather over the idx "
+                "make_arrival_pop predicts)")
+        if delta and not paged_opt and opt_state_policy == "carry" \
                 and jax.tree.leaves(state.opt_state["client"]):
             raise ValueError(
                 "snapshots='delta' cannot carry per-client optimizer "
                 "moments (none are stored); use a stateless optimizer "
-                "(plain sgd) or opt_state_policy='reset'")
+                "(plain sgd), opt_state_policy='reset', or the host-paged "
+                "moment store (paged_opt=True + HostOptPager)")
 
         # --- event pop: who arrives, and when ---
-        idx, arrival_mask, t_event = arrival_cohort(afed.finish_time, cohort,
-                                                    afed.version)
+        idx, arrival_mask, t_event = pop(afed.finish_time, afed.version)
         staleness = (afed.server_version - afed.version).astype(jnp.float32)
 
         # --- sparse-slot local compute from the per-client snapshots:
@@ -459,9 +760,13 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
         if delta:
             snap_c, _ = ring_lookup(afed.ring, jnp.take(afed.version, idx),
                                     afed.server_version, ring_size)
+            # carried moments: the paged-in rows when paging, else the
+            # fresh init delta snapshots otherwise imply
+            opt_sub = (cohort_opt if paged_opt
+                       else jax.vmap(opt.init)(snap_c))
             sub = engine.TrainState(
                 params={"client": snap_c, "server": state.params["server"]},
-                opt_state={"client": jax.vmap(opt.init)(snap_c),
+                opt_state={"client": opt_sub,
                            "server": state.opt_state["server"]},
                 step=state.step)
         else:
@@ -583,6 +888,8 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
         else:
             metrics.update(staleness_mean=jnp.take(staleness, idx).mean())
         metrics.update(t_event=t_event, server_version=new_version)
+        if paged_opt:
+            return new_state, new_afed, metrics, sub.opt_state["client"]
         return new_state, new_afed, metrics
 
     return async_fn
@@ -606,7 +913,7 @@ def _make_async_runner_dp(model, scala, *, delays, cohort, opt, sched,
                           ce_chunk, staleness_decay, mix_rate, agg,
                           server_optimizer, server_lr, opt_state_policy,
                           unroll, precision, delta, ring_size,
-                          emit_client_metrics, mesh, batch_specs):
+                          emit_client_metrics, arrival, mesh, batch_specs):
     """The whole async event inside one ``shard_map`` (backend lace_dp).
 
     See :func:`make_async_runner` — this builds the same
@@ -679,9 +986,10 @@ def _make_async_runner_dp(model, scala, *, delays, cohort, opt, sched,
             ring_versions=P() if delta else ())
 
         def body(st, af, rb, sizes_l):
-            # --- per-shard pop of the local cohort ---
+            # --- per-shard pop of the local cohort (arrival= picks the
+            # lexsort or the O(K_l)-work top-k; same schedule either way)
             idx, a_mask_l, t_l = arrival_cohort(af.finish_time, cohort_l,
-                                                af.version)
+                                                af.version, method=arrival)
             t_event = (jax.lax.pmax(t_l, axes.client) if axes.client
                        else t_l)
             stal_l = (af.server_version - af.version).astype(jnp.float32)

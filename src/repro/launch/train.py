@@ -125,7 +125,8 @@ def spec_from_args(args) -> api.ExperimentSpec:
             rounds_per_call=args.rounds_per_call,
             donate=not args.no_donate,
             snapshots=args.snapshots, ring_size=args.ring_size,
-            lr_scale=args.lr_scale),
+            lr_scale=args.lr_scale, arrival=args.arrival,
+            opt_paging=args.opt_paging),
         data=api.DataSpec(kind="lm_synthetic", seq=args.seq,
                           docs_per_client=args.docs_per_client))
 
@@ -189,6 +190,17 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("none", "cohort"),
                     help="async learning-rate scaling: cohort multiplies "
                          "the schedule by cohort/clients")
+    ap.add_argument("--arrival", default="sort",
+                    choices=("sort", "topk", "topk:sharded"),
+                    help="async cohort-pop algorithm: sort = per-event "
+                         "(K,) lexsort; topk = O(K)-work top-k pop "
+                         "(bit-identical); topk:sharded adds a per-shard "
+                         "pop + small merge on the client mesh")
+    ap.add_argument("--opt-paging", default="none",
+                    choices=("none", "host"),
+                    help="host = page per-client optimizer moments to a "
+                         "host store and gather only the arrival cohort "
+                         "per event (delta+carry with any optimizer)")
     ap.add_argument("--local-iters", type=int, default=5)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--server-batch", type=int, default=16)

@@ -157,6 +157,16 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, PartitionSpec())
 
 
+def client_scalar_spec(mesh: Mesh, n: int) -> PartitionSpec:
+    """PartitionSpec for a (K,) per-client *schedule scalar* — the async
+    runtime's ``version`` / ``finish_time`` tags and sampled delays
+    (``fed.runtime.init_async_state(mesh=...)``). Resolves the "client"
+    logical axis against this mesh with the standard divisibility
+    fallback: replicated when K does not divide the client shard count.
+    """
+    return spec_for(("client",), (n,), mesh)
+
+
 # ---------------------------------------------------------------------------
 # in-graph activation constraints (§Perf iteration 1)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,416 @@
+"""O(K)-work event scheduling: equivalence suite.
+
+The acceptance bars for the arrival-pop refactor:
+
+(a) the composite-key top-k pop (``arrival="topk"``) is *bit-identical*
+    to the legacy per-event lexsort — same idx, mask, and t_event on
+    every schedule, including the version FIFO tie-break and the slot-id
+    stability rule — both at the pop level and over whole runner event
+    sequences;
+(b) the mesh-sharded pop (``arrival="topk:sharded"``) matches the
+    single-device pop exactly on a multi-device mesh (subprocess with a
+    forced 4-device CPU topology), as do the sharded schedule-scalar
+    layouts (``init_async_state(mesh=...)`` / ``delays.sample_sharded``);
+(c) the host-paged optimizer store (``opt_paging="host"``) makes
+    delta+carry bitwise-identical to dense+carry for a *stateful*
+    optimizer (momentum) — the restriction it lifts — while keeping the
+    device moment stack at one slot;
+(d) the satellite selection rewrites (dirichlet Gumbel-top-k via
+    ``lax.top_k``, ``slot_gather_indices`` via cumsum compaction) are
+    selection-identical to the argsort code they replaced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fed, optim
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.core.scala import alexnet_split_model
+from repro.models import alexnet as A
+
+
+def _setup_alexnet(key, C=4, num_classes=10):
+    model = alexnet_split_model("s2", num_classes=num_classes)
+    full = A.init_params(key, num_classes=num_classes, width=0.0625)
+    wc, ws = A.split_params(full, "s2")
+    params = {"client": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), wc),
+        "server": ws}
+    return model, params, wc
+
+
+def _round_batches(key, T_steps=2, C=4, Bk=4, num_classes=10):
+    kx, ky = jax.random.split(key)
+    return {"x": jax.random.normal(kx, (T_steps, C, Bk, 32, 32, 3)),
+            "labels": jax.random.randint(ky, (T_steps, C, Bk), 0,
+                                         num_classes),
+            "weights": jnp.ones((T_steps, C, Bk), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# (a) topk pop == lexsort pop, bit for bit
+# --------------------------------------------------------------------------
+
+
+def _random_schedule(rng, K):
+    kind = rng.integers(4)
+    if kind == 0:
+        ft = np.zeros(K, np.float32)
+    elif kind == 1:
+        ft = np.full(K, float(rng.integers(1, 5)), np.float32)
+    elif kind == 2:
+        ft = rng.lognormal(0.0, 1.0, K).astype(np.float32)
+    else:
+        # integer-valued: maximal finish-time ties
+        ft = rng.integers(0, 3, K).astype(np.float32)
+    if rng.integers(2):
+        v = rng.integers(0, rng.choice([4, 1 << 20, 1 << 30]),
+                         K).astype(np.int32)
+    else:
+        v = None
+    return jnp.asarray(ft), None if v is None else jnp.asarray(v)
+
+
+def test_topk_pop_bit_identical_to_lexsort_randomized():
+    rng = np.random.default_rng(0)
+    for K, cohort in [(7, 1), (7, 3), (7, 7), (16, 4), (16, 11)]:
+        for _ in range(8):
+            ft, v = _random_schedule(rng, K)
+            ref = fed.arrival_cohort(ft, cohort, v, method="sort")
+            new = fed.arrival_cohort(ft, cohort, v, method="topk")
+            for r, n in zip(ref, new):
+                np.testing.assert_array_equal(np.asarray(r), np.asarray(n))
+
+
+def test_topk_pop_known_tiebreaks():
+    # finish-time tie -> lowest version (FIFO), then lowest slot id
+    ft = jnp.array([1.0, 1.0, 1.0, 2.0])
+    v = jnp.array([5, 3, 3, 0], jnp.int32)
+    idx, mask, t = fed.arrival_cohort(ft, 2, v, method="topk")
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2])
+    np.testing.assert_array_equal(np.asarray(mask), [0, 1, 1, 0])
+    assert float(t) == 1.0
+    # negative versions (never produced by the runtime, but the two's-
+    # complement split must stay monotone): -2 pops before 1
+    idx, _, _ = fed.arrival_cohort(jnp.zeros(3), 1,
+                                   jnp.array([1, -2, 0], jnp.int32),
+                                   method="topk")
+    assert int(idx[0]) == 1
+
+
+def test_arrival_cohort_rejects_unknown_method():
+    with pytest.raises(ValueError, match="arrival"):
+        fed.arrival_cohort(jnp.zeros(4), 2, method="bogus")
+    with pytest.raises(ValueError, match="sharded_arrival_cohort"):
+        fed.arrival_cohort(jnp.zeros(4), 2, method="topk:sharded")
+
+
+@pytest.mark.parametrize("delay_spec", ["zero", "constant:2",
+                                        "lognormal:1:1"])
+def test_topk_runner_event_sequence_matches_sort(delay_spec):
+    """The acceptance bar: whole event sequences — masks, versions,
+    finish times, params — bit-identical between arrival='sort' and
+    'topk' under tie-free AND tie-heavy delay schedules."""
+    key = jax.random.PRNGKey(5)
+    K, cohort = 8, 3
+    dm = fed.make_delays(delay_spec)
+    sc = ScalaConfig(lr=0.05)
+    traces = {}
+    for arr in ("sort", "topk"):
+        model, params, _ = _setup_alexnet(key, C=K)
+        runner = jax.jit(fed.make_async_runner(
+            model, sc, delays=dm, cohort=cohort, arrival=arr))
+        state = engine.init_train_state(params, optim.sgd())
+        afed = fed.init_async_state(jax.random.PRNGKey(6),
+                                    params["client"], dm)
+        seq = []
+        for e in range(6):
+            rb = _round_batches(jax.random.fold_in(key, e), C=K)
+            state, afed, m = runner(state, afed, rb)
+            seq.append((np.asarray(m["arrival_mask"]),
+                        np.asarray(afed.version),
+                        np.asarray(afed.finish_time)))
+        seq.append(tuple(np.asarray(l) for l in
+                         jax.tree.leaves(state.params)))
+        traces[arr] = seq
+    for a, b in zip(traces["sort"], traces["topk"]):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# (c) host-paged optimizer store
+# --------------------------------------------------------------------------
+
+
+def test_paged_delta_carry_matches_dense_carry_momentum():
+    """opt_paging lifts the delta restriction: delta+carry+momentum via
+    the host pager follows the dense+carry trajectory bit for bit
+    (within the ring horizon), with a one-slot device moment stack."""
+    key = jax.random.PRNGKey(9)
+    K, cohort, ring = 8, 3, 64
+    dm = fed.make_delays("lognormal:1:1")
+    sc = ScalaConfig(lr=0.05)
+    mom = optim.momentum(0.9)
+    model, params_d, wc = _setup_alexnet(key, C=K)
+
+    r_dense = jax.jit(fed.make_async_runner(
+        model, sc, delays=dm, cohort=cohort, optimizer=mom,
+        opt_state_policy="carry", snapshots="dense"))
+    st_d = engine.init_train_state(params_d, mom)
+    af_d = fed.init_async_state(jax.random.PRNGKey(10),
+                                params_d["client"], dm)
+
+    r_paged = fed.make_async_runner(
+        model, sc, delays=dm, cohort=cohort, optimizer=mom,
+        opt_state_policy="carry", snapshots="delta", ring_size=ring,
+        num_clients=K, paged_opt=True)
+    pop = jax.jit(fed.make_arrival_pop(cohort, "topk"))
+    ev = jax.jit(r_paged)
+    params_p = {"client": jax.tree.map(lambda a: a[None], wc),
+                "server": params_d["server"]}
+    st_p = engine.init_train_state(params_p, mom)
+    af_p = fed.init_async_state(jax.random.PRNGKey(10),
+                                params_p["client"], dm, snapshots="delta",
+                                ring_size=ring, num_clients=K)
+    pager = fed.HostOptPager(mom, wc, K)
+    assert pager.nbytes() > 0
+
+    for e in range(6):
+        rb = _round_batches(jax.random.fold_in(key, e), C=K)
+        st_d, af_d, _ = r_dense(st_d, af_d, rb)
+        idx = np.asarray(pop(af_p.finish_time, af_p.version)[0])
+        cohort_opt = pager.gather(idx)
+        st_p, af_p, _, new_co = ev(st_p, af_p, rb, None, cohort_opt)
+        pager.scatter(idx, new_co)
+    gd = np.asarray(jax.tree.leaves(st_d.params["client"])[0][0])
+    gp = np.asarray(jax.tree.leaves(st_p.params["client"])[0][0])
+    np.testing.assert_array_equal(gd, gp)
+    for sd, sp in zip(jax.tree.leaves(st_d.params["server"]),
+                      jax.tree.leaves(st_p.params["server"])):
+        np.testing.assert_array_equal(np.asarray(sd), np.asarray(sp))
+    # the lifted restriction costs no device memory: moments stay 1-slot
+    for leaf in jax.tree.leaves(st_p.opt_state["client"]):
+        assert leaf.shape[0] == 1, leaf.shape
+    # ... and the full-K moments live in host numpy
+    for leaf in jax.tree.leaves(pager._store):
+        assert isinstance(leaf, np.ndarray) and leaf.shape[0] == K
+
+
+def test_paged_requires_delta_carry():
+    model, params, _ = _setup_alexnet(jax.random.PRNGKey(0), C=4)
+    dm = fed.make_delays("zero")
+    with pytest.raises(ValueError, match="paged_opt"):
+        fed.make_async_runner(model, ScalaConfig(), delays=dm, cohort=2,
+                              paged_opt=True, snapshots="dense")
+
+
+@pytest.mark.slow
+def test_paged_delta_carry_runs_at_10k_clients_without_dense_moments():
+    """The scale acceptance: K=1e4 delta+carry+momentum events run with
+    the (K, ...) moment stack on the *host* and a single param/moment
+    slot on device."""
+    K, cohort = 10_000, 32
+    key = jax.random.PRNGKey(21)
+    dm = fed.make_delays("lognormal:1:1")
+    sc = ScalaConfig(lr=0.05)
+    mom = optim.momentum(0.9)
+    model = alexnet_split_model("s2", num_classes=10)
+    full = A.init_params(key, num_classes=10, width=0.0625)
+    wc, ws = A.split_params(full, "s2")
+    runner = fed.make_async_runner(
+        model, sc, delays=dm, cohort=cohort, optimizer=mom,
+        opt_state_policy="carry", snapshots="delta", ring_size=64,
+        num_clients=K, arrival="topk", paged_opt=True,
+        emit_client_metrics=False)
+    pop = jax.jit(fed.make_arrival_pop(cohort, "topk"))
+    ev = jax.jit(runner)
+    params = {"client": jax.tree.map(lambda a: a[None], wc), "server": ws}
+    state = engine.init_train_state(params, mom)
+    afed = fed.init_async_state(jax.random.PRNGKey(22), params["client"],
+                                dm, snapshots="delta", ring_size=64,
+                                num_clients=K)
+    pager = fed.HostOptPager(mom, wc, K)
+    rb = {"x": jax.random.normal(key, (1, K, 1, 32, 32, 3), jnp.float32),
+          "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                       (1, K, 1), 0, 10),
+          "weights": jnp.ones((1, K, 1), jnp.float32)}
+    for _ in range(2):
+        idx = np.asarray(pop(afed.finish_time, afed.version)[0])
+        cohort_opt = pager.gather(idx)
+        state, afed, m, new_co = ev(state, afed, rb, None, cohort_opt)
+        pager.scatter(idx, new_co)
+    assert np.isfinite(float(m["loss_server"]))
+    for leaf in jax.tree.leaves(state.opt_state["client"]):
+        assert leaf.shape[0] == 1, leaf.shape
+    for leaf in jax.tree.leaves(state.params["client"]):
+        assert leaf.shape[0] == 1, leaf.shape
+
+
+# --------------------------------------------------------------------------
+# (d) satellite selection rewrites
+# --------------------------------------------------------------------------
+
+
+def test_dirichlet_topk_selection_matches_argsort():
+    """Regression for the Gumbel-top-k rewrite: lax.top_k picks the same
+    subset the descending argsort prefix picked, on the same key
+    stream."""
+    for seed in range(5):
+        sched = fed.participation.dirichlet(24, 0.25, alpha=0.3)
+        state = sched.init(jax.random.PRNGKey(seed))
+        for _ in range(3):
+            key = state["key"]
+            mask, state = sched.sample(state)
+            # replay the legacy selection on the identical key stream
+            _, k_avail, k_gumbel = jax.random.split(key, 3)
+            g = jax.random.gamma(k_avail, jnp.float32(0.3), (24,))
+            avail = g / jnp.maximum(g.sum(), 1e-8)
+            score = jnp.log(avail + 1e-20) + jax.random.gumbel(
+                k_gumbel, (24,))
+            top_old = jnp.argsort(-score)[:sched.subset_size]
+            mask_old = jnp.zeros((24,), jnp.float32).at[top_old].set(1.0)
+            np.testing.assert_array_equal(np.asarray(mask),
+                                          np.asarray(mask_old))
+
+
+def test_slot_gather_indices_matches_sorted_argsort():
+    """The cumsum compaction is bit-identical to the old
+    ``sort(argsort(-mask)[:k])`` — including deficient masks, where both
+    fill with the lowest absent slot ids."""
+    rng = np.random.default_rng(3)
+    for C in (5, 16, 33):
+        for _ in range(20):
+            n_on = int(rng.integers(0, C + 1))
+            mask = np.zeros(C, np.float32)
+            mask[rng.choice(C, n_on, replace=False)] = 1.0
+            mask_j = jnp.asarray(mask)
+            for k_active in {1, max(1, n_on - 1), max(1, n_on),
+                             min(C, n_on + 2), C}:
+                ref = jnp.sort(jnp.argsort(-mask_j)[:k_active])
+                new = engine.slot_gather_indices(mask_j, k_active)
+                np.testing.assert_array_equal(np.asarray(ref),
+                                              np.asarray(new))
+
+
+# --------------------------------------------------------------------------
+# spec plumbing
+# --------------------------------------------------------------------------
+
+
+def test_spec_validation_arrival_and_paging():
+    from repro import api
+    ex = api.ExecutionSpec  # noqa: N806
+    with pytest.raises(ValueError, match="unknown arrival"):
+        ex(arrival="bogus")
+    with pytest.raises(ValueError, match="unknown opt_paging"):
+        ex(opt_paging="device")
+
+    def spec(**kw):
+        return api.ExperimentSpec(
+            method="scala", arch="alexnet-cifar",
+            scala=ScalaConfig(num_clients=8),
+            optim=api.OptimSpec(name="momentum"),
+            fed=api.FedSpec(opt_state_policy="carry"),
+            execution=ex(**kw),
+            data=api.DataSpec(kind="image_synthetic", alpha=2))
+
+    with pytest.raises(ValueError, match="mode 'async' only"):
+        spec(mode="masked", arrival="topk").validate()
+    with pytest.raises(ValueError, match="snapshots='delta'"):
+        spec(mode="async", opt_paging="host").validate()
+    with pytest.raises(ValueError, match="rounds_per_call"):
+        spec(mode="async", snapshots="delta", opt_paging="host",
+             rounds_per_call=2).validate()
+    # delta+carry+momentum: rejected without paging, accepted with it
+    with pytest.raises(ValueError, match="cannot carry"):
+        spec(mode="async", snapshots="delta").validate()
+    spec(mode="async", snapshots="delta", opt_paging="host").validate()
+    spec(mode="async", arrival="topk").validate()
+    # sharded arrival needs a mesh at build time
+    with pytest.raises(ValueError, match="mesh"):
+        api.build(spec(mode="async", arrival="topk:sharded"))
+
+
+# --------------------------------------------------------------------------
+# (b) the sharded pop on a real multi-device mesh (subprocess)
+# --------------------------------------------------------------------------
+
+
+_SHARDED_POP_SCRIPT = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, "src")
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro import fed
+
+assert jax.device_count() == 4
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+rng = np.random.default_rng(0)
+err = {"pop": 0, "layout": 0, "delay": 0}
+
+K = 32
+for cohort in (1, 4, 8):
+    for trial in range(3):
+        if trial == 0:
+            ft = jnp.zeros((K,), jnp.float32)       # maximal ties
+        else:
+            ft = jnp.asarray(rng.lognormal(0, 1, K).astype(np.float32))
+        v = jnp.asarray(rng.integers(0, 5, K).astype(np.int32))
+        ref = fed.arrival_cohort(ft, cohort, v, method="sort")
+        new = fed.sharded_arrival_cohort(ft, cohort, v, mesh=mesh)
+        for r, n in zip(ref, new):
+            if not np.array_equal(np.asarray(r), np.asarray(n)):
+                err["pop"] += 1
+
+# init_async_state(mesh=...) is bit-identical to the unsharded init and
+# actually lays the schedule scalars out over the client axis
+dm = fed.make_delays("lognormal:1:1")
+wc = {"w": jnp.ones((K, 3), jnp.float32)}
+a0 = fed.init_async_state(jax.random.PRNGKey(1), wc, dm)
+a1 = fed.init_async_state(jax.random.PRNGKey(1), wc, dm, mesh=mesh)
+if not np.array_equal(np.asarray(a0.finish_time), np.asarray(a1.finish_time)):
+    err["layout"] += 1
+if not np.array_equal(np.asarray(a0.version), np.asarray(a1.version)):
+    err["layout"] += 1
+if len(a1.finish_time.sharding.device_set) != 4:
+    err["layout"] += 1
+
+d0 = dm.sample(jax.random.PRNGKey(2), (K,))
+d1 = dm.sample_sharded(jax.random.PRNGKey(2), K, mesh)
+if not np.array_equal(np.asarray(d0), np.asarray(d1)):
+    err["delay"] += 1
+if len(d1.sharding.device_set) != 4:
+    err["delay"] += 1
+
+print("RESULT " + json.dumps(err))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_pop_matches_single_device_pop():
+    """arrival='topk:sharded' on a forced 4-device CPU mesh: idx, mask,
+    and t_event all equal the single-device lexsort pop; the sharded
+    schedule-scalar init and delay sampling are bit-identical to the
+    unsharded versions and actually distributed."""
+    import json as _json
+    import os as _os
+    import subprocess
+    import sys as _sys
+
+    env = dict(_os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([_sys.executable, "-c", _SHARDED_POP_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=_os.path.dirname(_os.path.dirname(
+                             _os.path.abspath(__file__))), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout[-2000:]
+    err = _json.loads(line[0][len("RESULT "):])
+    assert err == {"pop": 0, "layout": 0, "delay": 0}, err
