@@ -28,15 +28,29 @@ SCALA_METHODS = api.SCALA_METHODS
 ALL_METHODS = api.METHODS
 
 
+def device_info() -> Dict:
+    """The accelerator this benchmark actually ran on — stamped into
+    every BENCH json so a committed number can never be mistaken for a
+    different device class (CPU medians vs TPU/GPU runs), and so
+    accelerator-gated legs can state their gate in-band."""
+    import jax
+
+    return {"platform": jax.devices()[0].platform,
+            "device_count": jax.device_count(),
+            "kind": getattr(jax.devices()[0], "device_kind", "")}
+
+
 def emit_bench(res: Dict, out: Optional[str], default_name: str,
                smoke: bool) -> None:
-    """Shared tail of every ``benchmarks/*.py`` main(): print the result
-    json; persist it next to the benchmarks (or to ``--out``) unless this
-    is a ``--smoke`` run without an explicit ``--out`` (CI must not
-    clobber the committed BENCH files with smoke-sized numbers)."""
+    """Shared tail of every ``benchmarks/*.py`` main(): stamp the device
+    (:func:`device_info`), print the result json; persist it next to
+    the benchmarks (or to ``--out``) unless this is a ``--smoke`` run
+    without an explicit ``--out`` (CI must not clobber the committed
+    BENCH files with smoke-sized numbers)."""
     import json
     import os
 
+    res.setdefault("device", device_info())
     print(json.dumps(res, indent=2))
     if smoke and out is None:
         print("smoke OK (no json written)")

@@ -212,6 +212,20 @@ def bench_dispatch(quick: bool) -> None:
                       f"{row['seconds']}", flush=True)
 
 
+def bench_boundary(quick: bool) -> None:
+    from benchmarks.boundary import GRID, bench_boundary as _bench
+
+    res = _bench(grid=GRID[:2] if quick else GRID, reps=3 if quick else 5)
+    for backend, entry in res["backends"].items():
+        for key, row in entry.items():
+            cell = key.replace(",", ";")      # grid keys hold commas (CSV)
+            if key in ("max_speedup", "min_speedup"):
+                print(f"boundary,{backend},{cell},{row},,", flush=True)
+            else:
+                print(f"boundary,{backend},{cell},{row['fused_speedup']},,"
+                      f"{row['fused_ms']}", flush=True)
+
+
 # ---------------------------------------------------------------------------
 # Async execution-layer benchmark (sparse-slot gather + event throughput;
 # no paper table — backs the asynchronous split-federated runtime).
@@ -269,6 +283,7 @@ TABLES = {
     "participation": bench_participation,
     "async": bench_async,
     "dispatch": bench_dispatch,
+    "boundary": bench_boundary,
     "scale": bench_scale,
     "roofline": bench_roofline,
 }
@@ -280,9 +295,11 @@ def smoke() -> None:
     ``api.ExecutionSpec`` names; ``async`` is covered by
     ``benchmarks.async_rounds --smoke``), one fused/bf16 run through the
     dispatch knobs, the dispatch fusion regression guard, the
-    delta-vs-dense snapshot scale guard, the topk-vs-sort arrival-pop
-    guard, plus the roofline reprint. The dispatch/scale benches also
-    have their own --smoke."""
+    split-boundary fused-vs-dual loss guard, the delta-vs-dense snapshot
+    scale guard, the topk-vs-sort arrival-pop guard, plus the roofline
+    reprint. The dispatch/scale/boundary benches also have their own
+    --smoke."""
+    from benchmarks.boundary import smoke_guard as boundary_smoke_guard
     from benchmarks.dispatch import smoke_guard
     from benchmarks.scale import (arrival_smoke_guard,
                                   smoke_guard as scale_smoke_guard)
@@ -305,6 +322,12 @@ def smoke() -> None:
     guard = smoke_guard()
     print("SMOKE,dispatch_guard,fused_speedup,"
           f"{guard['modes']['async']['fused_speedup']},,", flush=True)
+    # regression guard: the one-pass (fused) split-boundary loss stage
+    # must be >= as fast as the two value_and_grad passes (shared with
+    # `benchmarks.boundary --smoke`)
+    bguard = boundary_smoke_guard()
+    print("SMOKE,boundary_guard,fused_speedup,"
+          f"{bguard['backends']['lace']['max_speedup']},,", flush=True)
     # regression guard: O(cohort + ring) delta snapshots must be >= as
     # fast as the dense (K, ...) scatter at K=1e4 (shared with
     # `benchmarks.scale --smoke`)

@@ -207,6 +207,7 @@ def build(spec: ExperimentSpec, *, mesh=None, batch_specs=None,
         program = _build_fl(spec)
 
     program.metadata.update(precision=ex.precision,
+                            boundary=ex.boundary,
                             rounds_per_call=ex.rounds_per_call,
                             donate=ex.donate)
     if program.metadata.get("host_paged"):
@@ -295,7 +296,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
         cohort = ex.resolve_cohort(slots)
         paged = ex.opt_paging == "host"
         round_fn = fed.make_async_runner(
-            model, sc, backend=ex.backend, optimizer=opt, schedule=sched,
+            model, sc, backend=ex.backend, boundary=ex.boundary,
+            optimizer=opt, schedule=sched,
             delays=delays, cohort=cohort,
             staleness_decay=ex.staleness_decay, mix_rate=ex.mix_rate,
             aggregator=agg, server_optimizer=server_opt,
@@ -356,7 +358,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
         thread_fed = True
     else:
         round_fn = engine.make_round_runner(
-            model, sc, backend=ex.backend, optimizer=opt, schedule=sched,
+            model, sc, backend=ex.backend, boundary=ex.boundary,
+            optimizer=opt, schedule=sched,
             unroll=unroll, aggregator=agg, participation=scheduler,
             opt_state_policy=fd.opt_state_policy,
             slot_gather=ex.mode == "sparse", server_optimizer=server_opt,

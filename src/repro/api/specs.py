@@ -230,7 +230,13 @@ class ExecutionSpec:
       sampled completion delays, arrival cohorts, staleness-weighted
       delayed aggregation.
 
-    ``backend`` is the engine loss backend (``logits | lace | lace_dp``).
+    ``backend`` is the engine loss backend (``logits | lace | lace_dp``);
+    ``boundary`` is the split-boundary loss schedule
+    (:data:`repro.core.engine.BOUNDARIES`): ``"fused"`` (default)
+    computes the eq. 14/15 pair — values and cotangents — in one pass
+    over a shared logits product (gradient-bitwise vs. ``"dual"``, half
+    the loss-stage matmuls); ``"dual"`` keeps the literal two
+    ``value_and_grad`` passes.
     ``delay`` / ``cohort`` / ``staleness_decay`` / ``mix_rate`` apply to
     mode ``"async"`` only (``cohort=0`` = K//4, min 1).
     ``server_optimizer`` is the optional server-half FedOpt
@@ -304,6 +310,7 @@ class ExecutionSpec:
 
     mode: str = "masked"
     backend: str = "logits"
+    boundary: str = "fused"
     delay: str = "lognormal:1:1"
     cohort: int = 0
     staleness_decay: float = 0.5
@@ -320,7 +327,7 @@ class ExecutionSpec:
     opt_paging: str = "none"
 
     def __post_init__(self):
-        from repro.core.engine import BACKENDS, PRECISIONS
+        from repro.core.engine import BACKENDS, BOUNDARIES, PRECISIONS
         from repro.fed import (ARRIVALS, LR_SCALES, SNAPSHOT_MODES,
                                make_delays)
 
@@ -330,6 +337,9 @@ class ExecutionSpec:
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected {BACKENDS}")
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(f"unknown boundary {self.boundary!r}; "
+                             f"expected {BOUNDARIES}")
         if self.precision not in PRECISIONS:
             raise ValueError(f"unknown precision {self.precision!r}; "
                              f"expected {PRECISIONS}")

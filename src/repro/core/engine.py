@@ -36,6 +36,25 @@ The variation points:
     the inner axis), keeping the per-step wire cost at the DDP lower bound
     of 2x|w_s| + 2x|w_c|.
 
+* **boundary flavor** (stage 3-4 pass count, :data:`BOUNDARIES`): the
+  paper's dual objective evaluates the adjusted CE twice per step — once
+  with the concatenated prior P_s (eq. 14) and once with the per-client
+  priors P_k (eq. 15). ``boundary="dual"`` runs them as two independent
+  ``value_and_grad`` evaluations; ``boundary="fused"`` (default) computes
+  both NLLs and both cotangents in ONE pass over a shared
+  ``features @ w_head`` product (:func:`repro.kernels.lace.ops.lace2_grads`
+  for the LACE backends, :func:`repro.core.losses.dual_adjusted_xent`
+  over the shared materialized logits for ``"logits"``), halving the
+  loss-stage FLOPs. All gradients — hence parameter updates and the
+  whole training trajectory — are bit-identical f32 to the dual path
+  (test-enforced per backend). The reported LACE loss *metrics* sit
+  within 1 ulp: the fused values match the plain ``lace_loss`` forward
+  bitwise, while the dual baseline reads them through
+  ``value_and_grad``, whose residual-saving scan compiles to slightly
+  different roundings. The one dual fallback is ``"logits"`` with
+  ``label_smoothing > 0``, where the mirrored backward is only
+  ulp-accurate.
+
 * **optimizer / schedule** (stage 5): any :class:`repro.optim.Optimizer`;
   client state is vmapped per client so every state leaf carries the
   stacked (C, ...) axis and shards exactly like the client params.
@@ -89,6 +108,18 @@ BACKENDS = ("logits", "lace", "lace_dp")
 #: unchanged). Halves the live activation set AND the split-boundary
 #: wire traffic.
 PRECISIONS = ("f32", "bf16")
+
+#: split-boundary loss flavors. ``"dual"`` evaluates the eq. (14) and
+#: eq. (15) objectives as two independent ``value_and_grad`` passes over
+#: the head (the paper's literal two-loss schedule); ``"fused"``
+#: (default) computes both NLLs and both feature cotangents in one pass
+#: over a shared ``features @ w_head`` product — halving the loss-stage
+#: matmul count. Gradients (and therefore the training trajectory) are
+#: bit-identical f32 to ``"dual"`` for every backend; LACE loss metrics
+#: are 1-ulp (see the module docstring). ``"logits"`` with
+#: ``label_smoothing > 0`` silently falls back to the dual schedule
+#: (the mirrored backward is only ulp-accurate there).
+BOUNDARIES = ("dual", "fused")
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +332,7 @@ def _client_pullback(model: SplitModel, wc, batch, acts, g_x, g_mem, has_mem):
 
 def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
                      backend: str = "logits",
+                     boundary: str = "fused",
                      ce_chunk: Optional[int] = None,
                      axes: Optional[MeshAxes] = None,
                      mask=None,
@@ -311,6 +343,13 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
     (C, B_k, ...). Returns (grads, metrics) with grads mirroring params —
     no parameter update applied. ``axes`` must be set iff
     ``backend == "lace_dp"`` (the caller wraps this in ``shard_map``).
+
+    ``boundary`` (:data:`BOUNDARIES`) picks the loss-stage schedule:
+    ``"fused"`` (default) evaluates eq. (14) and eq. (15) — values and
+    cotangents — in one pass over a shared logits product; ``"dual"``
+    keeps the literal two ``value_and_grad`` passes. Gradients are
+    bit-identical f32 per backend; LACE loss metrics are 1-ulp
+    (``"logits"`` falls back to dual when ``label_smoothing > 0``).
 
     ``precision`` (:data:`PRECISIONS`) selects the compute policy via
     :func:`cast_to_compute`: ``"bf16"`` runs stages 2-4 in bfloat16
@@ -328,6 +367,9 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if boundary not in BOUNDARIES:
+        raise ValueError(
+            f"unknown boundary {boundary!r}; expected {BOUNDARIES}")
     if (backend == "lace_dp") != (axes is not None):
         raise ValueError("backend 'lace_dp' requires mesh axes (and only it)")
     if backend != "logits" and model.server_trunk is None:
@@ -361,34 +403,46 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
         labels_f = _flat(labels)
         weights_f = _flat(weights) if weights is not None else None
 
-        def server_loss(lg):
-            return losses.softmax_xent(
-                lg, labels_f, weights=weights_f,
-                prior=p_s if scala.adjust_server else None,
-                tau=scala.tau, label_smoothing=scala.label_smoothing,
-                prior_eps=scala.prior_eps)
-
-        loss_s, g_s = jax.value_and_grad(server_loss)(logits)
-
-        # per-client prior, broadcast over each client's token dims (eq. 15)
+        # both sides' priors, prepared once and shared between eq. (14)
+        # and eq. (15) — the per-client prior broadcast over each
+        # client's token dims
+        ps_use = p_s if scala.adjust_server else None
         pk_tok = _prior_for_tokens(p_k, labels.shape)        # (C,1..,N)
         pk_flat = _flat(jnp.broadcast_to(
             pk_tok, labels.shape[:2] + (1,) * (labels.ndim - 2) + (N,)))
+        pk_use = pk_flat if scala.adjust_client else None
 
-        def client_loss(lg):
-            return losses.softmax_xent(
-                lg, labels_f, weights=weights_f,
-                prior=pk_flat if scala.adjust_client else None,
-                tau=scala.tau, label_smoothing=scala.label_smoothing,
+        # the mirrored one-pass backward is bitwise only at ls == 0; the
+        # smoothed objective keeps the autodiff schedule
+        if boundary == "fused" and scala.label_smoothing == 0.0:
+            loss_s, loss_k, g_s, g_k = losses.dual_adjusted_xent(
+                logits, labels_f, weights=weights_f, prior_s=ps_use,
+                prior_k=pk_use, tau=scala.tau,
+                label_smoothing=scala.label_smoothing,
                 prior_eps=scala.prior_eps)
+        else:
+            def server_loss(lg):
+                return losses.softmax_xent(
+                    lg, labels_f, weights=weights_f, prior=ps_use,
+                    tau=scala.tau, label_smoothing=scala.label_smoothing,
+                    prior_eps=scala.prior_eps)
 
-        loss_k, g_k = jax.value_and_grad(client_loss)(logits)
+            loss_s, g_s = jax.value_and_grad(server_loss)(logits)
+
+            def client_loss(lg):
+                return losses.softmax_xent(
+                    lg, labels_f, weights=weights_f, prior=pk_use,
+                    tau=scala.tau, label_smoothing=scala.label_smoothing,
+                    prior_eps=scala.prior_eps)
+
+            loss_k, g_k = jax.value_and_grad(client_loss)(logits)
 
         d_ws, g_x, g_mem = _dual_pullbacks(vjp, g_s, g_k, aux.dtype, has_mem)
         metrics = {"loss_server": loss_s, "loss_client": loss_k, "aux": aux,
                    "accuracy": losses.accuracy(logits, labels_f, weights_f)}
     else:
-        from repro.kernels.lace.ops import (lace_loss, lace_loss_dp,
+        from repro.kernels.lace.ops import (lace2_grads, lace2_grads_dp,
+                                            lace_loss, lace_loss_dp,
                                             lace_nll_sum)
 
         if ce_chunk is None:
@@ -401,24 +455,29 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
         weights_g = None if weights is None else weights.reshape(C, -1)
         w_head = model.head_weight(params["server"])
 
-        if backend == "lace":
+        ps_rows = p_s[None] if scala.adjust_server else None
+        pk_rows = p_k if scala.adjust_client else None
+        pk_ids = jnp.arange(C) if scala.adjust_client else None
+
+        if backend == "lace" and boundary == "fused":
+            lace2 = lace2_grads_dp if model.dp_loss else lace2_grads
+            loss_s, loss_k, gf_s, gf_k, gW_s = lace2(
+                feats_g, w_head, labels_g, ps_rows, None, pk_rows, pk_ids,
+                weights_g, scala.tau, scala.prior_eps, ce_chunk)[:5]
+        elif backend == "lace":
             lace = lace_loss_dp if model.dp_loss else lace_loss
 
             # eq. (14): concatenated prior P_s for the server update
             def loss_s_fn(fg, wh):
-                return lace(fg, wh, labels_g,
-                            p_s[None] if scala.adjust_server else None,
-                            None, weights_g, scala.tau, scala.prior_eps,
-                            ce_chunk)
+                return lace(fg, wh, labels_g, ps_rows, None, weights_g,
+                            scala.tau, scala.prior_eps, ce_chunk)
 
             loss_s, (gf_s, gW_s) = jax.value_and_grad(
                 loss_s_fn, argnums=(0, 1))(feats_g, w_head)
 
             # eq. (15): per-client priors P_k for the gradients G_k
             def loss_k_fn(fg):
-                return lace(fg, w_head, labels_g,
-                            p_k if scala.adjust_client else None,
-                            jnp.arange(C) if scala.adjust_client else None,
+                return lace(fg, w_head, labels_g, pk_rows, pk_ids,
                             weights_g, scala.tau, scala.prior_eps, ce_chunk)
 
             loss_k, gf_k = jax.value_and_grad(loss_k_fn)(feats_g)
@@ -432,26 +491,30 @@ def split_step_grads(model: SplitModel, params, batch, scala: ScalaConfig, *,
             w_global = jnp.maximum(jax.lax.psum(
                 jnp.asarray(wsum_local, jnp.float32), axes.all), 1e-8)
 
-            def nll_s_fn(fg, wh):
-                return lace_nll_sum(fg, wh, labels_g,
-                                    p_s[None] if scala.adjust_server else None,
-                                    None, weights_g, scala.tau,
-                                    scala.prior_eps, ce_chunk)
+            if boundary == "fused":
+                nll_s, nll_k, gf_s, gf_k, gW_s, _ = lace2_grads(
+                    feats_g, w_head, labels_g, ps_rows, None, pk_rows,
+                    pk_ids, weights_g, scala.tau, scala.prior_eps,
+                    ce_chunk, mean=False)
+            else:
+                def nll_s_fn(fg, wh):
+                    return lace_nll_sum(fg, wh, labels_g, ps_rows, None,
+                                        weights_g, scala.tau,
+                                        scala.prior_eps, ce_chunk)
 
-            nll_s, (gf_s, gW_s) = jax.value_and_grad(
-                nll_s_fn, argnums=(0, 1))(feats_g, w_head)
+                nll_s, (gf_s, gW_s) = jax.value_and_grad(
+                    nll_s_fn, argnums=(0, 1))(feats_g, w_head)
+
+                def nll_k_fn(fg):
+                    return lace_nll_sum(fg, w_head, labels_g, pk_rows,
+                                        pk_ids, weights_g, scala.tau,
+                                        scala.prior_eps, ce_chunk)
+
+                nll_k, gf_k = jax.value_and_grad(nll_k_fn)(feats_g)
+
             loss_s = jax.lax.psum(nll_s, axes.all) / w_global
             gf_s = gf_s / w_global
             gW_s = gW_s / w_global
-
-            def nll_k_fn(fg):
-                return lace_nll_sum(fg, w_head, labels_g,
-                                    p_k if scala.adjust_client else None,
-                                    jnp.arange(C) if scala.adjust_client
-                                    else None, weights_g, scala.tau,
-                                    scala.prior_eps, ce_chunk)
-
-            nll_k, gf_k = jax.value_and_grad(nll_k_fn)(feats_g)
             loss_k = jax.lax.psum(nll_k, axes.all) / w_global
             gf_k = gf_k / w_global
 
@@ -560,7 +623,8 @@ def client_shard_count(mesh) -> int:
 
 
 def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
-               backend: str = "logits", lr: Optional[float] = None,
+               backend: str = "logits", boundary: str = "fused",
+               lr: Optional[float] = None,
                ce_chunk: Optional[int] = None, mesh=None, batch_specs=None,
                precision: str = "f32"):
     """One stateless SCALA local iteration with plain SGD (eqs. 7/9) —
@@ -584,6 +648,7 @@ def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
         def body(p, b):
             grads, metrics = split_step_grads(model, p, b, scala,
                                               backend="lace_dp",
+                                              boundary=boundary,
                                               ce_chunk=ce_chunk, axes=axes,
                                               precision=precision)
             return sgd_apply(p, grads, lr), metrics
@@ -594,13 +659,15 @@ def local_step(model: SplitModel, params, batch, scala: ScalaConfig, *,
         return fn(params, batch)
 
     grads, metrics = split_step_grads(model, params, batch, scala,
-                                      backend=backend, ce_chunk=ce_chunk,
+                                      backend=backend, boundary=boundary,
+                                      ce_chunk=ce_chunk,
                                       precision=precision)
     return sgd_apply(params, grads, lr), metrics
 
 
 def make_split_step(model: SplitModel, scala: ScalaConfig, *,
                     backend: str = "lace",
+                    boundary: str = "fused",
                     optimizer: Optional[optimizers.Optimizer] = None,
                     schedule: Optional[Callable] = None,
                     ce_chunk: Optional[int] = None,
@@ -643,7 +710,7 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
             def body(st, b, *m):
                 grads, metrics = split_step_grads(
                     model, st.params, b, scala, backend="lace_dp",
-                    ce_chunk=ce_chunk, axes=axes,
+                    boundary=boundary, ce_chunk=ce_chunk, axes=axes,
                     mask=m[0] if m else None, precision=precision)
                 return _apply_updates(opt, st, grads, sched(st.step)), metrics
 
@@ -660,7 +727,8 @@ def make_split_step(model: SplitModel, scala: ScalaConfig, *,
 
     def step(state: TrainState, batch, mask=None):
         grads, metrics = split_step_grads(model, state.params, batch, scala,
-                                          backend=backend, ce_chunk=ce_chunk,
+                                          backend=backend, boundary=boundary,
+                                          ce_chunk=ce_chunk,
                                           mask=mask, precision=precision)
         return _apply_updates(opt, state, grads, sched(state.step)), metrics
 
@@ -775,6 +843,7 @@ def _round_boundary_opt_state(opt: optimizers.Optimizer, opt_state,
 
 def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                       backend: str = "logits",
+                      boundary: str = "fused",
                       optimizer: Optional[optimizers.Optimizer] = None,
                       schedule: Optional[Callable] = None,
                       ce_chunk: Optional[int] = None,
@@ -930,8 +999,9 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
             raise ValueError("opt_state_policy 'average' is not supported "
                              "with lace_dp slot_gather; use 'carry' or "
                              "'reset'")
-    step = make_split_step(model, scala, backend=backend, optimizer=opt,
-                           schedule=schedule, ce_chunk=ce_chunk,
+    step = make_split_step(model, scala, backend=backend, boundary=boundary,
+                           optimizer=opt, schedule=schedule,
+                           ce_chunk=ce_chunk,
                            mesh=mesh, batch_specs=batch_specs,
                            precision=precision)
 
@@ -962,7 +1032,8 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 def step_body(s, b):
                     grads, mets = split_step_grads(
                         model, s.params, b, scala, backend="lace_dp",
-                        ce_chunk=ce_chunk, axes=axes, precision=precision)
+                        boundary=boundary, ce_chunk=ce_chunk, axes=axes,
+                        precision=precision)
                     return _apply_updates(opt, s, grads,
                                           sched(s.step)), mets
 
@@ -1095,6 +1166,7 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
 def scala_round_scan(model: SplitModel, state: TrainState, round_batches,
                      scala: ScalaConfig, data_sizes=None, *,
                      backend: str = "logits",
+                     boundary: str = "fused",
                      optimizer: Optional[optimizers.Optimizer] = None,
                      schedule: Optional[Callable] = None,
                      ce_chunk: Optional[int] = None,
@@ -1103,6 +1175,7 @@ def scala_round_scan(model: SplitModel, state: TrainState, round_batches,
     iterations + aggregation as a single scanned program. For a training
     loop, build the runner once and jit it instead."""
     runner = make_round_runner(model, scala, backend=backend,
+                               boundary=boundary,
                                optimizer=optimizer, schedule=schedule,
                                ce_chunk=ce_chunk, unroll=unroll,
                                precision=precision)

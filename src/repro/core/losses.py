@@ -38,6 +38,82 @@ def softmax_xent(logits, labels, *, weights=None, prior=None,
     return (nll * w).sum() / jnp.maximum(w.sum(), 1e-8)
 
 
+def _token_cotangent(shape, weights):
+    """d loss / d nll for the weighted-mean reduction of
+    :func:`softmax_xent`, with a unit loss cotangent — the op-for-op
+    mirror of what autodiff produces (mean: ``1/size`` broadcast;
+    weighted: ``weights / max(sum, eps)``)."""
+    if weights is None:
+        size = 1
+        for s in shape:
+            size *= s
+        return jnp.broadcast_to(jnp.float32(1.0) / jnp.float32(size), shape)
+    w = weights.astype(jnp.float32)
+    return w * (jnp.ones((), jnp.float32) / jnp.maximum(w.sum(), 1e-8))
+
+
+def _xent_side(z0, labels, prior, tau, label_smoothing, prior_eps, cw,
+               weights):
+    """One adjusted-CE side: (loss, d loss/d z0) in a single pass.
+
+    Mirrors the exact op sequence autodiff emits for
+    ``value_and_grad(softmax_xent)(logits)`` — including jax's
+    ``logsumexp`` internals (stop-gradiented finite-max shift, ``abs``
+    on the sumexp) — so values AND grads are bit-identical f32.
+    """
+    z = adjust_logits(z0, prior, tau, prior_eps) if prior is not None else z0
+    amax = jnp.max(z, axis=-1, initial=-jnp.inf)
+    amax = jax.lax.stop_gradient(
+        jax.lax.select(jnp.isfinite(amax), amax, jnp.zeros_like(amax)))
+    exp_a = jnp.exp(z - amax[..., None])
+    sumexp = jnp.abs(jnp.sum(exp_a, axis=-1))
+    lse = jnp.log(sumexp) + amax
+    ll = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    ls = label_smoothing
+    if ls > 0.0:
+        n = z.shape[-1]
+        mean_z = z.mean(axis=-1)
+        nll = (1 - ls) * nll + ls * (lse - mean_z)
+    if weights is None:
+        loss = nll.mean()
+    else:
+        w = weights.astype(jnp.float32)
+        loss = (nll * w).sum() / jnp.maximum(w.sum(), 1e-8)
+
+    d_nll = cw * (1 - ls) if ls > 0.0 else cw
+    d_lse = d_nll + cw * ls if ls > 0.0 else d_nll
+    g = exp_a * (d_lse / sumexp)[..., None]
+    if ls > 0.0:
+        g = g + jnp.broadcast_to((-(cw * ls) / n)[..., None], g.shape)
+    g = g + jnp.zeros_like(g).at[
+        jnp.indices(labels.shape, sparse=True) + (labels,)].add(-d_nll)
+    return loss, g
+
+
+def dual_adjusted_xent(logits, labels, *, weights=None, prior_s=None,
+                       prior_k=None, tau: float = 1.0,
+                       label_smoothing: float = 0.0, prior_eps: float = 1e-8):
+    """Both SCALA losses (eq. 14 / eq. 15) AND their logit cotangents in
+    one pass over shared materialized logits.
+
+    Fused flavor of the engine's ``"logits"`` backend: instead of two
+    ``value_and_grad(softmax_xent)`` evaluations (each a forward plus a
+    backward over the (tokens, N) logits), the per-side softmax stats are
+    computed once and reused for the value and the gradient — halving the
+    loss-stage traversals. Returns ``(loss_s, loss_k, g_s, g_k)`` with
+    gradients in ``logits.dtype``, bit-identical (f32) to the two-pass
+    path.
+    """
+    z0 = logits.astype(jnp.float32)
+    cw = _token_cotangent(labels.shape, weights)
+    loss_s, g_s = _xent_side(z0, labels, prior_s, tau, label_smoothing,
+                             prior_eps, cw, weights)
+    loss_k, g_k = _xent_side(z0, labels, prior_k, tau, label_smoothing,
+                             prior_eps, cw, weights)
+    return loss_s, loss_k, g_s.astype(logits.dtype), g_k.astype(logits.dtype)
+
+
 def accuracy(logits, labels, weights=None):
     pred = jnp.argmax(logits, axis=-1)
     correct = (pred == labels).astype(jnp.float32)

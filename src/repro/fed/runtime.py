@@ -575,6 +575,7 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       delays: DelayModel,
                       cohort: int,
                       backend: str = "logits",
+                      boundary: str = "fused",
                       optimizer: Optional[optimizers.Optimizer] = None,
                       schedule: Optional[Callable] = None,
                       ce_chunk: Optional[int] = None,
@@ -719,7 +720,8 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             raise ValueError("paged_opt is not supported on the lace_dp "
                              "event (its delta path keeps moments local)")
         return _make_async_runner_dp(
-            model, scala, delays=delays, cohort=cohort, opt=opt, sched=sched,
+            model, scala, boundary=boundary, delays=delays, cohort=cohort,
+            opt=opt, sched=sched,
             ce_chunk=ce_chunk, staleness_decay=staleness_decay,
             mix_rate=mix_rate, agg=agg, server_optimizer=server_optimizer,
             server_lr=server_lr, opt_state_policy=opt_state_policy,
@@ -729,6 +731,7 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
     pop = make_arrival_pop(cohort, arrival, mesh=mesh)
 
     step = engine.make_split_step(model, scala, backend=backend,
+                                  boundary=boundary,
                                   optimizer=opt, schedule=sched,
                                   ce_chunk=ce_chunk, precision=precision)
 
@@ -909,7 +912,8 @@ def _half_specs(tree, client_spec):
             "server": jax.tree.map(lambda _: P(), tree["server"])}
 
 
-def _make_async_runner_dp(model, scala, *, delays, cohort, opt, sched,
+def _make_async_runner_dp(model, scala, *, boundary, delays, cohort, opt,
+                          sched,
                           ce_chunk, staleness_decay, mix_rate, agg,
                           server_optimizer, server_lr, opt_state_policy,
                           unroll, precision, delta, ring_size,
@@ -1015,7 +1019,8 @@ def _make_async_runner_dp(model, scala, *, delays, cohort, opt, sched,
             def step_body(s, b):
                 grads, mets = engine.split_step_grads(
                     model, s.params, b, scala, backend="lace_dp",
-                    ce_chunk=ce_chunk, axes=axes, precision=precision)
+                    boundary=boundary, ce_chunk=ce_chunk, axes=axes,
+                    precision=precision)
                 return engine._apply_updates(opt, s, grads,
                                              sched(s.step)), mets
 

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interp
+
 NEG_INF = -1e30
 
 
@@ -107,6 +109,6 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
             pltpu.VMEM((qb,), jnp.float32),
             pltpu.VMEM((qb, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=interp.resolve(interpret),
     )(qp, kp, vp)
     return out[:, :S]

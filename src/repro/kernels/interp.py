@@ -1,0 +1,22 @@
+"""Env-forced Pallas interpret mode for CI kernel legs.
+
+``REPRO_PALLAS_INTERPRET=1`` forces every ``pl.pallas_call`` in this
+package to run in interpret mode regardless of the ``interpret=``
+argument the caller passed. CPU CI uses it to exercise the *kernel*
+path of the oracle tests (kernels/{lace,flash_attn,mlstm}) instead of
+only the jnp ref — the same tests then validate the Mosaic lowering
+when run on a TPU host with the variable unset.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_interpret() -> bool:
+    """True when the environment pins interpret mode on."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0")
+
+
+def resolve(interpret: bool) -> bool:
+    """The effective interpret flag for a ``pallas_call`` site."""
+    return True if force_interpret() else bool(interpret)

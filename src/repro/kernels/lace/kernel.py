@@ -16,6 +16,12 @@ d is kept whole (<= 8k: W tile bf16 fits VMEM at vocab_block 256). For
 larger d a d-tiled variant would be needed — none of the assigned archs
 exceeds d=8192.
 
+``lace2_fwd/bwd_pallas`` (bottom) are the fused dual-prior variants:
+one ``f @ w`` per vocab tile feeds BOTH adjusted LSE streams (eq. 14's
+P_s and eq. 15's P_k), and the fused backward shares the recomputed
+logits between the two softmax cotangents — two (m, s, ll) scratch
+streams in the forward, two df outputs in one pass in the backward.
+
 Validated against :mod:`repro.kernels.lace.ref` in interpret mode (CPU);
 on TPU the same ``pallas_call``s lower to Mosaic.
 """
@@ -26,6 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interp
 
 NEG_INF = -1e30
 
@@ -143,7 +151,7 @@ def lace_fwd_pallas(feats, w_head, labels, log_prior, *, tau: float = 1.0,
             jax.ShapeDtypeStruct((Np,), jnp.float32),
         ],
         scratch_shapes=_scratch3(tb),
-        interpret=interpret,
+        interpret=interp.resolve(interpret),
     )(feats_p, w_p, labels_p, lp_p)
     return nll[:N], lse[:N]
 
@@ -182,7 +190,7 @@ def lace_bwd_pallas(feats, w_head, labels, log_prior, lse, token_scale, *,
         ],
         out_specs=pl.BlockSpec((tb, d), lambda t, v: (t, 0)),
         out_shape=jax.ShapeDtypeStruct((Np, d), jnp.float32),
-        interpret=interpret,
+        interpret=interp.resolve(interpret),
     )(feats_p, w_p, labels_p, lp_p, lse_p, gw_p)
 
     dw = pl.pallas_call(
@@ -198,6 +206,185 @@ def lace_bwd_pallas(feats, w_head, labels, log_prior, lse, token_scale, *,
         ],
         out_specs=pl.BlockSpec((d, vb), lambda v, t: (0, v)),
         out_shape=jax.ShapeDtypeStruct((d, Vp), jnp.float32),
-        interpret=interpret,
+        interpret=interp.resolve(interpret),
     )(feats_p, w_p, labels_p, lp_p, lse_p, gw_p)
     return df[:N], dw[:, :V]
+
+
+# ---------------------------------------------------------------------------
+# lace2 — fused dual-prior kernels (one z tile, two LSE streams)
+# ---------------------------------------------------------------------------
+
+
+def _fwd2_kernel(feats_ref, w_ref, labels_ref, lps_ref, lpk_ref,
+                 nlls_ref, nllk_ref, lses_ref, lsek_ref,
+                 ms_scr, ss_scr, lls_scr, mk_scr, sk_scr, llk_scr,
+                 *, vb: int, nvb: int, tau: float):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        for m_scr, s_scr, ll_scr in ((ms_scr, ss_scr, lls_scr),
+                                     (mk_scr, sk_scr, llk_scr)):
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            s_scr[...] = jnp.zeros_like(s_scr)
+            ll_scr[...] = jnp.zeros_like(ll_scr)
+
+    f = feats_ref[...].astype(jnp.float32)          # (TB, d)
+    w = w_ref[...].astype(jnp.float32)              # (d, VB)
+    zb = f @ w                                      # ONE matmul per tile
+    labels = labels_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, zb.shape, 1) + v * vb
+    hit = col == labels[:, None]
+
+    for lp_ref, m_scr, s_scr, ll_scr in (
+            (lps_ref, ms_scr, ss_scr, lls_scr),
+            (lpk_ref, mk_scr, sk_scr, llk_scr)):
+        z = zb + tau * lp_ref[...].astype(jnp.float32)[None, :]
+        ll_scr[...] += jnp.sum(jnp.where(hit, z, 0.0), axis=1)
+        m_old = m_scr[...]
+        m_new = jnp.maximum(m_old, jnp.max(z, axis=1))
+        s_scr[...] = s_scr[...] * jnp.exp(m_old - m_new) + jnp.sum(
+            jnp.exp(z - m_new[:, None]), axis=1)
+        m_scr[...] = m_new
+
+    @pl.when(v == nvb - 1)
+    def _finish():
+        for m_scr, s_scr, ll_scr, lse_ref, nll_ref in (
+                (ms_scr, ss_scr, lls_scr, lses_ref, nlls_ref),
+                (mk_scr, sk_scr, llk_scr, lsek_ref, nllk_ref)):
+            lse = m_scr[...] + jnp.log(s_scr[...])
+            lse_ref[...] = lse
+            nll_ref[...] = lse - ll_scr[...]
+
+
+def _bwd2_dfeats_kernel(feats_ref, w_ref, labels_ref, lps_ref, lpk_ref,
+                        lses_ref, lsek_ref, gws_ref, gwk_ref,
+                        dfs_ref, dfk_ref, *, vb: int, nvb: int, tau: float):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        dfs_ref[...] = jnp.zeros_like(dfs_ref)
+        dfk_ref[...] = jnp.zeros_like(dfk_ref)
+
+    f = feats_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    zb = f @ w                                      # ONE matmul per tile
+    labels = labels_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, zb.shape, 1) + v * vb
+    onehot = (col == labels[:, None]).astype(jnp.float32)
+
+    for lp_ref, lse_ref, gw_ref, df_ref in (
+            (lps_ref, lses_ref, gws_ref, dfs_ref),
+            (lpk_ref, lsek_ref, gwk_ref, dfk_ref)):
+        z = zb + tau * lp_ref[...].astype(jnp.float32)[None, :]
+        p = jnp.exp(z - lse_ref[...][:, None])
+        g = (p - onehot) * gw_ref[...][:, None]
+        df_ref[...] += (g @ w.T).astype(df_ref.dtype)
+
+
+def lace2_fwd_pallas(feats, w_head, labels, log_prior_s, log_prior_k, *,
+                     tau: float = 1.0, tb: int = 128, vb: int = 256,
+                     interpret: bool = True):
+    """Both adjusted NLL/LSE streams from one logits pass.
+
+    feats (N,d), w_head (d,V), labels (N,), log_prior_s/_k (V,) ->
+    (nll_s, nll_k, lse_s, lse_k), each (N,). Single prior row per side;
+    vmap for groups (per-client P_k rows become the mapped axis).
+    """
+    N, d = feats.shape
+    V = w_head.shape[1]
+    Np = ((N + tb - 1) // tb) * tb
+    Vp = ((V + vb - 1) // vb) * vb
+    feats_p = _pad_to(feats, Np, 0)
+    labels_p = _pad_to(labels, Np, 0, value=-1)
+    w_p = _pad_to(w_head, Vp, 1)
+    lps_p = _pad_to(log_prior_s, Vp, 0, value=NEG_INF)
+    lpk_p = _pad_to(log_prior_k, Vp, 0, value=NEG_INF)
+    ntb, nvb = Np // tb, Vp // vb
+
+    nll_s, nll_k, lse_s, lse_k = pl.pallas_call(
+        functools.partial(_fwd2_kernel, vb=vb, nvb=nvb, tau=tau),
+        grid=(ntb, nvb),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda t, v: (t, 0)),
+            pl.BlockSpec((d, vb), lambda t, v: (0, v)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+            pl.BlockSpec((vb,), lambda t, v: (v,)),
+            pl.BlockSpec((vb,), lambda t, v: (v,)),
+        ],
+        out_specs=[pl.BlockSpec((tb,), lambda t, v: (t,))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((Np,), jnp.float32)
+                   for _ in range(4)],
+        scratch_shapes=_scratch3(tb) + _scratch3(tb),
+        interpret=interp.resolve(interpret),
+    )(feats_p, w_p, labels_p, lps_p, lpk_p)
+    return nll_s[:N], nll_k[:N], lse_s[:N], lse_k[:N]
+
+
+def lace2_bwd_pallas(feats, w_head, labels, log_prior_s, log_prior_k,
+                     lse_s, lse_k, token_scale_s, token_scale_k, *,
+                     tau: float = 1.0, tb: int = 128, vb: int = 256,
+                     interpret: bool = True):
+    """Fused dual backward: (df_s, df_k, dW_s), all f32.
+
+    token_scale_s/_k (N,): per-token ``weight_i * cotangent_side`` — the
+    two sides may carry different loss cotangents. The df pass shares one
+    recomputed logits tile between both softmax cotangents; dW is emitted
+    for the server side only (the split step discards the client head
+    grad), reusing the single-prior dW kernel.
+    """
+    N, d = feats.shape
+    V = w_head.shape[1]
+    Np = ((N + tb - 1) // tb) * tb
+    Vp = ((V + vb - 1) // vb) * vb
+    feats_p = _pad_to(feats, Np, 0)
+    labels_p = _pad_to(labels, Np, 0, value=-1)
+    w_p = _pad_to(w_head, Vp, 1)
+    lps_p = _pad_to(log_prior_s, Vp, 0, value=NEG_INF)
+    lpk_p = _pad_to(log_prior_k, Vp, 0, value=NEG_INF)
+    lses_p = _pad_to(lse_s, Np, 0, value=0.0)
+    lsek_p = _pad_to(lse_k, Np, 0, value=0.0)
+    gws_p = _pad_to(token_scale_s, Np, 0, value=0.0)
+    gwk_p = _pad_to(token_scale_k, Np, 0, value=0.0)
+    ntb, nvb = Np // tb, Vp // vb
+
+    df_s, df_k = pl.pallas_call(
+        functools.partial(_bwd2_dfeats_kernel, vb=vb, nvb=nvb, tau=tau),
+        grid=(ntb, nvb),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda t, v: (t, 0)),
+            pl.BlockSpec((d, vb), lambda t, v: (0, v)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+            pl.BlockSpec((vb,), lambda t, v: (v,)),
+            pl.BlockSpec((vb,), lambda t, v: (v,)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+            pl.BlockSpec((tb,), lambda t, v: (t,)),
+        ],
+        out_specs=[pl.BlockSpec((tb, d), lambda t, v: (t, 0)),
+                   pl.BlockSpec((tb, d), lambda t, v: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Np, d), jnp.float32),
+                   jax.ShapeDtypeStruct((Np, d), jnp.float32)],
+        interpret=interp.resolve(interpret),
+    )(feats_p, w_p, labels_p, lps_p, lpk_p, lses_p, lsek_p, gws_p, gwk_p)
+
+    dw_s = pl.pallas_call(
+        functools.partial(_bwd_dw_kernel, vb=vb, ntb=ntb, tau=tau),
+        grid=(nvb, ntb),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda v, t: (t, 0)),
+            pl.BlockSpec((d, vb), lambda v, t: (0, v)),
+            pl.BlockSpec((tb,), lambda v, t: (t,)),
+            pl.BlockSpec((vb,), lambda v, t: (v,)),
+            pl.BlockSpec((tb,), lambda v, t: (t,)),
+            pl.BlockSpec((tb,), lambda v, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((d, vb), lambda v, t: (0, v)),
+        out_shape=jax.ShapeDtypeStruct((d, Vp), jnp.float32),
+        interpret=interp.resolve(interpret),
+    )(feats_p, w_p, labels_p, lps_p, lses_p, gws_p)
+    return df_s[:N], df_k[:N], dw_s[:, :V]

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interp
+
 
 def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
                   C_scr, n_scr, m_scr, *, L: int):
@@ -98,5 +100,5 @@ def mlstm_chunk_pallas(q, k, v, i_raw, f_log, *, chunk: int = 64,
             pltpu.VMEM((dk,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=interp.resolve(interpret),
     )(q, k, v, i_raw, f_log)

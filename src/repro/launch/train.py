@@ -51,6 +51,9 @@ the client schedule by cohort/clients.
 Dispatch-efficiency knobs (README §Performance,
 ``benchmarks/BENCH_dispatch.json``): ``--precision bf16`` runs the
 engine compute in bfloat16 against f32 master params,
+``--boundary dual`` reverts the one-pass fused eq. 14/15 loss stage to
+the literal two ``value_and_grad`` passes (gradients are bit-identical
+either way; see ``benchmarks/BENCH_boundary.json``),
 ``--rounds-per-call R`` fuses R whole rounds into one compiled dispatch
 (bit-identical to unfused rounds at f32; keep 1 while debugging), and
 ``--no-donate`` disables the in-place (donated) round-state update.
@@ -122,6 +125,7 @@ def spec_from_args(args) -> api.ExperimentSpec:
             cohort=args.cohort, staleness_decay=args.staleness_decay,
             mix_rate=args.mix_rate, server_optimizer=server_opt,
             unroll=args.unroll, precision=args.precision,
+            boundary=args.boundary,
             rounds_per_call=args.rounds_per_call,
             donate=not args.no_donate,
             snapshots=args.snapshots, ring_size=args.ring_size,
@@ -229,6 +233,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="engine compute policy: bf16 forward/backward "
                          "against f32 master params (priors, losses, "
                          "updates, aggregation stay f32)")
+    ap.add_argument("--boundary", default="fused",
+                    choices=("dual", "fused"),
+                    help="split-boundary loss schedule: 'fused' computes "
+                         "the eq. 14/15 pair in one pass over a shared "
+                         "logits matmul (default; gradient-bitwise vs. "
+                         "dual), 'dual' keeps two value_and_grad passes")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="rounds fused into one jitted dispatch (outer "
                          "lax.scan over whole rounds; keep 1 when "

@@ -1,0 +1,356 @@
+"""One-pass split boundary (``boundary="fused"``) vs the two-pass dual.
+
+Three layers under test:
+
+* the ``lace2_*`` fused dual-prior ops against two-call compositions of
+  the single-prior reference (values + grads for BOTH priors, prime
+  token counts, zero-weight clients, bf16 inputs);
+* the engine's per-backend fused-vs-dual contract: all gradients —
+  hence the parameter updates — bit-identical f32 (``logits``, ``lace``
+  here; ``lace_dp`` on a real 4-device mesh in the subprocess test),
+  loss metrics equal for ``logits`` and 1-ulp for the LACE backends
+  (their dual baseline reads values through ``value_and_grad``, whose
+  residual-saving scan compiles to different roundings — see the
+  ``repro.core.engine`` docstring);
+* the spec/CLI surface: ``ExecutionSpec.boundary`` validation and the
+  ``launch/train.py --boundary`` round-trip.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ScalaConfig
+from repro.core import engine
+from repro.kernels.lace.ops import (lace2_grads, lace2_loss, lace2_nll_sum,
+                                    lace_loss, lace_nll_sum)
+from repro.kernels.lace.ref import lace_ref
+
+
+# --------------------------------------------------------------------------
+# lace2 ops vs two-call reference compositions
+# --------------------------------------------------------------------------
+
+
+def _case(G, N, d, V, seed, dtype=jnp.float32, zero_client=False):
+    key = jax.random.PRNGKey(seed)
+    feats = jax.random.normal(key, (G, N, d)).astype(dtype)
+    W = (jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+         ).astype(dtype)
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (G, N), 0, V)
+    p_s = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (V,)))
+    p_k = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 4), (G, V)), axis=-1)
+    w = jax.random.uniform(jax.random.fold_in(key, 5), (G, N)) + 0.1
+    if zero_client:
+        w = w.at[0].set(0.0)                    # masked-out client
+    return feats, W, labels, p_s, p_k, w
+
+
+def _ref_pair(feats, W, labels, p_s, p_k, w, tau=1.0):
+    """Two independent single-prior references over the flattened batch."""
+    G, N, d = feats.shape
+    f = feats.reshape(-1, d).astype(jnp.float32)
+    l = labels.reshape(-1)
+    wf = w.reshape(-1)
+    ids = jnp.repeat(jnp.arange(G), N)
+    ls = lace_ref(f, W.astype(jnp.float32), l, prior_rows=p_s[None],
+                  tau=tau, weights=wf)
+    lk = lace_ref(f, W.astype(jnp.float32), l, prior_rows=p_k,
+                  prior_ids=ids, tau=tau, weights=wf)
+    return ls, lk
+
+
+@pytest.mark.parametrize("G,N,d,V", [(3, 257, 16, 61),     # prime tokens
+                                     (4, 48, 24, 33),
+                                     (2, 100, 8, 130)])
+def test_lace2_loss_matches_two_call_reference(G, N, d, V):
+    feats, W, labels, p_s, p_k, w = _case(G, N, d, V, G * V)
+    got_s, got_k = lace2_loss(feats, W, labels, p_s[None], None, p_k,
+                              jnp.arange(G), w, 1.3, 1e-8, 64)
+    ref_s, ref_k = _ref_pair(feats, W, labels, p_s, p_k, w, tau=1.3)
+    np.testing.assert_allclose(float(got_s), float(ref_s), rtol=1e-5)
+    np.testing.assert_allclose(float(got_k), float(ref_k), rtol=1e-5)
+
+
+def test_lace2_loss_zero_weight_client():
+    feats, W, labels, p_s, p_k, w = _case(3, 40, 8, 17, 9, zero_client=True)
+    got_s, got_k = lace2_loss(feats, W, labels, p_s[None], None, p_k,
+                              jnp.arange(3), w, 1.0, 1e-8, 16)
+    ref_s, ref_k = _ref_pair(feats, W, labels, p_s, p_k, w)
+    np.testing.assert_allclose(float(got_s), float(ref_s), rtol=1e-5)
+    np.testing.assert_allclose(float(got_k), float(ref_k), rtol=1e-5)
+
+
+def test_lace2_loss_bf16_inputs():
+    feats, W, labels, p_s, p_k, w = _case(2, 64, 16, 50, 3,
+                                          dtype=jnp.bfloat16)
+    got_s, got_k = lace2_loss(feats, W, labels, p_s[None], None, p_k,
+                              jnp.arange(2), w, 1.0, 1e-8, 32)
+    # the chunked op upcasts per chunk: f32-level agreement with the
+    # f32 reference over the SAME (bf16-rounded) inputs
+    ref_s, ref_k = _ref_pair(feats.astype(jnp.float32),
+                             W.astype(jnp.float32), labels, p_s, p_k, w)
+    np.testing.assert_allclose(float(got_s), float(ref_s), rtol=1e-5)
+    np.testing.assert_allclose(float(got_k), float(ref_k), rtol=1e-5)
+
+
+def test_lace2_pair_op_grads_match_reference_autodiff():
+    """The custom VJP of the pair op: a weighted combination of both
+    losses must backprop like the same combination of the references."""
+    feats, W, labels, p_s, p_k, w = _case(3, 57, 12, 29, 11)
+
+    def fused(f, wh):
+        a, b = lace2_loss(f, wh, labels, p_s[None], None, p_k,
+                          jnp.arange(3), w, 1.0, 1e-8, 16)
+        return 0.7 * a + 1.3 * b
+
+    def ref(f, wh):
+        a, b = _ref_pair(f, wh, labels, p_s, p_k, w)
+        return 0.7 * a + 1.3 * b
+
+    gf, gw = jax.grad(fused, argnums=(0, 1))(feats, W)
+    rf, rw = jax.grad(ref, argnums=(0, 1))(feats, W)
+    np.testing.assert_allclose(gf, rf, atol=1e-6)
+    np.testing.assert_allclose(gw, rw, atol=1e-6)
+
+
+def test_lace2_grads_direct_form_bitwise_vs_two_pass():
+    """The engine's direct form: values and per-side grads must be
+    bit-identical to the exact two-pass ``value_and_grad`` patterns the
+    dual engine branch runs (compared in the same eager regime)."""
+    feats, W, labels, p_s, p_k, w = _case(3, 257, 16, 61, 21)
+    ids = jnp.arange(3)
+    ck = 64
+
+    out_s, out_k, df_s, df_k, dw_s, w_sum = lace2_grads(
+        feats, W, labels, p_s[None], None, p_k, ids, w, 1.0, 1e-8, ck)
+
+    ls, (gf_s, gW_s) = jax.value_and_grad(
+        lambda f, wh: lace_loss(f, wh, labels, p_s[None], None, w,
+                                1.0, 1e-8, ck), argnums=(0, 1))(feats, W)
+    lk, gf_k = jax.value_and_grad(
+        lambda f: lace_loss(f, W, labels, p_k, ids, w,
+                            1.0, 1e-8, ck))(feats)
+
+    assert np.array_equal(np.asarray(df_s), np.asarray(gf_s))
+    assert np.array_equal(np.asarray(df_k), np.asarray(gf_k))
+    assert np.array_equal(np.asarray(dw_s), np.asarray(gW_s))
+    # the direct-form values match the plain forward bitwise; the
+    # value_and_grad readings sit within 1 ulp (see module docstring)
+    direct_s = lace_loss(feats, W, labels, p_s[None], None, w,
+                         1.0, 1e-8, ck)
+    assert np.array_equal(np.asarray(out_s), np.asarray(direct_s))
+    np.testing.assert_allclose(float(out_s), float(ls), rtol=1e-6)
+    np.testing.assert_allclose(float(out_k), float(lk), rtol=1e-6)
+
+
+def test_lace2_nll_sum_and_raw_grads_bitwise():
+    """The ``mean=False`` flavor backs the lace_dp branch: raw weighted
+    sums + unit-cotangent grads, bitwise vs the ``lace_nll_sum`` pair."""
+    feats, W, labels, p_s, p_k, w = _case(2, 53, 8, 19, 33)
+    ids = jnp.arange(2)
+    ck = 16
+
+    ns, nk, df_s, df_k, dw_s, _ = lace2_grads(
+        feats, W, labels, p_s[None], None, p_k, ids, w, 1.0, 1e-8, ck,
+        mean=False)
+    pair = lace2_nll_sum(feats, W, labels, p_s[None], None, p_k, ids, w,
+                         1.0, 1e-8, ck)
+    assert np.array_equal(np.asarray(ns), np.asarray(pair[0]))
+    assert np.array_equal(np.asarray(nk), np.asarray(pair[1]))
+
+    _, (gf_s, gW_s) = jax.value_and_grad(
+        lambda f, wh: lace_nll_sum(f, wh, labels, p_s[None], None, w,
+                                   1.0, 1e-8, ck), argnums=(0, 1))(feats, W)
+    _, gf_k = jax.value_and_grad(
+        lambda f: lace_nll_sum(f, W, labels, p_k, ids, w,
+                               1.0, 1e-8, ck))(feats)
+    assert np.array_equal(np.asarray(df_s), np.asarray(gf_s))
+    assert np.array_equal(np.asarray(df_k), np.asarray(gf_k))
+    assert np.array_equal(np.asarray(dw_s), np.asarray(gW_s))
+
+
+# --------------------------------------------------------------------------
+# engine: fused vs dual, per backend
+# --------------------------------------------------------------------------
+
+
+def _grads_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            f"leaf {np.shape(x)} differs"
+
+
+def _engine_setups():
+    from test_engine import _setup_alexnet, _setup_transformer
+    from helpers import tiny_cfg
+
+    cfg = tiny_cfg()
+    yield ("transformer",) + _setup_transformer(jax.random.PRNGKey(0), cfg)
+    yield ("alexnet",) + _setup_alexnet(jax.random.PRNGKey(1))
+
+
+@pytest.mark.parametrize("backend", ["logits", "lace"])
+def test_engine_fused_grads_bitwise(backend):
+    for name, model, params, batch in _engine_setups():
+        if backend != "logits" and model.server_trunk is None:
+            continue
+        for adj in ((True, True), (True, False), (False, True)):
+            sc = ScalaConfig(tau=1.3, adjust_server=adj[0],
+                             adjust_client=adj[1])
+            gd, md = engine.split_step_grads(model, params, batch, sc,
+                                             backend=backend,
+                                             boundary="dual")
+            gf, mf = engine.split_step_grads(model, params, batch, sc,
+                                             backend=backend,
+                                             boundary="fused")
+            _grads_bitwise(gd, gf)
+            if backend == "logits":
+                _grads_bitwise(md, mf)          # metrics incl. accuracy
+            else:
+                for k in md:                    # LACE metrics: 1 ulp
+                    np.testing.assert_allclose(np.asarray(md[k]),
+                                               np.asarray(mf[k]),
+                                               rtol=1e-6)
+
+
+def test_engine_logits_label_smoothing_falls_back_to_dual():
+    """ls > 0 must route the fused request through the dual schedule —
+    the outputs are then trivially bitwise equal."""
+    for name, model, params, batch in _engine_setups():
+        sc = ScalaConfig(tau=1.0, label_smoothing=0.1)
+        gd, md = engine.split_step_grads(model, params, batch, sc,
+                                         backend="logits", boundary="dual")
+        gf, mf = engine.split_step_grads(model, params, batch, sc,
+                                         backend="logits", boundary="fused")
+        _grads_bitwise(gd, gf)
+        _grads_bitwise(md, mf)
+
+
+def test_engine_fused_with_participation_mask():
+    """The fused path must fold the 0/1 mask exactly like the dual one
+    (masked clients: zero loss weight, zero grads)."""
+    from test_engine import _setup_transformer
+    from helpers import tiny_cfg
+
+    model, params, batch = _setup_transformer(jax.random.PRNGKey(5),
+                                              tiny_cfg())
+    mask = jnp.array([1.0, 0.0, 1.0])
+    sc = ScalaConfig(tau=1.0)
+    for backend in ("logits", "lace"):
+        gd, _ = engine.split_step_grads(model, params, batch, sc,
+                                        backend=backend, boundary="dual",
+                                        mask=mask)
+        gf, _ = engine.split_step_grads(model, params, batch, sc,
+                                        backend=backend, boundary="fused",
+                                        mask=mask)
+        _grads_bitwise(gd, gf)
+        zero = jax.tree.map(lambda g: np.asarray(g[1]), gf["client"])
+        assert all(np.all(z == 0) for z in jax.tree.leaves(zero))
+
+
+def test_engine_unknown_boundary_rejected():
+    from test_engine import _setup_alexnet
+
+    model, params, batch = _setup_alexnet(jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="unknown boundary"):
+        engine.split_step_grads(model, params, batch, ScalaConfig(),
+                                boundary="half")
+
+
+# --------------------------------------------------------------------------
+# lace_dp on a real mesh (subprocess, forced host devices)
+# --------------------------------------------------------------------------
+
+DP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, "tests")
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from helpers import tiny_cfg
+from test_engine import _setup_transformer
+from repro.configs import ScalaConfig
+from repro.core import engine
+
+model, params, batch = _setup_transformer(jax.random.PRNGKey(0), tiny_cfg(),
+                                          C=4)
+sc = ScalaConfig(tau=1.3, grad_reduce_dtype=None)
+mesh = Mesh(np.array(jax.devices()).reshape(4,), ("data",))
+bspecs = jax.tree.map(lambda _: P("data"), batch)
+
+outs = {}
+for boundary in ("dual", "fused"):
+    new_p, mets = engine.local_step(model, params, batch, sc,
+                                    backend="lace_dp", boundary=boundary,
+                                    mesh=mesh, batch_specs=bspecs)
+    outs[boundary] = (new_p, mets)
+
+pd, md = outs["dual"]; pf, mf = outs["fused"]
+bad = sum(0 if np.array_equal(np.asarray(x), np.asarray(y)) else 1
+          for x, y in zip(jax.tree.leaves(pd), jax.tree.leaves(pf)))
+merr = max(abs(float(md[k]) - float(mf[k])) /
+           (1e-8 + abs(float(md[k]))) for k in md)
+print("RESULT " + json.dumps({"bad_param_leaves": bad, "metric_rel": merr}))
+"""
+
+
+@pytest.mark.slow
+def test_lace_dp_fused_params_bitwise_on_mesh():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", DP_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout[-2000:]
+    res = json.loads(line[0][len("RESULT "):])
+    assert res["bad_param_leaves"] == 0, res
+    assert res["metric_rel"] < 1e-6, res
+
+
+# --------------------------------------------------------------------------
+# spec / CLI surface
+# --------------------------------------------------------------------------
+
+
+def test_execution_spec_boundary_validation():
+    from repro import api
+
+    assert api.ExecutionSpec().boundary == "fused"
+    assert api.ExecutionSpec(boundary="dual").boundary == "dual"
+    with pytest.raises(ValueError, match="unknown boundary"):
+        api.ExecutionSpec(boundary="twopass")
+
+
+def test_train_cli_boundary_roundtrip(tmp_path):
+    from repro import api
+    from repro.launch.train import build_parser, spec_from_args
+
+    args = build_parser().parse_args(
+        ["--boundary", "dual", "--clients", "4", "--rounds", "1"])
+    spec = spec_from_args(args)
+    assert spec.execution.boundary == "dual"
+    # JSON round-trip (the --dump-config / --config path)
+    p = tmp_path / "spec.json"
+    p.write_text(spec.to_json())
+    back = api.ExperimentSpec.from_json(p.read_text())
+    assert back.execution.boundary == "dual"
+    assert back == spec

@@ -7,7 +7,8 @@ import pytest
 from repro.kernels.flash_attn.kernel import flash_attention_pallas
 from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.flash_attn.ref import mha_ref
-from repro.kernels.lace.kernel import lace_bwd_pallas, lace_fwd_pallas
+from repro.kernels.lace.kernel import (lace2_bwd_pallas, lace2_fwd_pallas,
+                                       lace_bwd_pallas, lace_fwd_pallas)
 from repro.kernels.lace.ops import lace_loss, lace_loss_flat
 from repro.kernels.lace.ref import lace_ref
 from repro.kernels.mlstm.kernel import mlstm_chunk_pallas
@@ -91,6 +92,70 @@ def test_lace_flat_wrapper():
     got = lace_loss_flat(feats, W, labels)
     ref = lace_ref(feats, W, labels)
     np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# LACE2 (fused dual-prior boundary kernel)
+# --------------------------------------------------------------------------
+
+
+def _lace2_case(N, d, V, seed):
+    key = jax.random.PRNGKey(seed)
+    feats = jax.random.normal(key, (N, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+    prior_s = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 3), (V,)))
+    prior_k = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 4), (V,)))
+    return feats, W, labels, prior_s, prior_k
+
+
+@pytest.mark.parametrize("N,d,V,tb,vb", LACE_SHAPES)
+def test_lace2_fwd_kernel_matches_two_single_passes(N, d, V, tb, vb):
+    feats, W, labels, prior_s, prior_k = _lace2_case(N, d, V, N + V)
+    lps, lpk = jnp.log(prior_s + 1e-8), jnp.log(prior_k + 1e-8)
+    nll_s, nll_k, lse_s, lse_k = lace2_fwd_pallas(feats, W, labels, lps, lpk,
+                                                  tau=1.3, tb=tb, vb=vb)
+    rs_nll, rs_lse = lace_fwd_pallas(feats, W, labels, lps, tau=1.3,
+                                     tb=tb, vb=vb)
+    rk_nll, rk_lse = lace_fwd_pallas(feats, W, labels, lpk, tau=1.3,
+                                     tb=tb, vb=vb)
+    np.testing.assert_allclose(nll_s, rs_nll, atol=1e-5)
+    np.testing.assert_allclose(nll_k, rk_nll, atol=1e-5)
+    np.testing.assert_allclose(lse_s, rs_lse, atol=1e-5)
+    np.testing.assert_allclose(lse_k, rk_lse, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,d,V,tb,vb", LACE_SHAPES[:2])
+def test_lace2_bwd_kernel_matches_refs(N, d, V, tb, vb):
+    feats, W, labels, prior_s, prior_k = _lace2_case(N, d, V, V)
+    key = jax.random.PRNGKey(7 * V)
+    w = (jax.random.uniform(key, (N,)) > 0.2).astype(jnp.float32)
+    lps, lpk = jnp.log(prior_s + 1e-8), jnp.log(prior_k + 1e-8)
+    _, _, lse_s, lse_k = lace2_fwd_pallas(feats, W, labels, lps, lpk,
+                                          tb=tb, vb=vb)
+    ts = w / w.sum()
+    df_s, df_k, dw_s = lace2_bwd_pallas(feats, W, labels, lps, lpk,
+                                        lse_s, lse_k, ts, ts, tb=tb, vb=vb)
+    # side-by-side vs the single-prior bwd kernel...
+    rdf_s, rdw_s = lace_bwd_pallas(feats, W, labels, lps, lse_s, ts,
+                                   tb=tb, vb=vb)
+    rdf_k, _ = lace_bwd_pallas(feats, W, labels, lpk, lse_k, ts,
+                               tb=tb, vb=vb)
+    np.testing.assert_allclose(df_s, rdf_s, atol=1e-6)
+    np.testing.assert_allclose(df_k, rdf_k, atol=1e-6)
+    np.testing.assert_allclose(dw_s, rdw_s, atol=1e-6)
+    # ...and vs autodiff of the jnp reference (both sides)
+    gdf_s, gdw_s = jax.grad(
+        lambda f, ww: lace_ref(f, ww, labels, prior_rows=prior_s[None],
+                               weights=w), argnums=(0, 1))(feats, W)
+    gdf_k = jax.grad(
+        lambda f: lace_ref(f, W, labels, prior_rows=prior_k[None],
+                           weights=w))(feats)
+    np.testing.assert_allclose(df_s, gdf_s, atol=1e-5)
+    np.testing.assert_allclose(df_k, gdf_k, atol=1e-5)
+    np.testing.assert_allclose(dw_s, gdw_s, atol=1e-5)
 
 
 # --------------------------------------------------------------------------
