@@ -272,6 +272,26 @@ def bench_async(quick: bool) -> None:
               f"{entry['seconds']}", flush=True)
 
 
+def bench_serve(quick: bool) -> None:
+    from benchmarks.serve import bench_serve as _bench
+
+    res = _bench(arch=None if quick else "qwen1.5-0.5b",
+                 n_requests=8 if quick else 12,
+                 slots_list=(2,) if quick else (2, 4),
+                 reps=2)
+    for slots, entry in res["slots"].items():
+        for leg in ("batch", "open_loop"):
+            for admission in ("static", "continuous"):
+                row = entry[leg][admission]
+                print(f"serve,slots={slots}:{leg},{admission},"
+                      f"{row['tok_per_sec']},,{row['seconds']}", flush=True)
+            print(f"serve,slots={slots}:{leg},continuous_speedup,"
+                  f"{entry[leg]['continuous_speedup']},,", flush=True)
+        row = entry["paged"]
+        print(f"serve,slots={slots}:paged,continuous,"
+              f"{row['tok_per_sec']},,{row['seconds']}", flush=True)
+
+
 TABLES = {
     "t1": bench_table1,
     "t2": bench_table2,
@@ -286,6 +306,7 @@ TABLES = {
     "boundary": bench_boundary,
     "scale": bench_scale,
     "roofline": bench_roofline,
+    "serve": bench_serve,
 }
 
 
@@ -296,13 +317,15 @@ def smoke() -> None:
     ``benchmarks.async_rounds --smoke``), one fused/bf16 run through the
     dispatch knobs, the dispatch fusion regression guard, the
     split-boundary fused-vs-dual loss guard, the delta-vs-dense snapshot
-    scale guard, the topk-vs-sort arrival-pop guard, plus the roofline
+    scale guard, the topk-vs-sort arrival-pop guard, the
+    continuous-vs-static serving guard, plus the roofline
     reprint. The dispatch/scale/boundary benches also have their own
     --smoke."""
     from benchmarks.boundary import smoke_guard as boundary_smoke_guard
     from benchmarks.dispatch import smoke_guard
     from benchmarks.scale import (arrival_smoke_guard,
                                   smoke_guard as scale_smoke_guard)
+    from benchmarks.serve import smoke_guard as serve_smoke_guard
 
     print(HEADER, flush=True)
     for execution in ("subset", "masked", "sparse"):
@@ -340,6 +363,13 @@ def smoke() -> None:
     aguard = arrival_smoke_guard()
     print("SMOKE,arrival_guard,topk_speedup_vs_sort,"
           f"{aguard['K']['10000']['topk_speedup_vs_sort']},,", flush=True)
+    # regression guard: continuous batching must sustain >= the static
+    # wave-barrier token rate on the serve engine (shared with
+    # `benchmarks.serve --smoke`)
+    vguard = serve_smoke_guard()
+    print("SMOKE,serve_guard,continuous_speedup,"
+          f"{vguard['slots']['2']['batch']['continuous_speedup']},,",
+          flush=True)
     bench_roofline(True)
 
 

@@ -24,6 +24,11 @@ unit sweep manifests store and ``train.py --config/--dump-config``
 exchange. The kwarg-style constructors (``engine.make_round_runner``,
 ``fed.make_async_runner``, ``baselines.make_fl_round``) remain the
 internal layer the builder calls.
+
+:class:`ServeSpec` / :func:`build_serve` are the serving counterparts:
+they restore a federated training checkpoint, merge it into the global
+model, and return a :class:`ServeProgram` around the
+continuous-batching :class:`repro.serve.ServeEngine`.
 """
 from repro.api.build import (  # noqa: F401
     ProgramState,
@@ -32,6 +37,13 @@ from repro.api.build import (  # noqa: F401
     donated_jit,
 )
 from repro.api.deprecation import warn_once  # noqa: F401
+from repro.api.serving import (  # noqa: F401
+    ADMISSION_MODES,
+    ServeProgram,
+    ServeSpec,
+    build_serve,
+    restore_global_params,
+)
 from repro.api.specs import (  # noqa: F401
     EXECUTION_MODES,
     FL_METHODS,
@@ -53,9 +65,10 @@ from repro.api.trainer import (  # noqa: F401
 )
 
 __all__ = [
-    "EXECUTION_MODES", "FL_METHODS", "METHODS", "OPTIMIZER_ALIASES",
-    "OPTIMIZERS", "SCALA_METHODS", "SFL_METHODS",
+    "ADMISSION_MODES", "EXECUTION_MODES", "FL_METHODS", "METHODS",
+    "OPTIMIZER_ALIASES", "OPTIMIZERS", "SCALA_METHODS", "SFL_METHODS",
     "DataSpec", "ExecutionSpec", "ExperimentSpec", "FedSpec", "OptimSpec",
-    "ProgramState", "RoundProgram", "Trainer", "build", "build_image_data",
-    "build_lm_data", "donated_jit", "warn_once",
+    "ProgramState", "RoundProgram", "ServeProgram", "ServeSpec", "Trainer",
+    "build", "build_image_data", "build_lm_data", "build_serve",
+    "donated_jit", "restore_global_params", "warn_once",
 ]

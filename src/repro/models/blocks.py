@@ -6,6 +6,7 @@ FFN inside the mixer (ffn == 'none').
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -110,6 +111,57 @@ def block_apply(params, x, spec: BlockSpec, cfg: ModelConfig, *,
         y, aux = moe.moe_apply(params["ffn"], h, cfg)
         x = x + y
     return x, aux
+
+
+def block_prefill(params, x, spec: BlockSpec, cfg: ModelConfig, *,
+                  positions, max_len: int, cache_dtype, memory=None):
+    """Full-sequence forward that also emits this block's decode cache.
+
+    Same math as :func:`block_apply` (router aux dropped — serving does
+    not train), but the mixer pass additionally scatters the state a
+    subsequent :func:`block_decode` needs: roped k/v rows into a fresh
+    ring/dense KV cache for attention, the final conv/SSM carry for the
+    recurrent mixers. The returned cache is structured exactly like
+    :func:`block_cache_init` so decode can continue from it unchanged.
+
+    Returns (y, cache).
+    """
+    h = norms.rms_norm_apply(params["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        length = max_len if spec.window is None else min(max_len, spec.window)
+        h, (k, v) = attention.attn_apply(
+            params["mixer"], h, cfg, positions=positions, window=spec.window,
+            chunked=_use_chunked(x.shape[1], spec.window), return_kv=True)
+        cache = attention.prefill_cache(k, v, positions, length, cache_dtype)
+    elif spec.mixer == "mamba":
+        h, cache = mamba.mamba_prefill(params["mixer"], h, cfg, cache_dtype)
+    elif spec.mixer == "mlstm":
+        h, cache = xlstm.mlstm_prefill(params["mixer"], h, cfg, cache_dtype)
+    elif spec.mixer == "slstm":
+        h, cache = xlstm.slstm_prefill(params["mixer"], h, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+
+    if spec.cross_attn:
+        h = norms.rms_norm_apply(params["norm_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_attn_apply(params["cross"], h, memory, cfg)
+
+    if spec.ffn == "dense":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp.mlp_apply(params["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h = norms.rms_norm_apply(params["norm2"], x, cfg.norm_eps)
+        # decode parity: one-token decode routes each token alone, so
+        # the capacity gate (the only cross-token coupling in the MoE)
+        # never drops there. Prefill must route drop-free too, or the
+        # fused pass diverges from the token-by-token path it replaces.
+        dropless = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        y, _ = moe.moe_apply(params["ffn"], h, dropless)
+        x = x + y
+    return x, cache
 
 
 # ---------------------------------------------------------------------------

@@ -167,18 +167,47 @@ def _repeat_kv(k, num_heads):
 
 
 def attn_apply(params, x, cfg, *, positions, window=None,
-               chunked: bool = False):
-    """Self-attention over a full sequence (train / prefill)."""
+               chunked: bool = False, return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill).
+
+    ``return_kv=True`` additionally returns the post-rope, pre-GQA-repeat
+    ``(k, v)`` — exactly what the decode cache stores — so the fused
+    serving prefill can scatter the cache from the same projections it
+    attends with instead of re-projecting per token.
+    """
     q = _project_q(params, x, cfg)
     k, v = _project_kv(params, x, cfg)
     if cfg.pos_embed == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    kv = (k, v)
     k = _repeat_kv(k, cfg.num_heads)
     v = _repeat_kv(v, cfg.num_heads)
     attend = attend_chunked if chunked else attend_dense
     out = attend(q, k, v, positions, positions, causal=True, window=window)
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return (y, kv) if return_kv else y
+
+
+def prefill_cache(k, v, positions, cache_len: int, dtype):
+    """Scatter a prompt's roped k/v (B, P, kv, hd) into a fresh decode
+    cache of length ``cache_len``.
+
+    Position ``p`` lands in slot ``p % cache_len`` — the ring layout
+    :func:`repro.models.blocks._decode_ring` reads for windowed layers
+    (for global layers ``cache_len >= P`` so the modulo is the
+    identity). Only the last ``min(P, cache_len)`` tokens are kept: a
+    ring holds exactly that many, and earlier positions would be
+    overwritten by the scatter anyway.
+    """
+    P = k.shape[1]
+    n = min(P, cache_len)
+    slots = positions[P - n:] % cache_len
+    kc = jnp.zeros((k.shape[0], cache_len) + k.shape[2:], dtype)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:, slots].set(k[:, P - n:].astype(dtype))
+    vc = vc.at[:, slots].set(v[:, P - n:].astype(dtype))
+    return {"k": kc, "v": vc}
 
 
 def cross_attn_apply(params, x, memory, cfg):

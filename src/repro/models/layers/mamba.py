@@ -133,6 +133,31 @@ def mamba_apply(params, x, cfg):
     return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
 
 
+def mamba_prefill(params, x, cfg, cache_dtype):
+    """Full-sequence forward that also returns the decode cache.
+
+    Identical math to :func:`mamba_apply`; the conv tail and final SSM
+    state that ``mamba_apply`` discards become the serving cache, so a
+    prompt is absorbed in one dispatch instead of one per token.
+    """
+    di, _, N, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * A)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    h0 = jnp.zeros((x.shape[0], di, N), jnp.float32)
+    h_all, h_last = _scan_chunked(a, b, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+    return y, {"conv": conv_state.astype(cache_dtype), "h": h_last}
+
+
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------

@@ -226,6 +226,23 @@ def mlstm_apply(params, x, cfg):
     return _mlstm_out(params, h, z, cfg, x.dtype)
 
 
+def mlstm_prefill(params, x, cfg, cache_dtype):
+    """Full-sequence forward that also returns the decode cache: the
+    conv tail and the chunkwise-carried (C, n, m) state that
+    :func:`mlstm_apply` discards."""
+    q, k, v, i_raw, f_log, z, conv_state = _mlstm_qkvg(params, x, cfg)
+    B = x.shape[0]
+    di, H, hd = _mlstm_dims(cfg)
+    state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    h, (C, n, m) = mlstm_chunk(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), i_raw, f_log, state,
+                               cfg.xlstm.chunk_size)
+    y = _mlstm_out(params, h, z, cfg, x.dtype)
+    return y, {"conv": conv_state.astype(cache_dtype), "C": C, "n": n, "m": m}
+
+
 def mlstm_init_cache(cfg, batch: int, dtype):
     di, H, hd = _mlstm_dims(cfg)
     dc = cfg.xlstm.conv_kernel
@@ -354,6 +371,14 @@ def _slstm_out(params, h, x, cfg):
 def slstm_apply(params, x, cfg):
     h, _ = slstm_scan(params, x.astype(jnp.float32))
     return _slstm_out(params, h, x, cfg)
+
+
+def slstm_prefill(params, x, cfg):
+    """Full-sequence forward that also returns the decode cache (the
+    final (c, n, m, h) carry of the exact recurrence)."""
+    h, (c, n, m, hf) = slstm_scan(params, x.astype(jnp.float32))
+    y = _slstm_out(params, h, x, cfg)
+    return y, {"c": c, "n": n, "m": m, "h": hf}
 
 
 def slstm_init_cache(cfg, batch: int, dtype):

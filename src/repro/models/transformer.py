@@ -228,6 +228,66 @@ def forward_prefill(params, batch, cfg: ModelConfig):
     return logits
 
 
+def forward_prefill_cached(params, batch, cfg: ModelConfig, max_len: int,
+                           cache_dtype=None):
+    """Fused serving prefill: one trunk pass over the whole prompt that
+    also scatters the full KV/SSM decode cache — replaces the P-dispatch
+    token-by-token prefill loop with a single dispatch.
+
+    Returns (logits (B, 1, V), cache): logits at the last prompt
+    position (the distribution over the first generated token) and a
+    cache structured exactly like :func:`init_decode_cache`
+    ``(cfg, B, max_len)`` so :func:`decode_step` continues from it
+    unchanged. Vision frontends are unsupported (the image prefix would
+    shift cached positions relative to the token index decode uses);
+    audio cross-attention memory is recomputed from the batch each
+    decode step, so nothing needs caching for it.
+    """
+    if cfg.frontend == "vision":
+        raise NotImplementedError(
+            "forward_prefill_cached does not support vision prefixes")
+    dtype = cache_dtype or dtype_of(cfg.dtype)
+    client_l, prologue_l, _, n_scan = _layout(cfg)
+    client_params = params["client"]
+    x, positions, memory = _embed_inputs(client_params, batch, cfg)
+
+    cache = {"client": {}, "prologue": {}}
+    for i, l in enumerate(client_l):
+        x, c = B.block_prefill(client_params["blocks"][f"blk{i}"], x,
+                               cfg.block_spec(l), cfg, positions=positions,
+                               max_len=max_len, cache_dtype=dtype,
+                               memory=memory)
+        cache["client"][f"blk{i}"] = c
+    for i, l in enumerate(prologue_l):
+        x, c = B.block_prefill(params["server"]["prologue"][f"blk{i}"], x,
+                               cfg.block_spec(l), cfg, positions=positions,
+                               max_len=max_len, cache_dtype=dtype,
+                               memory=memory)
+        cache["prologue"][f"blk{i}"] = c
+
+    gspecs = group_specs(cfg)
+
+    def gpre(x, gp):
+        cs = {}
+        for j, spec in enumerate(gspecs):
+            x, c = B.block_prefill(gp[f"blk{j}"], x, spec, cfg,
+                                   positions=positions, max_len=max_len,
+                                   cache_dtype=dtype, memory=memory)
+            cs[f"blk{j}"] = c
+        return x, cs
+
+    if params["server"]["groups"]:
+        x, group_cache = jax.lax.scan(gpre, x, params["server"]["groups"])
+        cache["groups"] = group_cache
+    else:
+        cache["groups"] = {}
+
+    x = x[:, -1:]
+    x = norms.rms_norm_apply(params["server"]["final_norm"], x, cfg.norm_eps)
+    logits = embeddings.head_apply(params["server"]["head"], x, cfg)
+    return logits, cache
+
+
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------

@@ -1,0 +1,14 @@
+"""Serving subsystem: fused prefill + continuous batching + paged KV.
+
+The inference-side counterpart to the federated training stack: a
+trained SCALA global model (client half merged with server half) served
+with one-dispatch prompt prefill, slot-recycling continuous batching,
+and an optionally paged decode cache. See :mod:`repro.serve.engine` and
+:mod:`repro.serve.cache`; the spec-level entry point is
+:class:`repro.api.ServeSpec`.
+"""
+from repro.serve.cache import DenseOps, PagedOps, make_ops
+from repro.serve.engine import Request, Result, ServeEngine
+
+__all__ = ["DenseOps", "PagedOps", "make_ops",
+           "Request", "Result", "ServeEngine"]

@@ -1,0 +1,255 @@
+"""Paged decode cache: fixed page pool + per-slot page table.
+
+A dense decode cache allocates ``slots x max_len`` KV rows per attention
+layer, so ``max_len`` is paid up front for every slot whether a request
+uses 16 tokens or 16k. Here the KV rows of every attention layer live in
+a fixed **page pool** instead, and each serving slot owns a small set of
+pages recorded in a per-slot **page table**:
+
+* ``pool``  — per attn leaf, ``(pages, page_size, kv, hd)`` (group-scanned
+  layers carry a leading ``(n_scan,)`` axis). One *page id* indexes the
+  same row range in every leaf's pool, so allocation is a single integer
+  per ``page_size`` cache positions.
+* ``table`` — ``(slots, max_pages)`` int32, host-managed; entry ``j`` is
+  the page backing cache positions ``[j*page_size, (j+1)*page_size)``;
+  ``-1`` marks unallocated.
+
+Recurrent-mixer state (mamba / xLSTM) is O(1) per slot and stays dense.
+
+The engine threads two helpers around :func:`repro.models.transformer
+.decode_step` each step: :meth:`PagedOps.gather` materialises the dense
+per-slot view the unmodified decode math expects, and
+:meth:`PagedOps.scatter` writes the one new KV row per slot back into
+the pool. Compute therefore runs on *identically-valued* dense views in
+both modes, which is what makes paged serving bit-identical to dense
+serving (test-enforced). Unallocated table entries read page 0 and write
+out-of-bounds (dropped); those rows are always masked to exactly-zero
+attention weight, so they never reach the output.
+
+Windowed layers keep their ring semantics: a leaf with ring length
+``L < max_len`` only ever touches positions ``pos % L``, i.e. the first
+``ceil(L / page_size)`` table columns.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def is_group_path(path) -> bool:
+    """True if a cache-tree path points under the scan-stacked 'groups'
+    subtree (leaves there carry a leading (n_scan,) layer axis)."""
+    return bool(path) and getattr(path[0], "key", None) == "groups"
+
+
+def is_attn_path(path) -> bool:
+    """True for KV-cache leaves (dict keys 'k'/'v'); the recurrent-mixer
+    cache dicts ('conv', 'h', 'C', 'n', 'm', 'c') never use these keys."""
+    return bool(path) and getattr(path[-1], "key", None) in ("k", "v")
+
+
+@dataclass(frozen=True)
+class _LeafInfo:
+    group: bool     # leading (n_scan,) axis?
+    attn: bool      # paged KV leaf vs dense recurrent-state leaf
+    length: Optional[int]  # ring/cache length L for attn leaves
+    shape: tuple    # dense shape (with the slot axis)
+    dtype: object
+
+
+def _leaf_infos(cfg, slots: int, max_len: int, dtype):
+    tpl = jax.eval_shape(
+        lambda: T.init_decode_cache(cfg, slots, max_len, dtype))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tpl)
+    infos = []
+    for path, leaf in flat:
+        group = is_group_path(path)
+        attn = is_attn_path(path)
+        length = leaf.shape[2 if group else 1] if attn else None
+        infos.append(_LeafInfo(group, attn, length, leaf.shape, leaf.dtype))
+    return infos, treedef
+
+
+class DenseOps:
+    """Trivial ops for the dense (non-paged) cache: the cache *is* the
+    dense view, slot admission is a slot-axis overwrite."""
+
+    paged = False
+
+    def __init__(self, cfg, slots: int, max_len: int, dtype):
+        self.cfg, self.slots, self.max_len, self.dtype = cfg, slots, max_len, dtype
+        self.infos, self.treedef = _leaf_infos(cfg, slots, max_len, dtype)
+        self.max_pages = 1  # dummy table width
+
+    def init(self):
+        return T.init_decode_cache(self.cfg, self.slots, self.max_len,
+                                   self.dtype)
+
+    def gather(self, cache, table):
+        return cache
+
+    def scatter(self, cache, new_dense, table, idxs):
+        return new_dense
+
+    def admit(self, cache, req_cache, table_row, slot):
+        """Overwrite one slot with a B=1 request cache."""
+        leaves = self.treedef.flatten_up_to(cache)
+        reqs = self.treedef.flatten_up_to(req_cache)
+        out = []
+        for info, leaf, req in zip(self.infos, leaves, reqs):
+            if info.group:
+                out.append(leaf.at[:, slot].set(req[:, 0]))
+            else:
+                out.append(leaf.at[slot].set(req[0]))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def state_bytes(self) -> int:
+        return sum(int(np.prod(i.shape)) * np.dtype(i.dtype).itemsize
+                   for i in self.infos)
+
+
+class PagedOps:
+    """Gather/scatter between the page pool and the dense per-slot view."""
+
+    paged = True
+
+    def __init__(self, cfg, slots: int, max_len: int, dtype, *,
+                 pages: int, page_size: int):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.cfg, self.slots, self.max_len, self.dtype = cfg, slots, max_len, dtype
+        self.pages, self.page_size = pages, page_size
+        self.max_pages = math.ceil(max_len / page_size)
+        self.infos, self.treedef = _leaf_infos(cfg, slots, max_len, dtype)
+
+    # -- pool layout -------------------------------------------------------
+
+    def _npages(self, length: int) -> int:
+        return math.ceil(length / self.page_size)
+
+    def init(self):
+        """Pool tree: attn leaves become page pools, recurrent-state
+        leaves stay dense. Same treedef as the dense cache."""
+        out = []
+        for i in self.infos:
+            if i.attn:
+                kv_hd = i.shape[-2:]
+                shape = ((i.shape[0],) if i.group else ()) + \
+                    (self.pages, self.page_size) + kv_hd
+            else:
+                shape = i.shape
+            out.append(jnp.zeros(shape, i.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def pages_needed(self, target_len: int) -> int:
+        """Table columns a request reaching ``target_len`` total tokens
+        touches. Some leaf spans the full ``min(target, max_len)`` unless
+        every layer is windowed; we budget for the worst leaf."""
+        longest = max((i.length for i in self.infos if i.attn), default=0)
+        return self._npages(min(target_len, longest)) if longest else 0
+
+    # -- jit-traceable ops -------------------------------------------------
+
+    def gather(self, paged, table):
+        """Materialise the dense (slots, L, ...) view decode expects."""
+        pools = self.treedef.flatten_up_to(paged)
+        out = []
+        for info, pool in zip(self.infos, pools):
+            if not info.attn:
+                out.append(pool)
+                continue
+            L = info.length
+            npg = self._npages(L)
+            cols = jnp.clip(table[:, :npg], 0)            # unalloc -> page 0
+            if info.group:
+                g = pool[:, cols]                         # (G,S,npg,ps,kv,hd)
+                dense = g.reshape(g.shape[:2] + (npg * self.page_size,)
+                                  + g.shape[4:])[:, :, :L]
+            else:
+                g = pool[cols]                            # (S,npg,ps,kv,hd)
+                dense = g.reshape((g.shape[0], npg * self.page_size)
+                                  + g.shape[3:])[:, :L]
+            out.append(dense)
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def scatter(self, paged, new_dense, table, idxs):
+        """Write the one KV row each slot produced this step back into
+        its page; recurrent-state leaves are taken wholesale."""
+        pools = self.treedef.flatten_up_to(paged)
+        dense = self.treedef.flatten_up_to(new_dense)
+        arange = jnp.arange(self.slots)
+        out = []
+        for info, pool, nd in zip(self.infos, pools, dense):
+            if not info.attn:
+                out.append(nd)
+                continue
+            L = info.length
+            widx = idxs % L
+            pid = table[arange, widx // self.page_size]
+            pid = jnp.where(pid < 0, self.pages, pid)     # unalloc -> drop
+            off = widx % self.page_size
+            if info.group:
+                row = jnp.take_along_axis(
+                    nd, widx[None, :, None, None, None], axis=2)[:, :, 0]
+                out.append(pool.at[:, pid, off].set(row, mode="drop"))
+            else:
+                row = jnp.take_along_axis(
+                    nd, widx[:, None, None, None], axis=1)[:, 0]
+                out.append(pool.at[pid, off].set(row, mode="drop"))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def admit(self, paged, req_cache, table_row, slot):
+        """Scatter a B=1 prefill cache into the slot's pages (attn) and
+        its dense row (recurrent state)."""
+        pools = self.treedef.flatten_up_to(paged)
+        reqs = self.treedef.flatten_up_to(req_cache)
+        out = []
+        for info, pool, req in zip(self.infos, pools, reqs):
+            if not info.attn:
+                out.append(pool.at[:, slot].set(req[:, 0]) if info.group
+                           else pool.at[slot].set(req[0]))
+                continue
+            L = info.length
+            npg = self._npages(L)
+            Lp = npg * self.page_size
+            cols = table_row[:npg]
+            cols = jnp.where(cols < 0, self.pages, cols)  # unalloc -> drop
+            if info.group:
+                r = req[:, 0]                             # (G,L,kv,hd)
+                r = jnp.pad(r, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+                r = r.reshape((r.shape[0], npg, self.page_size) + r.shape[2:])
+                out.append(pool.at[:, cols].set(r, mode="drop"))
+            else:
+                r = req[0]                                # (L,kv,hd)
+                r = jnp.pad(r, ((0, Lp - L), (0, 0), (0, 0)))
+                r = r.reshape((npg, self.page_size) + r.shape[1:])
+                out.append(pool.at[cols].set(r, mode="drop"))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def state_bytes(self) -> int:
+        total = 0
+        for i in self.infos:
+            if i.attn:
+                kv_hd = int(np.prod(i.shape[-2:]))
+                n = (i.shape[0] if i.group else 1) * self.pages \
+                    * self.page_size * kv_hd
+            else:
+                n = int(np.prod(i.shape))
+            total += n * np.dtype(i.dtype).itemsize
+        return total
+
+
+def make_ops(cfg, slots: int, max_len: int, dtype, *,
+             pages: int = 0, page_size: int = 16):
+    """pages == 0 selects the dense cache; pages > 0 the paged pool."""
+    if pages > 0:
+        return PagedOps(cfg, slots, max_len, dtype,
+                        pages=pages, page_size=page_size)
+    return DenseOps(cfg, slots, max_len, dtype)

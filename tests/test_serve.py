@@ -1,0 +1,327 @@
+"""Serving subsystem: fused prefill, continuous batching, paged cache.
+
+Equivalence chain (all test-enforced, f32 + greedy):
+
+* fused prefill == token-by-token decode (logits AND cache, per mixer);
+* engine output == the token-by-token :func:`repro.launch.serve.generate`
+  baseline, per request, across the transformer / SSM / hybrid zoo archs;
+* paged cache == dense cache bitwise (tokens and per-step logits) under
+  the same mixed-length continuous-batching schedule;
+* checkpoint -> ServeSpec -> ServeProgram round-trips the trained global
+  model (predict parity with ``RoundProgram.predict``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg, tiny_mamba_cfg, tiny_xlstm_cfg
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.launch.serve import generate
+from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
+
+# one arch per decode-mixer family: dense transformer / xLSTM / hybrid
+SERVE_ARCHS = ("qwen1.5-0.5b", "xlstm-1.3b", "jamba-1.5-large-398b")
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+
+
+def _setup(cfg, B, P, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(key, cfg)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (B, P), 0, cfg.vocab_size))
+    return params, prompts
+
+
+# --------------------------------------------------------------------------
+# fused prefill == token-by-token decode (logits and cache)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_cfg", [
+    tiny_cfg,
+    lambda: tiny_cfg(window_pattern=(4,)),   # ring (windowed) KV cache
+    tiny_mamba_cfg,
+    tiny_xlstm_cfg,
+    # capacity_factor low enough that full-sequence routing WOULD drop
+    # tokens: prefill must route drop-free (decode never drops)
+    lambda: tiny_cfg(family="moe", ffn_pattern=("moe",),
+                     moe=MoEConfig(num_experts=4, top_k=2, d_expert=48,
+                                   capacity_factor=1.0)),
+], ids=["attn", "ring", "hybrid", "xlstm", "moe-tightcap"])
+def test_prefill_matches_decode(make_cfg):
+    cfg = make_cfg()
+    B, P, max_len = 2, 10, 16
+    params, prompts = _setup(cfg, B, P)
+    toks = jnp.asarray(prompts)
+
+    logits_f, cache_f = T.forward_prefill_cached(
+        params, {"tokens": toks}, cfg, max_len)
+
+    cache = T.init_decode_cache(cfg, B, max_len)
+    for i in range(P):
+        lg, cache = T.decode_step(params, {"tokens": toks[:, i:i + 1]},
+                                  cache, jnp.int32(i), cfg)
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(lg),
+                               rtol=2e-5, atol=2e-5)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cache_f),
+            jax.tree_util.tree_leaves_with_path(cache)):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-5, atol=2e-5, err_msg=jax.tree_util.keystr(pa))
+
+
+def test_prefill_rejects_vision_frontend():
+    cfg = get_config("internvl2-26b").reduced()
+    shapes = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    with pytest.raises(NotImplementedError):
+        T.forward_prefill_cached(
+            params, {"tokens": jnp.zeros((1, 4), jnp.int32)}, cfg, 8)
+
+
+# --------------------------------------------------------------------------
+# engine == token-by-token baseline, per zoo arch (satellite: token identity)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SERVE_ARCHS)
+def test_engine_token_identity_zoo(name):
+    cfg = _f32(get_config(name).reduced())
+    B, P, gen, max_len = 3, 8, 6, 16
+    params, prompts = _setup(cfg, B, P)
+
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompts),
+                              max_len, gen))
+    eng = ServeEngine(params, cfg, slots=2, max_len=max_len)
+    out = eng.generate(prompts, gen)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_engine_token_identity_ring_window():
+    """Prompt longer than the attention window: the ring cache wraps."""
+    cfg = tiny_cfg(window_pattern=(4,))
+    B, P, gen, max_len = 2, 9, 5, 16
+    params, prompts = _setup(cfg, B, P)
+
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompts),
+                              max_len, gen))
+    eng = ServeEngine(params, cfg, slots=2, max_len=max_len)
+    np.testing.assert_array_equal(eng.generate(prompts, gen), ref)
+
+
+# --------------------------------------------------------------------------
+# paged == dense bitwise under a mixed-length continuous schedule
+# --------------------------------------------------------------------------
+
+
+def _mixed_requests(cfg, seed=3):
+    key = jax.random.PRNGKey(seed)
+    lens = [6, 9, 12, 6, 9, 12, 6]
+    news = [5, 3, 4, 6, 2, 5, 3]
+    reqs = []
+    for i, (P, n) in enumerate(zip(lens, news)):
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (P,), 0, cfg.vocab_size))
+        reqs.append(Request(i, toks, n))
+    return reqs
+
+
+def test_paged_bitwise_dense_continuous():
+    """7 mixed-length requests on 2 slots (slot recycling): the paged
+    engine must match the dense engine bitwise — tokens AND per-step
+    logits — and each request must match the single-sequence baseline."""
+    cfg = tiny_mamba_cfg()          # attn + mamba: both cache kinds
+    max_len = 18
+    params, _ = _setup(cfg, 1, 4)
+    reqs = _mixed_requests(cfg)
+
+    dense = ServeEngine(params, cfg, slots=2, max_len=max_len,
+                        record_logits=True)
+    paged = ServeEngine(params, cfg, slots=2, max_len=max_len,
+                        pages=2 * 5, page_size=4, record_logits=True)
+    rd = dense.serve(list(reqs), wall_clock=False)
+    rp = paged.serve(list(reqs), wall_clock=False)
+
+    assert set(rd) == set(rp) == {r.rid for r in reqs}
+    for r in reqs:
+        np.testing.assert_array_equal(rd[r.rid].tokens, rp[r.rid].tokens)
+        assert len(rd[r.rid].logits) == len(rp[r.rid].logits) == r.max_new
+        for a, b in zip(rd[r.rid].logits, rp[r.rid].logits):
+            assert np.array_equal(a, b)      # bitwise
+        ref = np.asarray(generate(
+            params, cfg, jnp.asarray(r.tokens[None]), max_len, r.max_new))
+        np.testing.assert_array_equal(rd[r.rid].tokens, ref[0])
+
+
+def test_static_admission_matches_continuous():
+    cfg = tiny_cfg()
+    max_len = 18
+    params, _ = _setup(cfg, 1, 4)
+    reqs = _mixed_requests(cfg)
+
+    cont = ServeEngine(params, cfg, slots=2, max_len=max_len)
+    stat = ServeEngine(params, cfg, slots=2, max_len=max_len,
+                       admission="static")
+    rc = cont.serve(list(reqs), wall_clock=False)
+    rs = stat.serve(list(reqs), wall_clock=False)
+    for r in reqs:
+        np.testing.assert_array_equal(rc[r.rid].tokens, rs[r.rid].tokens)
+
+
+def test_temperature_sampling_deterministic():
+    cfg = tiny_cfg()
+    params, prompts = _setup(cfg, 2, 6)
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(params, cfg, slots=2, max_len=16,
+                          temperature=0.8, seed=7)
+        outs.append(eng.generate(prompts, 4))
+    np.testing.assert_array_equal(outs[0], outs[1])   # same seed, same stream
+    assert outs[0].min() >= 0 and outs[0].max() < cfg.vocab_size
+
+
+def test_engine_admit_step_take_finished():
+    cfg = tiny_cfg()
+    params, prompts = _setup(cfg, 2, 5)
+    eng = ServeEngine(params, cfg, slots=2, max_len=12)
+    assert eng.admit(Request(0, prompts[0], 3))
+    assert eng.admit(Request(1, prompts[1], 1))       # finishes at admit
+    done = eng.take_finished()
+    assert set(done) == {1} and done[1].tokens.shape == (6,)
+    for _ in range(2):
+        eng.step()
+    done = eng.take_finished()
+    assert set(done) == {0} and done[0].tokens.shape == (8,)
+    assert eng.n_active == 0
+
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompts[:1]), 12, 3))
+    np.testing.assert_array_equal(done[0].tokens, ref[0])
+
+
+def test_engine_error_paths():
+    cfg = tiny_cfg()
+    params, prompts = _setup(cfg, 1, 6)
+    eng = ServeEngine(params, cfg, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.admit(Request(0, prompts[0], 0))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.admit(Request(0, prompts[0], 3))          # 6 + 3 > 8
+
+    # page pool smaller than a single request: serve() must say so
+    small = ServeEngine(params, cfg, slots=1, max_len=16,
+                        pages=1, page_size=4)
+    with pytest.raises(RuntimeError, match="page pool"):
+        small.serve([Request(0, prompts[0], 4)], wall_clock=False)
+
+
+# --------------------------------------------------------------------------
+# ServeSpec validation + serialization
+# --------------------------------------------------------------------------
+
+
+def test_servespec_validation():
+    from repro.api import ServeSpec
+    with pytest.raises(ValueError, match="frontend"):
+        ServeSpec(arch="whisper-tiny", reduced=True)
+    with pytest.raises(ValueError, match="frontend"):
+        ServeSpec(arch="internvl2-26b", reduced=True)
+    with pytest.raises(ValueError, match="slots"):
+        ServeSpec(reduced=True, slots=0)
+    with pytest.raises(ValueError, match="max_len"):
+        ServeSpec(reduced=True, max_len=1)
+    with pytest.raises(ValueError, match="pages"):
+        ServeSpec(reduced=True, pages=-1)
+    with pytest.raises(ValueError, match="page_size"):
+        ServeSpec(reduced=True, page_size=0)
+    with pytest.raises(ValueError, match="temperature"):
+        ServeSpec(reduced=True, temperature=-0.1)
+    with pytest.raises(ValueError, match="admission"):
+        ServeSpec(reduced=True, admission="fifo")
+
+
+def test_servespec_json_roundtrip():
+    from repro.api import ServeSpec
+    spec = ServeSpec(arch="xlstm-1.3b", reduced=True, slots=8, max_len=64,
+                     pages=16, page_size=8, temperature=0.5, seed=3,
+                     admission="static")
+    assert ServeSpec.from_json(spec.to_json()) == spec
+
+
+# --------------------------------------------------------------------------
+# checkpoint -> serve round-trip (satellite: restore + merge parity)
+# --------------------------------------------------------------------------
+
+
+def _tiny_trainer():
+    from repro.api import DataSpec, ExperimentSpec, Trainer
+    from repro.configs import ScalaConfig
+    spec = ExperimentSpec(
+        arch="qwen1.5-0.5b", reduced=True, rounds=1,
+        scala=ScalaConfig(num_clients=2, local_iters=1, server_batch=4),
+        data=DataSpec(seq=16, docs_per_client=4))
+    trainer = Trainer(spec)
+    trainer.run()
+    return trainer
+
+
+def test_checkpoint_serve_roundtrip(tmp_path):
+    """Trainer saves a (K, ...)-stacked federated checkpoint; ServeSpec
+    restores + merges it and predict matches RoundProgram.predict."""
+    from repro import checkpoint
+    from repro.api import ServeSpec, build_serve
+
+    trainer = _tiny_trainer()
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, trainer.state.inner.params)
+
+    spec = ServeSpec(arch="qwen1.5-0.5b", reduced=True, checkpoint_dir=d,
+                     slots=2, max_len=24)
+    prog = build_serve(spec)
+
+    toks = jnp.asarray(np.arange(2 * 12).reshape(2, 12) %
+                       prog.cfg.vocab_size)
+    got = prog.predict({"tokens": toks})
+    want = trainer.program.predict(trainer.state, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+    # the serving surfaces run on the restored model
+    logits, cache = prog.prefill(toks[:1, :8])
+    assert logits.shape == (1, 1, prog.cfg.vocab_size)
+    assert prog.admit(Request(0, np.asarray(toks[0, :8]), 2))
+    prog.step()
+    done = prog.engine.take_finished()
+    assert set(done) == {0} and done[0].tokens.shape == (10,)
+
+
+def test_restore_already_merged(tmp_path):
+    """An unstacked (merged) checkpoint restores as-is."""
+    from repro import checkpoint
+    from repro.api import restore_global_params
+
+    cfg = _f32(get_config("qwen1.5-0.5b").reduced())
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 3, params)
+
+    got = restore_global_params(cfg, d)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_missing_dir(tmp_path):
+    from repro.api import restore_global_params
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    with pytest.raises(FileNotFoundError):
+        restore_global_params(cfg, str(tmp_path / "nope"))
