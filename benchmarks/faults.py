@@ -1,0 +1,146 @@
+"""Guarded-aggregation overhead benchmark (fault-tolerance subsystem).
+
+PR 10 threads per-client update screening (non-finite rejection +
+running-median norm clipping, :mod:`repro.fed.guards`) through the sync
+round runner and the async event runtime. The guards add, per round: one
+global L2 norm + finiteness reduction per client over the round delta,
+one ``lax.cond`` whose recompute branch re-runs the local phase over the
+surviving subset (taken only when something was actually rejected), and
+the masked aggregation itself. With zero faults injected the recompute
+branch never fires and outputs are bit-identical to the unguarded round
+(``tests/test_faults.py``), so the honest cost of always-on guards is
+the screen itself — that is what this bench measures:
+
+* ``guard_overhead`` — guarded/unguarded median wall-clock per round at
+  zero faults, for ``nonfinite`` and ``nonfinite,clip`` policies, in
+  masked and async modes;
+* the ``chaos`` leg runs NaN corruption + drops at 10% of the cohort
+  under guards and records the rejected-client counts and final loss —
+  the graceful-degradation claim in numbers (finite loss, cohort
+  shrinks, schedule advances).
+
+Numbers are stamped with :func:`benchmarks.common.device_info` like
+every BENCH json — CPU medians claim nothing about accelerators.
+
+  PYTHONPATH=src python -m benchmarks.faults [--rounds 8] [--reps 3]
+  PYTHONPATH=src python -m benchmarks.faults --smoke   # CI guard:
+      chaos run completes finite + guard overhead stays bounded
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_bench
+
+
+def _trainer(K, rounds, mode, faults=None, guards=None):
+    from repro import api
+    from repro.configs import ScalaConfig
+
+    execution = (api.ExecutionSpec(mode="async", cohort=max(2, K // 4))
+                 if mode == "async" else api.ExecutionSpec(mode=mode))
+    spec = api.ExperimentSpec(
+        arch="alexnet-cifar", method="scala", rounds=rounds, seed=0,
+        scala=ScalaConfig(num_clients=K, participation=0.5, local_iters=2,
+                          server_batch=48, lr=0.05),
+        fed=api.FedSpec(faults=faults, guards=guards),
+        execution=execution,
+        data=api.DataSpec(kind="image_synthetic", n_train=60 * K, alpha=2))
+    return api.Trainer(spec)
+
+
+def _time_rounds(trainer, rounds, reps):
+    """Median wall-clock of one round, compile excluded (first step)."""
+    trainer.step()                                   # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            trainer.step()
+        times.append((time.perf_counter() - t0) / rounds)
+    return float(np.median(times))
+
+
+def bench_faults(K: int = 8, rounds: int = 4, reps: int = 3):
+    res = {"K": K, "rounds_per_rep": rounds, "reps": reps, "modes": {}}
+    budget = 1 + rounds * reps                        # steps per trainer
+    for mode in ("masked", "async"):
+        row = {}
+        t_plain = _time_rounds(_trainer(K, budget, mode), rounds, reps)
+        row["unguarded_s_per_round"] = t_plain
+        for guards in ("nonfinite", "nonfinite,clip:10.0"):
+            t_g = _time_rounds(_trainer(K, budget, mode, guards=guards),
+                               rounds, reps)
+            row[guards] = {"s_per_round": t_g,
+                           "guard_overhead": t_g / t_plain}
+        res["modes"][mode] = row
+
+    # chaos leg: 10% NaN corruption + 10% drops under nonfinite guards —
+    # completion with finite loss and a shrinking effective cohort
+    chaos = _trainer(K, rounds + 1, "masked",
+                     faults="drop:0.1,corrupt:0.1:nan", guards="nonfinite")
+    rejected = []
+    loss = None
+    for _ in range(rounds + 1):
+        m = chaos.step()
+        rejected.append(m.get("guard_rejected", 0.0))
+        loss = m["loss_server"]
+    res["chaos"] = {
+        "faults": "drop:0.1,corrupt:0.1:nan",
+        "final_loss": float(loss),
+        "finite": bool(np.isfinite(loss)),
+        "rounds": rounds + 1,
+        "rejected_per_round": rejected,
+        "rejected_total": float(np.sum(rejected)),
+    }
+    return res
+
+
+def smoke_guard():
+    """The CI guard shared with ``benchmarks.run --smoke``: the chaos
+    run must complete with finite loss, and always-on guards at zero
+    faults must stay within 2x the unguarded round (they add one screen
+    reduction and an untaken cond branch; wall-clock ratios are noisy at
+    smoke scale, so a failing first measurement gets ONE re-measure)."""
+    res = None
+    for attempt in (0, 1):
+        res = bench_faults(K=4, rounds=2, reps=2)
+        ov = max(res["modes"][m][g]["guard_overhead"]
+                 for m in res["modes"]
+                 for g in ("nonfinite", "nonfinite,clip:10.0"))
+        print(f"max guard overhead (zero faults): {ov:.3f}x"
+              + (" (retry)" if attempt else ""))
+        if ov < 2.0:
+            break
+    assert res["chaos"]["finite"], \
+        f"chaos run diverged: loss={res['chaos']['final_loss']}"
+    assert ov < 2.0, (
+        f"guard screen overhead regressed: {ov}x the unguarded round "
+        "(expected < 2x; reproduced twice)")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, no json written; asserts chaos "
+                         "completion + bounded guard overhead (CI guard)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        res = smoke_guard()
+    else:
+        res = bench_faults(K=args.clients, rounds=args.rounds,
+                           reps=args.reps)
+    emit_bench(res, args.out, "BENCH_faults.json", args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -292,6 +292,24 @@ def bench_serve(quick: bool) -> None:
               f"{row['tok_per_sec']},,{row['seconds']}", flush=True)
 
 
+def bench_faults(quick: bool) -> None:
+    from benchmarks.faults import bench_faults as _bench
+
+    res = _bench(K=4 if quick else 8, rounds=2 if quick else 4,
+                 reps=2 if quick else 3)
+    for mode, entry in res["modes"].items():
+        for guards, row in entry.items():
+            if guards == "unguarded_s_per_round":
+                print(f"faults,{mode},unguarded,,,{row}", flush=True)
+            else:
+                print(f"faults,{mode},{guards.replace(',', ';')},"
+                      f"{row['guard_overhead']},,{row['s_per_round']}",
+                      flush=True)
+    ch = res["chaos"]
+    print(f"faults,chaos={ch['faults'].replace(',', ';')},nonfinite,"
+          f"{ch['final_loss']},{ch['rejected_total']},", flush=True)
+
+
 TABLES = {
     "t1": bench_table1,
     "t2": bench_table2,
@@ -307,6 +325,7 @@ TABLES = {
     "scale": bench_scale,
     "roofline": bench_roofline,
     "serve": bench_serve,
+    "faults": bench_faults,
 }
 
 
@@ -318,11 +337,13 @@ def smoke() -> None:
     dispatch knobs, the dispatch fusion regression guard, the
     split-boundary fused-vs-dual loss guard, the delta-vs-dense snapshot
     scale guard, the topk-vs-sort arrival-pop guard, the
-    continuous-vs-static serving guard, plus the roofline
-    reprint. The dispatch/scale/boundary benches also have their own
-    --smoke."""
+    continuous-vs-static serving guard, the guarded-aggregation
+    chaos/overhead guard, plus the roofline
+    reprint. The dispatch/scale/boundary/faults benches also have their
+    own --smoke."""
     from benchmarks.boundary import smoke_guard as boundary_smoke_guard
     from benchmarks.dispatch import smoke_guard
+    from benchmarks.faults import smoke_guard as faults_smoke_guard
     from benchmarks.scale import (arrival_smoke_guard,
                                   smoke_guard as scale_smoke_guard)
     from benchmarks.serve import smoke_guard as serve_smoke_guard
@@ -370,6 +391,14 @@ def smoke() -> None:
     print("SMOKE,serve_guard,continuous_speedup,"
           f"{vguard['slots']['2']['batch']['continuous_speedup']},,",
           flush=True)
+    # regression guard: a 10%-corruption chaos run under guards must
+    # complete with finite loss, and always-on guards at zero faults
+    # must stay within 2x the unguarded round (shared with
+    # `benchmarks.faults --smoke`)
+    fguard = faults_smoke_guard()
+    print("SMOKE,faults_guard,chaos_final_loss,"
+          f"{fguard['chaos']['final_loss']},"
+          f"{fguard['chaos']['rejected_total']},", flush=True)
     bench_roofline(True)
 
 

@@ -278,6 +278,8 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
                  if ex.mode in ("masked", "sparse") and fd.participation
                  else None)
     server_opt, server_lr = _server_optimizer(spec)
+    faults = fd.make_faults()
+    guards = fd.make_guards()
     unroll = ex.resolve_unroll()
 
     # delta snapshots carry the global client half over ONE param slot
@@ -306,7 +308,9 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             snapshots=ex.snapshots, ring_size=ex.ring_size,
             lr_scale=ex.lr_scale, num_clients=slots,
             arrival=ex.arrival, paged_opt=paged,
-            mesh=mesh, batch_specs=batch_specs)
+            mesh=mesh, batch_specs=batch_specs,
+            deadline=ex.deadline, backoff=ex.backoff,
+            faults=faults, guards=guards)
         pager = (fed.HostOptPager(
             opt, jax.tree.map(lambda a: a[0], params["client"]), slots)
             if paged else None)
@@ -317,7 +321,7 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
                 _fed_key(spec), params["client"], delays, aggregator=agg,
                 server_optimizer=server_opt, server_params=params["server"],
                 snapshots=ex.snapshots, ring_size=ex.ring_size,
-                num_clients=slots, mesh=sched_mesh)
+                num_clients=slots, mesh=sched_mesh, guards=guards)
             if pager is not None:
                 pager.reset()
             return ProgramState(inner=engine.init_train_state(params, opt),
@@ -364,15 +368,17 @@ def _build_scala(spec: ExperimentSpec, *, mesh=None,
             opt_state_policy=fd.opt_state_policy,
             slot_gather=ex.mode == "sparse", server_optimizer=server_opt,
             server_lr=server_lr, mesh=mesh, batch_specs=batch_specs,
-            precision=ex.precision)
+            precision=ex.precision, faults=faults, guards=guards)
         thread_fed = (scheduler is not None or agg.stateful
-                      or server_opt is not None)
+                      or server_opt is not None or faults is not None
+                      or (guards is not None and guards.stateful))
 
         def init() -> ProgramState:
             fed_state = (fed.init_fed_state(_fed_key(spec), agg, scheduler,
                                             num_clients=slots,
                                             server_optimizer=server_opt,
-                                            server_params=params["server"])
+                                            server_params=params["server"],
+                                            faults=faults, guards=guards)
                          if thread_fed else ())
             return ProgramState(inner=engine.init_train_state(params, opt),
                                 fed=fed_state)

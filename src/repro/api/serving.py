@@ -145,7 +145,10 @@ def restore_global_params(cfg: ModelConfig, directory: str,
     exact-shape template), slot 0 of the client half is merged with the
     server half, and the result matches
     :func:`repro.models.transformer.init_params` layout. An unstacked
-    (already-merged) checkpoint restores as-is.
+    (already-merged) checkpoint restores as-is, and a *full-state*
+    checkpoint (``Trainer.save`` — the whole ProgramState under
+    ``.inner/.params/...`` keys) serves too: the params subtree is
+    pulled out by key prefix and everything else ignored.
     """
     from repro import checkpoint
     from repro.models import transformer as T
@@ -162,7 +165,13 @@ def restore_global_params(cfg: ModelConfig, directory: str,
     key = "client/" + "/".join(
         str(getattr(p, "key", getattr(p, "idx", p))) for p in probe_path)
     with np.load(path) as data:
-        saved_shape = data[key].shape
+        prefix = "" if key in data.files else ".inner/.params/"
+        if prefix + key not in data.files:
+            raise ValueError(
+                f"checkpoint {path!r} has neither {key!r} nor "
+                f"'.inner/.params/{key}' — not a params or full-state "
+                f"training checkpoint")
+        saved_shape = data[prefix + key].shape
 
     if saved_shape == probe.shape:
         k_slots = 0                                    # already merged
@@ -183,7 +192,8 @@ def restore_global_params(cfg: ModelConfig, directory: str,
         "server": jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
                                shapes["server"]),
     }
-    restored = checkpoint.restore(directory, template, step)
+    restored = checkpoint.restore(directory, template, step,
+                                  key_prefix=prefix)
     merge = (lambda a: jnp.asarray(a[0])) if k_slots else jnp.asarray
     return {"client": jax.tree.map(merge, restored["client"]),
             "server": jax.tree.map(jnp.asarray, restored["server"])}

@@ -176,11 +176,27 @@ class FedSpec:
     ``opt_state_policy`` is the client optimizer state's round-boundary
     behavior (``carry | reset | average`` — see
     :func:`repro.core.engine.make_round_runner`).
+
+    Fault tolerance (chaos runs are spec-level JSON like everything
+    else):
+
+    * ``faults`` — failure-injection spec
+      (:func:`repro.fed.make_faults`):
+      ``"drop:P[,corrupt:P[:MODE[:SCALE]]][,stall:P[:FACTOR]]"``, e.g.
+      ``"drop:0.1,corrupt:0.05:nan,stall:0.02"``. ``None`` = no faults.
+    * ``guards`` — guarded-aggregation spec
+      (:func:`repro.fed.make_guards`): ``"nonfinite"`` rejects NaN/Inf
+      updates, ``"nonfinite,clip:TAU[:BETA]"`` additionally clips
+      update norms against a running median. Rejected clients shrink
+      the effective cohort AND the eq. 14/15 priors (the local phase is
+      re-run over the survivors). ``None`` = unguarded (legacy-exact).
     """
 
     aggregator: str = "weighted"
     participation: Optional[str] = None
     opt_state_policy: str = "carry"
+    faults: Optional[str] = None
+    guards: Optional[str] = None
 
     def __post_init__(self):
         from repro.core.engine import OPT_STATE_POLICIES
@@ -192,6 +208,8 @@ class FedSpec:
             raise ValueError(
                 f"unknown opt_state_policy {self.opt_state_policy!r}; "
                 f"expected {OPT_STATE_POLICIES}")
+        self.make_faults()                           # structural validation
+        self.make_guards()                           # structural validation
 
     def make_aggregator(self):
         from repro.fed import make_aggregator
@@ -204,6 +222,20 @@ class FedSpec:
         if self.participation is None:
             return None
         return make_participation(self.participation, num_clients)
+
+    def make_faults(self):
+        from repro.fed import make_faults
+
+        if self.faults is None:
+            return None
+        return make_faults(self.faults)
+
+    def make_guards(self):
+        from repro.fed import make_guards
+
+        if self.guards is None:
+            return None
+        return make_guards(self.guards)
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +357,12 @@ class ExecutionSpec:
     lr_scale: str = "none"
     arrival: str = "sort"
     opt_paging: str = "none"
+    #: async cohort-barrier deadline: the event fires at min(cohort-th
+    #: finish, first finish + deadline); misses are excluded from the
+    #: event and requeued with exponential backoff. None = unbounded
+    #: wait (legacy).
+    deadline: Optional[float] = None
+    backoff: float = 2.0
 
     def __post_init__(self):
         from repro.core.engine import BACKENDS, BOUNDARIES, PRECISIONS
@@ -363,6 +401,10 @@ class ExecutionSpec:
         if self.opt_paging not in ("none", "host"):
             raise ValueError(f"unknown opt_paging {self.opt_paging!r}; "
                              f"expected ('none', 'host')")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.backoff < 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
 
     @property
     def in_program(self) -> bool:
@@ -608,6 +650,30 @@ class ExperimentSpec:
                     "opt_paging='host' predicts the arrival pop outside the "
                     "compiled event; backend 'lace_dp' pops per shard "
                     "inside its shard_map and is not supported")
+
+        # --- fault tolerance ---
+        robust = (fd.faults is not None) or (fd.guards is not None)
+        if ex.deadline is not None and ex.mode != "async":
+            raise ValueError(
+                "deadline bounds the async cohort barrier; mode "
+                f"{ex.mode!r} has no arrival schedule")
+        if robust and ex.mode == "subset":
+            raise ValueError(
+                "faults/guards are in-program federation features; mode "
+                "'subset' re-stacks clients host-side — use 'masked', "
+                "'sparse', or 'async'")
+        if robust or ex.deadline is not None:
+            if ex.backend == "lace_dp" and (ex.mode in ("sparse", "async")):
+                raise ValueError(
+                    "faults/guards/deadline are not supported on the "
+                    "in-shard lace_dp sparse/async programs (their FL "
+                    "phase runs inside shard_map); use backend "
+                    "'logits'/'lace', or lace_dp with mode 'masked'")
+            if ex.opt_paging == "host":
+                raise ValueError(
+                    "faults/guards/deadline are not supported with "
+                    "opt_paging='host' (the pager's arrival prediction "
+                    "does not model partial cohorts)")
 
         # --- baselines ---
         if self.method not in SCALA_METHODS:

@@ -27,6 +27,8 @@ for ``lm_synthetic`` the budget is never rescaled (scale
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -204,6 +206,73 @@ class Trainer:
                              self.history[len(self.history) - k + j],
                              dt / k)
         return self.history
+
+    # ------------------------------------------------------------------
+    # crash recovery
+    # ------------------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Checkpoint the FULL run: program state + host driver state.
+
+        The ``.npz`` carries the whole :class:`ProgramState` pytree —
+        params, optimizer moments, and the fed state (sync dict or
+        :class:`AsyncFedState` including ring/delta snapshots, finish
+        times, versions, retries, fault keys, guard medians). A
+        ``meta_{round}.json`` sidecar carries the host side: round
+        counter, metric history, and the numpy bit-generator state that
+        drives batch assembly. Both writes are atomic
+        (write-temp-fsync-rename), so a crash mid-save never corrupts an
+        existing checkpoint. :meth:`resume` from the pair is bit-identical
+        to never having stopped."""
+        if self.program.metadata.get("host_paged"):
+            raise ValueError(
+                "save/resume with opt_paging='host' is unsupported: the "
+                "paged optimizer moments live in the host pager, outside "
+                "ProgramState; keep optimizer state on device to "
+                "checkpoint")
+        from repro import checkpoint as C
+
+        path = C.save(directory, self.round, self.state)
+        C.write_json_atomic(
+            os.path.join(directory, f"meta_{self.round:08d}.json"),
+            {"round": self.round, "history": self.history,
+             "rng_state": self._rng.bit_generator.state})
+        return path
+
+    def resume(self, directory: str, step: Optional[int] = None) -> int:
+        """Restore the newest complete checkpoint; returns its round.
+
+        A checkpoint counts only when both its ``.npz`` and its
+        ``meta_{round}.json`` sidecar are readable — a torn pair from a
+        crash mid-save is skipped and the next-older step is tried
+        (unless ``step`` pins one explicitly, which raises instead).
+        After resume, :meth:`run`/:meth:`step` continue the interrupted
+        RNG stream and program state exactly."""
+        from repro import checkpoint as C
+
+        candidates = [step] if step is not None else C.all_steps(directory)[::-1]
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        for s in candidates:
+            meta_path = os.path.join(directory, f"meta_{s:08d}.json")
+            try:
+                with open(meta_path) as f:
+                    meta = json.load(f)
+                state = C.restore(directory, self.state, step=s)
+            except C.CORRUPT_ERRORS + (json.JSONDecodeError,
+                                       AssertionError):
+                if step is not None:
+                    raise
+                continue
+            break
+        else:
+            raise FileNotFoundError(
+                f"no complete (npz + meta) checkpoint in {directory}")
+        self.state = state
+        self.round = int(meta["round"])
+        self.history = list(meta["history"])
+        self._rng.bit_generator.state = meta["rng_state"]
+        return self.round
 
     # ------------------------------------------------------------------
 

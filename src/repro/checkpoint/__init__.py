@@ -1,1 +1,8 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CORRUPT_ERRORS,
+    all_steps,
+    latest_step,
+    restore,
+    save,
+    write_json_atomic,
+)

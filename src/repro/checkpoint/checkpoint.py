@@ -3,16 +3,32 @@
 Sharded arrays are gathered to host before save (fine at the scales this
 container trains; a production deployment would swap in tensorstore /
 orbax-style per-shard IO behind the same ``save``/``restore`` API).
+
+Crash safety: every file is written to a temp path in the same
+directory, fsync'd, then atomically renamed over the target
+(``os.replace``), so a checkpoint is either fully present or absent —
+never truncated. ``restore`` treats an unreadable latest checkpoint
+(killed mid-rename on filesystems without atomic replace, bit rot) as
+absent and falls back to the next-older step unless ``step`` was pinned
+explicitly.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+# Failure modes of np.load on a torn/corrupt .npz: truncated zip central
+# directory (BadZipFile), short reads / missing members (OSError,
+# KeyError), and mangled array headers (ValueError).
+CORRUPT_ERRORS = (zipfile.BadZipFile, OSError, KeyError, ValueError,
+                  EOFError)
+_CORRUPT_ERRORS = CORRUPT_ERRORS
 
 
 def _flatten_with_paths(tree):
@@ -24,44 +40,105 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _atomic_replace(tmp: str, path: str) -> None:
+    """fsync the temp file, rename over the target, fsync the directory."""
+    with open(tmp, "rb") as f:
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dir_fd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dir_fd)
+    finally:
+        os.close(dir_fd)
+
+
+def write_json_atomic(path: str, payload: Any) -> None:
+    """Serialize ``payload`` to ``path`` via write-temp-fsync-rename."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(directory: str, step: int, tree: Any) -> str:
     os.makedirs(directory, exist_ok=True)
     arrays = _flatten_with_paths(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp.npz"
     np.savez(tmp, **arrays)
-    os.replace(tmp, path)
+    _atomic_replace(tmp, path)
     treedef = jax.tree_util.tree_structure(tree)
-    with open(os.path.join(directory, "treedef.json"), "w") as f:
-        json.dump({"treedef": str(treedef), "step": step}, f)
+    write_json_atomic(os.path.join(directory, "treedef.json"),
+                      {"treedef": str(treedef), "step": step})
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def all_steps(directory: str) -> list:
+    """Checkpoint steps present in ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         m = re.match(r"ckpt_(\d+)\.npz$", name)
         if m:
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore(directory: str, template: Any, step: Optional[int] = None) -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
-    step = latest_step(directory) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _load_arrays(path: str) -> dict:
     with np.load(path) as data:
-        arrays = dict(data)
+        return dict(data)
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None,
+            key_prefix: str = "") -> Any:
+    """Restore into the structure of ``template`` (shapes must match).
+
+    With ``step=None`` the newest readable checkpoint wins: a corrupt
+    latest file (torn write from a crash) is skipped with a warning and
+    the next-older step is tried. An explicitly pinned ``step`` is never
+    substituted — corruption there raises.
+
+    ``key_prefix`` restores a *subtree* of a larger saved pytree: each
+    template leaf key is looked up as ``key_prefix + key`` (e.g.
+    ``".inner/.params/"`` pulls just the params out of a full
+    ``Trainer.save`` ProgramState checkpoint).
+    """
+    candidates = [step] if step is not None else all_steps(directory)[::-1]
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    arrays = None
+    errors = []
+    for s in candidates:
+        path = os.path.join(directory, f"ckpt_{s:08d}.npz")
+        try:
+            arrays = _load_arrays(path)
+            break
+        except _CORRUPT_ERRORS as e:
+            if step is not None:
+                raise
+            errors.append((s, e))
+            import warnings
+            warnings.warn(f"checkpoint step {s} unreadable "
+                          f"({type(e).__name__}: {e}); falling back to the "
+                          f"previous step", stacklevel=2)
+    if arrays is None:
+        raise FileNotFoundError(
+            f"no readable checkpoint in {directory}; "
+            f"tried steps {[s for s, _ in errors]}")
     keys = list(_flatten_with_paths(template))
     leaves, treedef = jax.tree_util.tree_flatten(template)
     assert len(keys) == len(leaves)
     new_leaves = []
     for key, leaf in zip(keys, leaves):
-        a = arrays[key]
+        a = arrays[key_prefix + key]
         assert a.shape == leaf.shape, (key, a.shape, leaf.shape)
         new_leaves.append(a.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

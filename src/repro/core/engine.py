@@ -856,7 +856,8 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                       server_optimizer: Optional[optimizers.Optimizer] = None,
                       server_lr: float = 1.0,
                       mesh=None, batch_specs=None,
-                      precision: str = "f32"):
+                      precision: str = "f32",
+                      faults=None, guards=None):
     """Build the fused round program: T local iterations (``lax.scan``
     over the engine step) + the pluggable FL phase, all in one jittable
     fn. All backends are supported, including ``lace_dp`` (pass ``mesh``
@@ -945,8 +946,26 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     policy: ``"bf16"`` runs forward/backward in bfloat16 against f32
     master params while the priors, both loss reductions, the stage-5
     updates, and the FL-phase aggregation all stay f32.
+
+    Fault tolerance (:mod:`repro.fed.faults` / :mod:`repro.fed.guards`):
+
+    * ``faults`` — a :class:`repro.fed.faults.FaultModel` injecting
+      deterministic failures: dropped/stalled clients leave the
+      participation mask *before* the local scan (priors recompute over
+      the survivors via the mask-fold path) and corrupted clients have
+      their trained client-half update poisoned in transit after the
+      scan. Needs ``fed_state['faults']`` (the fault PRNG key).
+    * ``guards`` — a :class:`repro.fed.guards.GuardPolicy` screening
+      each client's update before aggregation. If any participant is
+      rejected, the local phase is *re-run* under ``lax.cond`` with the
+      survivor mask, so the eq. 14/15 priors and logit adjustments match
+      a round the rejected clients never joined. With zero rejections
+      the guarded round is bit-identical to the unguarded one. Norm
+      clipping (``clip:TAU``) additionally needs ``fed_state['guard']``.
     """
     from repro import fed as _fed
+    from repro.fed import faults as _faults
+    from repro.fed import guards as _guards
 
     if opt_state_policy not in OPT_STATE_POLICIES:
         raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
@@ -961,6 +980,14 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 f"slot_gather needs a scheduler with a static subset_size; "
                 f"{participation.name!r} has none — without it the gather "
                 "would silently degrade to full-K masked compute")
+    if faults is not None:
+        faults = _faults.make_faults(faults)
+    if guards is not None:
+        guards = _guards.make_guards(guards)
+    robust = (faults is not None) or (guards is not None)
+    if robust and not aggregate:
+        raise ValueError("faults/guards act on the FL phase; they need "
+                         "aggregate=True")
     opt = optimizer if optimizer is not None else optimizers.sgd()
     agg = aggregator if aggregator is not None else _fed.weighted()
     stateful = _fed.is_stateful(agg, participation)
@@ -969,6 +996,11 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
     do_gather = (slot_gather and participation is not None
                  and k_active < participation.num_clients)
     dp_gather = do_gather and backend == "lace_dp"
+    if dp_gather and robust:
+        raise ValueError(
+            "faults/guards are not supported with the in-shard lace_dp "
+            "slot_gather round (its FL phase runs inside shard_map); use "
+            "the masked lace_dp round or a sparse single-host backend")
     if dp_gather:
         # in-shard gather: each shard of the client mesh axes packs ITS
         # OWN participating slots into a dense local [K_active/n] axis,
@@ -1085,7 +1117,18 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                     "server_optimizer needs fed_state — build it with "
                     "repro.fed.init_fed_state(..., server_optimizer=, "
                     "server_params=)")
+            if faults is not None:
+                raise ValueError(
+                    "faults need fed_state['faults'] (the fault PRNG key) — "
+                    "build fed_state with repro.fed.init_fed_state(..., "
+                    "faults=...)")
+            if guards is not None and guards.clip > 0:
+                raise ValueError(
+                    "guard norm clipping is stateful (running median) — "
+                    "build fed_state with repro.fed.init_fed_state(..., "
+                    "guards=...)")
             sched_state, agg_state, so_state = (), (), ()
+            fault_key, guard_state = None, ()
         else:
             sched_state, agg_state = fed_state["sched"], fed_state["agg"]
             so_state = fed_state.get("server_opt", ())
@@ -1094,33 +1137,116 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                     "server_optimizer needs fed_state['server_opt'] — build "
                     "fed_state with repro.fed.init_fed_state(..., "
                     "server_optimizer=, server_params=)")
+            fault_key = fed_state.get("faults")
+            if faults is not None and fault_key is None:
+                raise ValueError(
+                    "faults need fed_state['faults'] — build fed_state with "
+                    "repro.fed.init_fed_state(..., faults=...)")
+            guard_state = fed_state.get("guard", ())
+            if guards is not None and guards.clip > 0 and guard_state == ():
+                raise ValueError(
+                    "guard norm clipping needs fed_state['guard'] — build "
+                    "fed_state with repro.fed.init_fed_state(..., "
+                    "guards=...)")
         ws_start = state.params["server"]
+        start = state  # round-start state: guard delta / clip reference
 
         if participation is not None:
             mask, sched_state = participation.sample(sched_state)
         else:
             mask = None
+
+        C_all = jax.tree.leaves(state.params["client"])[0].shape[0]
+        new_fault_key = fault_key
+        corrupt_m = corrupt_key = None
+        if faults is not None:
+            new_fault_key, k_ev = jax.random.split(fault_key)
+            k_masks, corrupt_key = jax.random.split(k_ev)
+            fmasks = _faults.sample_fault_masks(faults, k_masks, C_all)
+            # sync semantics: dropped AND stalled clients never deliver
+            # an update this round — they leave the participating subset
+            # before the scan, so the eq. 14/15 priors recompute over
+            # the survivors via the mask-fold path
+            alive = (1.0 - fmasks["drop"]) * (1.0 - fmasks["stall"])
+            mask = alive if mask is None else mask * alive
+            corrupt_m = fmasks["corrupt"] * mask
+
+        def local_phase(mask_, fold_scan_mask):
+            if do_gather:
+                idx = slot_gather_indices(mask_, k_active)
+                sub = _gather_clients(start, idx)
+                sub_batches = jax.tree.map(
+                    lambda a: jnp.take(a, idx, axis=1), round_batches)
+                if fold_scan_mask:
+                    # faulty rounds can have fewer than K_active real
+                    # participants: fill slots must not pollute priors
+                    sub_mask = jnp.take(mask_, idx)
+                    body = lambda s, b: step(s, b, sub_mask)
+                else:
+                    # no mask inside the scan: every gathered slot
+                    # participates, so the stage-1 priors are the
+                    # participating-subset priors
+                    body = step
+                sub, ms = jax.lax.scan(body, sub, sub_batches,
+                                       unroll=unroll)
+                st = _scatter_clients(start, sub, idx)
+            else:
+                body = (lambda s, b: step(s, b, mask_)) \
+                    if mask_ is not None else step
+                st, ms = jax.lax.scan(body, start, round_batches,
+                                      unroll=unroll)
+            mets = jax.tree.map(lambda a: a[-1], ms)
+            if corrupt_m is not None:
+                # the update is corrupted in transit, AFTER training
+                cp = _faults.corrupt_update(faults, corrupt_key,
+                                            st.params["client"], corrupt_m)
+                st = TrainState(params={"client": cp,
+                                        "server": st.params["server"]},
+                                opt_state=st.opt_state, step=st.step)
+            return st, mets
+
         if dp_gather:
             sizes = (data_sizes if data_sizes is not None
                      else jnp.ones((participation.num_clients,),
                                    jnp.float32))
             state, metrics = dp_round(state, round_batches, mask, sizes)
-        elif do_gather:
-            idx = slot_gather_indices(mask, k_active)
-            sub = _gather_clients(state, idx)
-            sub_batches = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
-                                       round_batches)
-            # no mask inside the scan: every gathered slot participates,
-            # so the stage-1 priors are the participating-subset priors
-            sub, ms = jax.lax.scan(step, sub, sub_batches, unroll=unroll)
-            state = _scatter_clients(state, sub, idx)
         else:
-            body = (lambda s, b: step(s, b, mask)) if mask is not None \
-                else step
-            state, ms = jax.lax.scan(body, state, round_batches,
-                                     unroll=unroll)
-        if not dp_gather:
-            metrics = jax.tree.map(lambda a: a[-1], ms)
+            state, metrics = local_phase(
+                mask, fold_scan_mask=faults is not None)
+
+        agg_mask = mask
+        accept = factor = norms = rejected = None
+        new_guard_state = guard_state
+        if guards is not None:
+            base = (mask if mask is not None
+                    else jnp.ones((C_all,), jnp.float32))
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                state.params["client"], start.params["client"])
+            accept, factor, norms, new_guard_state = _guards.screen(
+                guards, delta, base, guard_state)
+            survivor = base * accept
+            rejected = base.sum() - survivor.sum()
+
+            def recompute(_):
+                # >=1 rejection: re-run the local phase over the
+                # survivors so the priors / logit adjustments match a
+                # round the rejected clients never joined
+                return local_phase(survivor, fold_scan_mask=True)
+
+            state, metrics = jax.lax.cond(
+                rejected > 0, recompute, lambda _: (state, metrics), None)
+            if guards.clip > 0:
+                # re-derive the clip factors from the final (possibly
+                # recomputed) updates; median state keeps pass-1 norms
+                delta2 = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)),
+                    state.params["client"], start.params["client"])
+                _, factor, _, _ = _guards.screen(guards, delta2, survivor,
+                                                 guard_state)
+            # survivor == base bitwise when nothing was rejected
+            agg_mask = survivor
 
         if aggregate and not dp_gather:
             C = jax.tree.leaves(state.params["client"])[0].shape[0]
@@ -1129,11 +1255,21 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                 p_k, p_global = _fed.aggregation_priors(
                     model.num_classes, round_batches["labels"],
                     round_batches.get("weights"), client_axis=1)
-            ctx = _fed.AggContext(num_clients=C, mask=mask,
+            ctx = _fed.AggContext(num_clients=C, mask=agg_mask,
                                   data_sizes=data_sizes, p_k=p_k,
                                   p_global=p_global)
             w, agg_state = agg.client_weights(ctx, agg_state)
-            new_client_avg = weighted_mean(state.params["client"], w)
+            pc = state.params["client"]
+            if guards is not None and guards.clip > 0:
+                pc = _guards.apply_clip(start.params["client"], pc, factor)
+            if accept is not None:
+                # 0-weight x NaN = NaN: rejected rows must be zeroed
+                # out of the average, not just down-weighted
+                pc = jax.tree.map(
+                    lambda p: jnp.where(
+                        accept.reshape((-1,) + (1,) * (p.ndim - 1)) > 0,
+                        p, jnp.zeros((), p.dtype)), pc)
+            new_client_avg = weighted_mean(pc, w)
             params = {"client": stack_client_params(new_client_avg, C),
                       "server": state.params["server"]}
             opt_state = _round_boundary_opt_state(opt, state.opt_state,
@@ -1141,6 +1277,12 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
                                                   opt_state_policy)
             state = TrainState(params=params, opt_state=opt_state,
                                step=state.step)
+
+        if guards is not None:
+            metrics = dict(metrics)
+            metrics["guard_accept"] = accept
+            metrics["guard_norm"] = norms
+            metrics["guard_rejected"] = rejected
 
         if server_optimizer is not None:
             # FedOpt on the server half: round delta as pseudo-gradient
@@ -1158,6 +1300,12 @@ def make_round_runner(model: SplitModel, scala: ScalaConfig, *,
         out_fed = {"sched": sched_state, "agg": agg_state}
         if "server_opt" in fed_state:
             out_fed["server_opt"] = so_state
+        if "faults" in fed_state:
+            out_fed["faults"] = (new_fault_key if faults is not None
+                                 else fed_state["faults"])
+        if "guard" in fed_state:
+            out_fed["guard"] = (new_guard_state if guards is not None
+                                else fed_state["guard"])
         return state, out_fed, metrics
 
     return round_fn

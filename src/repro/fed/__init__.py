@@ -35,6 +35,15 @@ from repro.fed.delays import (  # noqa: F401
     DelayModel,
     make_delays,
 )
+from repro.fed.faults import (  # noqa: F401
+    CORRUPT_MODES,
+    FaultModel,
+    make_faults,
+)
+from repro.fed.guards import (  # noqa: F401
+    GuardPolicy,
+    make_guards,
+)
 from repro.fed.participation import (  # noqa: F401
     SCHEDULERS,
     ParticipationScheduler,
@@ -69,13 +78,25 @@ def is_stateful(aggregator: Optional[Aggregator],
 def init_fed_state(key, aggregator: Optional[Aggregator] = None,
                    participation: Optional[ParticipationScheduler] = None,
                    num_clients: Optional[int] = None,
-                   server_optimizer=None, server_params=None) -> dict:
+                   server_optimizer=None, server_params=None,
+                   faults=None, guards=None) -> dict:
     """Build the federation-state pytree threaded through sync rounds.
 
     ``server_optimizer`` / ``server_params``: when the round runner was
     built with a server-side FedOpt optimizer, its state is initialized
     here (under ``"server_opt"``) from the server half's param shapes.
+
+    ``faults``: a :class:`repro.fed.faults.FaultModel` (or spec string)
+    — seeds the dedicated fault-injection PRNG key under ``"faults"``.
+    ``guards``: a :class:`repro.fed.guards.GuardPolicy` (or spec string)
+    — seeds the running-median clip state under ``"guard"`` when the
+    policy is stateful (``clip:TAU``).
     """
+    import jax as _jax
+
+    from repro.fed import faults as _faults_mod
+    from repro.fed import guards as _guards_mod
+
     if num_clients is None:
         if participation is not None:
             num_clients = participation.num_clients
@@ -90,4 +111,10 @@ def init_fed_state(key, aggregator: Optional[Aggregator] = None,
             raise ValueError("init_fed_state needs server_params when a "
                              "server_optimizer is given")
         state["server_opt"] = server_optimizer.init(server_params)
+    if faults is not None:
+        _faults_mod.make_faults(faults)  # validate the spec
+        state["faults"] = _jax.random.fold_in(key, 0x5FA17)
+    if guards is not None:
+        gp = _guards_mod.make_guards(guards)
+        state["guard"] = _guards_mod.init_state() if gp.stateful else ()
     return state

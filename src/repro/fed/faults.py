@@ -1,0 +1,155 @@
+"""Deterministic failure injection for federated rounds.
+
+Real fleets decide "participation" through failures, not schedulers:
+clients crash mid-round, return NaN/Inf or garbage updates, or straggle
+forever.  This module provides a PRNG-keyed fault model that composes
+with every execution mode (masked / sparse / async / delta snapshots)
+so chaos runs are spec-level JSON like everything else.
+
+Spec grammar (comma-joined clauses, mirroring ``make_delays``)::
+
+    drop:P              # client never arrives this round (prob P)
+    corrupt:P[:MODE[:SCALE]]
+                        # update corrupted in transit; MODE in
+                        # {nan, inf, noise}, SCALE only for noise
+    stall:P[:FACTOR]    # finish time inflated by FACTOR (async) /
+                        # client treated as absent (sync)
+
+e.g. ``"drop:0.1,corrupt:0.05:nan,stall:0.02"``.  All randomness flows
+from a dedicated fault key threaded through the fed state, so a chaos
+run is exactly reproducible from its seed.
+
+Semantics per execution mode:
+
+- **sync** (masked / sparse): ``drop`` and ``stall`` fold into the
+  participation mask *before* the local scan — the eq. 14/15 priors and
+  logit adjustments recompute over the reduced subset automatically via
+  the mask-fold path in ``split_step_grads``.  ``corrupt`` is applied to
+  the trained client-half params *after* the scan (the update is
+  corrupted in transit; in-round server training is not poisoned).
+- **async**: ``drop`` removes an arrival from the event's contribution
+  mask, ``corrupt`` poisons the arriving update, ``stall`` multiplies
+  the re-dispatch delay by ``stall_factor`` (later rescued by the
+  deadline/backoff machinery in :mod:`repro.fed.runtime`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+CORRUPT_MODES = ("nan", "inf", "noise")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-round/per-arrival fault probabilities (all independent)."""
+
+    drop: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    noise_scale: float = 10.0
+    stall: float = 0.0
+    stall_factor: float = 1000.0
+    spec: str = ""
+
+    @property
+    def any_faults(self) -> bool:
+        return (self.drop > 0) or (self.corrupt > 0) or (self.stall > 0)
+
+
+def make_faults(spec: Optional[str]) -> Optional[FaultModel]:
+    """Parse a fault spec string (see module docstring for grammar).
+    ``None`` and already-parsed :class:`FaultModel`s pass through."""
+    if spec is None or isinstance(spec, FaultModel):
+        return spec
+    kw: Dict[str, Any] = {"spec": spec}
+    for clause in str(spec).split(","):
+        clause = clause.strip()
+        if not clause:
+            continue
+        parts = clause.split(":")
+        name = parts[0].strip().lower()
+        if name == "drop":
+            if len(parts) != 2:
+                raise ValueError(f"drop clause needs one probability: {clause!r}")
+            kw["drop"] = float(parts[1])
+        elif name == "corrupt":
+            if len(parts) < 2 or len(parts) > 4:
+                raise ValueError(
+                    f"corrupt clause is corrupt:P[:MODE[:SCALE]]: {clause!r}")
+            kw["corrupt"] = float(parts[1])
+            if len(parts) >= 3:
+                mode = parts[2].strip().lower()
+                if mode not in CORRUPT_MODES:
+                    raise ValueError(
+                        f"corrupt mode {mode!r} not in {CORRUPT_MODES}")
+                kw["corrupt_mode"] = mode
+            if len(parts) == 4:
+                kw["noise_scale"] = float(parts[3])
+        elif name == "stall":
+            if len(parts) < 2 or len(parts) > 3:
+                raise ValueError(f"stall clause is stall:P[:FACTOR]: {clause!r}")
+            kw["stall"] = float(parts[1])
+            if len(parts) == 3:
+                kw["stall_factor"] = float(parts[2])
+        else:
+            raise ValueError(
+                f"unknown fault clause {name!r} (want drop/corrupt/stall)")
+    if len(kw) == 1:                        # only the spec echo: no clauses
+        raise ValueError(f"empty fault spec {spec!r}; want comma-joined "
+                         "drop:P | corrupt:P[:MODE[:SCALE]] | "
+                         "stall:P[:FACTOR]")
+    fm = FaultModel(**kw)
+    for p in (fm.drop, fm.corrupt, fm.stall):
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"fault probabilities must be in [0,1]: {spec!r}")
+    if fm.stall_factor < 1.0:
+        raise ValueError("stall factor must be >= 1")
+    return fm
+
+
+def sample_fault_masks(fm: FaultModel, key, n: int) -> Dict[str, jnp.ndarray]:
+    """Draw independent 0/1 fault masks of shape (n,) for one event.
+
+    Returns float32 masks ``{"drop", "corrupt", "stall"}`` where 1 means
+    the fault fires for that client/arrival.  Always consumes the key
+    the same way regardless of which probabilities are zero, so a spec
+    change never silently reshuffles the other fault streams.
+    """
+    kd, kc, ks = jax.random.split(key, 3)
+
+    def bern(k, p):
+        return jax.random.bernoulli(k, p, (n,)).astype(jnp.float32)
+
+    return {
+        "drop": bern(kd, fm.drop),
+        "corrupt": bern(kc, fm.corrupt),
+        "stall": bern(ks, fm.stall),
+    }
+
+
+def corrupt_update(fm: FaultModel, key, stacked_params, corrupt_mask):
+    """Corrupt rows (leading client axis) of a stacked param tree.
+
+    ``corrupt_mask`` is (C,) 0/1; rows where it fires are overwritten
+    with NaN / Inf, or perturbed with scaled Gaussian noise, depending
+    on ``fm.corrupt_mode``.  Deterministic in ``key``.
+    """
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        m = corrupt_mask.reshape((-1,) + (1,) * (leaf.ndim - 1)) > 0
+        if fm.corrupt_mode == "nan":
+            bad = jnp.full_like(leaf, jnp.nan)
+        elif fm.corrupt_mode == "inf":
+            bad = jnp.full_like(leaf, jnp.inf)
+        else:  # noise
+            kn = jax.random.fold_in(key, i)
+            noise = fm.noise_scale * jax.random.normal(
+                kn, leaf.shape, dtype=jnp.float32)
+            bad = leaf + noise.astype(leaf.dtype)
+        out.append(jnp.where(m, bad, leaf))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,186 @@
+"""Guarded aggregation: per-client update screening before FedAvg.
+
+One poisoned client update (NaN/Inf, or a huge-norm outlier) would
+otherwise propagate straight into the eq. 10 average and destroy the
+global model.  Guards screen each client's *update* (trained client
+half minus the round-start client half) and shrink the effective
+cohort:
+
+- **non-finite rejection** — any NaN/Inf leaf entry rejects the client;
+- **norm clipping** — the update's global L2 norm is clipped against a
+  multiple of a running median of accepted norms (EMA-tracked state).
+
+The SCALA-specific part lives in the callers (``engine.make_round_runner``
+and ``fed.make_async_runner``): a rejected client does not merely get
+weight zero — the round's local phase is re-run with the survivor mask
+so the eq. 14/15 priors and logit adjustments are recomputed over the
+surviving subset, exactly as if the rejected client had never
+participated.
+
+Spec grammar (comma-joined clauses)::
+
+    nonfinite           # reject NaN/Inf updates (default on)
+    clip:TAU[:BETA]     # clip norms above TAU x running median;
+                        # BETA = median EMA rate (default 0.5)
+
+``make_guards("nonfinite")`` is the stateless default; clipping needs a
+``{"med", "n"}`` state threaded through the fed state.  Non-finite
+rejection with zero faults injected is a bit-exact no-op (enforced by
+tests/test_faults.py).  Norm clipping, when it actually triggers, is
+deliberately NOT bit-preserving — it rescales real updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    nonfinite: bool = True
+    clip: float = 0.0   # multiple of the running median; 0 disables
+    beta: float = 0.5   # EMA rate for the running median
+    spec: str = "nonfinite"
+
+    @property
+    def stateful(self) -> bool:
+        return self.clip > 0
+
+
+def make_guards(spec: Optional[str]) -> Optional[GuardPolicy]:
+    """Parse a guard spec string (see module docstring for grammar).
+    ``None`` and already-parsed :class:`GuardPolicy`s pass through."""
+    if spec is None or isinstance(spec, GuardPolicy):
+        return spec
+    kw = {"spec": spec, "nonfinite": False}
+    saw_any = False
+    for clause in str(spec).split(","):
+        clause = clause.strip()
+        if not clause:
+            continue
+        saw_any = True
+        parts = clause.split(":")
+        name = parts[0].strip().lower()
+        if name == "nonfinite":
+            if len(parts) != 1:
+                raise ValueError(f"nonfinite clause takes no args: {clause!r}")
+            kw["nonfinite"] = True
+        elif name == "clip":
+            if len(parts) < 2 or len(parts) > 3:
+                raise ValueError(f"clip clause is clip:TAU[:BETA]: {clause!r}")
+            kw["clip"] = float(parts[1])
+            if len(parts) == 3:
+                kw["beta"] = float(parts[2])
+        else:
+            raise ValueError(
+                f"unknown guard clause {name!r} (want nonfinite/clip)")
+    if not saw_any:
+        raise ValueError(f"empty guard spec: {spec!r}")
+    gp = GuardPolicy(**kw)
+    if gp.clip < 0:
+        raise ValueError("clip multiple must be >= 0")
+    if not 0.0 < gp.beta <= 1.0:
+        raise ValueError("median EMA rate must be in (0, 1]")
+    if not gp.nonfinite and gp.clip == 0:
+        raise ValueError(f"guard spec enables nothing: {spec!r}")
+    return gp
+
+
+def init_state():
+    """Running-median state for norm clipping ({"med", "n"})."""
+    return {"med": jnp.zeros((), jnp.float32), "n": jnp.zeros((), jnp.int32)}
+
+
+def update_norms(delta_tree) -> jnp.ndarray:
+    """Global L2 norm of each client's update: (C,) float32 over all
+    leaves of a (C, ...)-stacked delta tree."""
+    sq = [
+        jnp.sum(
+            (leaf.astype(jnp.float32) ** 2).reshape(leaf.shape[0], -1), axis=1)
+        for leaf in jax.tree.leaves(delta_tree)
+    ]
+    return jnp.sqrt(sum(sq))
+
+
+def finite_rows(delta_tree) -> jnp.ndarray:
+    """(C,) float32 0/1: 1 where every leaf entry of the row is finite."""
+    ok = None
+    for leaf in jax.tree.leaves(delta_tree):
+        row_ok = jnp.all(
+            jnp.isfinite(leaf.astype(jnp.float32)).reshape(leaf.shape[0], -1),
+            axis=1)
+        ok = row_ok if ok is None else (ok & row_ok)
+    return ok.astype(jnp.float32)
+
+
+def screen(policy: GuardPolicy, delta_tree, mask,
+           state) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Any]:
+    """Screen per-client updates.
+
+    delta_tree: (C, ...)-stacked update (trained minus round-start,
+    f32); mask: (C,) 0/1 participation (screening only considers
+    participants); state: ``init_state()`` dict or ``()`` when clipping
+    is off.
+
+    Returns ``(accept, clip_factor, norms, new_state)``:
+    ``accept`` (C,) 0/1 (non-participants are accepted — they carry no
+    update), ``clip_factor`` (C,) multiplicative factor in (0, 1] to
+    apply to each update (1 everywhere when clipping is off or
+    untriggered), ``norms`` (C,) update L2 norms, and the advanced
+    median state (``()`` in, ``()`` out).
+    """
+    m = mask.astype(jnp.float32)
+    norms = update_norms(delta_tree)
+    if policy.nonfinite:
+        fin = finite_rows(delta_tree)
+        # non-participants carry no update: always accepted
+        accept = jnp.where(m > 0, fin, 1.0)
+    else:
+        accept = jnp.ones_like(m)
+    factor = jnp.ones_like(norms)
+    new_state = state
+    if policy.clip > 0:
+        if state == ():
+            raise ValueError(
+                "guard clip needs a running-median state — seed it via "
+                "init_fed_state(..., guards=...) / init_async_state(..., "
+                "guards=...)")
+        part = m * accept  # participating, finite
+        # median of this event's accepted norms (NaN-safe: masked-out
+        # entries become NaN and are ignored by nanmedian)
+        ev_med = jnp.nanmedian(jnp.where(part > 0, norms, jnp.nan))
+        have = part.sum() > 0
+        ev_med = jnp.where(jnp.isfinite(ev_med), ev_med, state["med"])
+        first = state["n"] == 0
+        med = jnp.where(
+            have,
+            jnp.where(first, ev_med,
+                      (1.0 - policy.beta) * state["med"] + policy.beta * ev_med),
+            state["med"])
+        new_state = {"med": med,
+                     "n": state["n"] + jnp.where(have, 1, 0).astype(jnp.int32)}
+        limit = policy.clip * med
+        trig = (part > 0) & (med > 0) & (norms > limit)
+        factor = jnp.where(trig, limit / jnp.maximum(norms, 1e-30), 1.0)
+    return accept, factor, norms, new_state
+
+
+def apply_clip(start_params, trained_params, factor):
+    """Rescale each client's update by ``factor`` (C,).
+
+    Bit-exact no-op for rows where factor == 1: the original trained
+    params pass through a ``where`` untouched instead of being
+    reconstructed as ``start + 1.0 * delta``.
+    """
+
+    def clip_leaf(s, p):
+        fb = factor.reshape((-1,) + (1,) * (p.ndim - 1))
+        clipped = (s.astype(jnp.float32)
+                   + fb * (p.astype(jnp.float32) - s.astype(jnp.float32))
+                   ).astype(p.dtype)
+        return jnp.where(fb < 1.0, clipped, p)
+
+    return jax.tree.map(clip_leaf, start_params, trained_params)

@@ -152,7 +152,11 @@ class AsyncFedState:
     ring: (ring_size, ...) recent global client halves, slot
     ``v % ring_size`` holding global@v (``snapshots="delta"`` only);
     ring_versions: (ring_size,) int32 version tag per ring slot
-    (un-written slots carry a large negative sentinel).
+    (un-written slots carry a large negative sentinel);
+    retries: (K,) int32 consecutive deadline misses per client (drives
+    the exponential re-dispatch backoff; ``()`` on legacy states);
+    guard: running-median state for guarded aggregation's norm clip
+    (:func:`repro.fed.guards.init_state`, or ``()``).
     """
 
     client_params: Any
@@ -165,13 +169,15 @@ class AsyncFedState:
     server_opt: Any = ()
     ring: Any = ()
     ring_versions: Any = ()
+    retries: Any = ()
+    guard: Any = ()
 
 
 jax.tree_util.register_dataclass(
     AsyncFedState,
     data_fields=("client_params", "version", "server_version", "finish_time",
                  "now", "key", "agg_state", "server_opt", "ring",
-                 "ring_versions"),
+                 "ring_versions", "retries", "guard"),
     meta_fields=())
 
 
@@ -182,7 +188,7 @@ def init_async_state(key, client_params, delays: DelayModel, *,
                      snapshots: str = "dense",
                      ring_size: int = 64,
                      num_clients: Optional[int] = None,
-                     mesh=None) -> AsyncFedState:
+                     mesh=None, guards=None) -> AsyncFedState:
     """Dispatch all K clients at version 0.
 
     ``client_params`` is the stacked client half (every slot holds the
@@ -235,6 +241,7 @@ def init_async_state(key, client_params, delays: DelayModel, *,
     else:
         snap, ring, ring_versions = client_params, (), ()
     version = jnp.zeros((K,), jnp.int32)
+    retries = jnp.zeros((K,), jnp.int32)
     finish_time = delays.sample(k_delay, (K,)).astype(jnp.float32)
     if mesh is not None:
         from jax.sharding import NamedSharding
@@ -243,7 +250,14 @@ def init_async_state(key, client_params, delays: DelayModel, *,
 
         spec = client_scalar_spec(mesh, K)
         version = jax.device_put(version, NamedSharding(mesh, spec))
+        retries = jax.device_put(retries, NamedSharding(mesh, spec))
         finish_time = delays.sample_sharded(k_delay, K, mesh)
+    guard = ()
+    if guards is not None:
+        from repro.fed import guards as _guards_mod
+
+        gp = _guards_mod.make_guards(guards)
+        guard = _guards_mod.init_state() if gp.stateful else ()
     return AsyncFedState(
         client_params=snap,
         version=version,
@@ -255,7 +269,9 @@ def init_async_state(key, client_params, delays: DelayModel, *,
         server_opt=(server_optimizer.init(server_params)
                     if server_optimizer is not None else ()),
         ring=ring,
-        ring_versions=ring_versions)
+        ring_versions=ring_versions,
+        retries=retries,
+        guard=guard)
 
 
 def _pop_topk(finish_time, version, cohort: int):
@@ -468,7 +484,8 @@ def async_state_bytes(afed: AsyncFedState) -> dict:
     snap = nbytes(afed.client_params) + nbytes(afed.ring)
     per_client = nbytes(afed.version) + nbytes(afed.finish_time)
     other = nbytes((afed.ring_versions, afed.server_version, afed.now,
-                    afed.key, afed.agg_state, afed.server_opt))
+                    afed.key, afed.agg_state, afed.server_opt,
+                    afed.retries, afed.guard))
     return {"snapshot_bytes": snap,
             "per_client_scalar_bytes": per_client,
             "other_bytes": other,
@@ -594,7 +611,10 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                       emit_client_metrics: bool = True,
                       arrival: str = "sort",
                       paged_opt: bool = False,
-                      mesh=None, batch_specs=None):
+                      mesh=None, batch_specs=None,
+                      deadline: Optional[float] = None,
+                      backoff: float = 2.0,
+                      faults=None, guards=None):
     """Build the async event program: ``async_fn(state, afed,
     round_batches, data_sizes=None) -> (state, afed, metrics)``.
 
@@ -683,6 +703,28 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
     ``arrival_mask`` (K,), ``staleness`` (K,) pre-event ages (both
     gated on ``emit_client_metrics``), ``staleness_mean`` over the
     cohort, ``t_event``, and ``server_version`` post-event.
+
+    Fault tolerance:
+
+    * ``deadline`` / ``backoff`` — graceful degradation of the cohort
+      barrier: the event fires at ``min(cohort-th finish, first finish +
+      deadline)``; arrivals that miss it are excluded from the event
+      (mask-folded out of the scan, so cohort priors cover only the
+      present subset), keep their version/snapshot/moments, and are
+      requeued at ``t_event + delay * backoff**retries`` (exponential
+      backoff per consecutive miss — a stalled client stops blocking
+      the schedule). ``deadline=None`` is the legacy unbounded wait.
+    * ``faults`` — :class:`repro.fed.faults.FaultModel` (per-*arrival*
+      here): drops leave the contribution mask, corruption poisons the
+      arriving update in transit, stalls multiply the re-dispatch delay
+      by ``stall_factor`` (rescued later by deadline/backoff).
+    * ``guards`` — :class:`repro.fed.guards.GuardPolicy`: rejected
+      arrivals trigger a ``lax.cond`` re-run of the cohort scan under
+      the survivor mask (priors recomputed as if they never arrived)
+      and are zeroed out of the delayed aggregation; they re-dispatch
+      fresh from the new global. Bit-identical to the unguarded event
+      when nothing is rejected. ``clip:TAU`` needs ``afed.guard``
+      (``init_async_state(..., guards=...)``).
     """
     if opt_state_policy not in engine.OPT_STATE_POLICIES:
         raise ValueError(f"unknown opt_state_policy {opt_state_policy!r}; "
@@ -705,6 +747,29 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             "opt_state_policy='carry' (dense snapshots already store them "
             f"on device); got snapshots={snapshots!r}, "
             f"opt_state_policy={opt_state_policy!r}")
+    from repro.fed import faults as _faults
+    from repro.fed import guards as _guards
+
+    if faults is not None:
+        faults = _faults.make_faults(faults)
+    if guards is not None:
+        guards = _guards.make_guards(guards)
+    if deadline is not None and deadline <= 0:
+        raise ValueError(f"deadline must be > 0, got {deadline}")
+    if backoff < 1.0:
+        raise ValueError(f"backoff must be >= 1, got {backoff}")
+    robust = (deadline is not None) or (faults is not None) \
+        or (guards is not None)
+    if robust and backend == "lace_dp":
+        raise ValueError(
+            "deadline/faults/guards are not supported on the lace_dp event "
+            "(its pop and FL phase run inside shard_map); use a single-host "
+            "backend")
+    if robust and paged_opt:
+        raise ValueError(
+            "deadline/faults/guards are not supported with host-paged "
+            "optimizer moments (the pager's arrival prediction does not "
+            "model partial cohorts)")
     delta = snapshots == "delta"
     opt = optimizer if optimizer is not None else optimizers.sgd()
     agg = aggregator if aggregator is not None else _agg.weighted()
@@ -753,9 +818,43 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                 "(plain sgd), opt_state_policy='reset', or the host-paged "
                 "moment store (paged_opt=True + HostOptPager)")
 
+        if deadline is not None and isinstance(afed.retries, tuple):
+            raise ValueError(
+                "deadline needs per-client retry counters (afed.retries) — "
+                "rebuild the state with init_async_state")
+        if guards is not None and guards.clip > 0 \
+                and isinstance(afed.guard, tuple):
+            raise ValueError(
+                "guard norm clipping needs afed.guard (running median) — "
+                "build the state with init_async_state(..., guards=...)")
+
         # --- event pop: who arrives, and when ---
         idx, arrival_mask, t_event = pop(afed.finish_time, afed.version)
+        present = retries_sub = None
+        if deadline is not None:
+            # graceful degradation of the cohort barrier: fire at
+            # min(cohort-th finish, first finish + deadline); arrivals
+            # past the cut are excluded from the event and backed off
+            ft_sub = jnp.take(afed.finish_time, idx)
+            t_event = jnp.minimum(t_event, jnp.min(ft_sub)
+                                  + jnp.float32(deadline))
+            present = (ft_sub <= t_event).astype(jnp.float32)
+            arrival_mask = jnp.zeros((K,), jnp.float32).at[idx].set(present)
+            retries_sub = jnp.take(afed.retries, idx)
         staleness = (afed.server_version - afed.version).astype(jnp.float32)
+
+        # --- fault injection: per-arrival drop / corrupt / stall ---
+        contrib = present
+        corrupt_sub = stall_sub = corrupt_key = None
+        key_rest = afed.key
+        if faults is not None:
+            k_ev, key_rest = jax.random.split(afed.key)
+            k_masks, corrupt_key = jax.random.split(k_ev)
+            fmasks = _faults.sample_fault_masks(faults, k_masks, cohort)
+            alive = 1.0 - fmasks["drop"]
+            contrib = alive if contrib is None else contrib * alive
+            corrupt_sub = fmasks["corrupt"] * contrib
+            stall_sub = fmasks["stall"]
 
         # --- sparse-slot local compute from the per-client snapshots:
         # the engine's gather, sourced from the snapshots (dense) or
@@ -794,9 +893,59 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                 f"round_batches client axis is {b_lead}; expected the {K} "
                 f"static slots or the {cohort}-sized arrival cohort")
         # priors / logit adjustments recompute over the arrival cohort:
-        # the gathered batch IS the cohort's concatenated batch
-        sub, ms = jax.lax.scan(step, sub, sub_batches, unroll=unroll)
-        metrics = jax.tree.map(lambda a: a[-1], ms)
+        # the gathered batch IS the cohort's concatenated batch (masked
+        # down to the contributing subset under deadline/faults)
+        sub0 = sub  # pre-scan cohort state: guard recompute / restores
+        snap0 = sub0.params["client"]
+
+        def run_local(mask_):
+            body = (lambda s, b: step(s, b, mask_)) if mask_ is not None \
+                else step
+            s2, ms = jax.lax.scan(body, sub0, sub_batches, unroll=unroll)
+            mets = jax.tree.map(lambda a: a[-1], ms)
+            if corrupt_sub is not None:
+                # the update is corrupted in transit, AFTER training
+                cp = _faults.corrupt_update(faults, corrupt_key,
+                                            s2.params["client"], corrupt_sub)
+                s2 = engine.TrainState(
+                    params={"client": cp, "server": s2.params["server"]},
+                    opt_state=s2.opt_state, step=s2.step)
+            return s2, mets
+
+        sub, metrics = run_local(contrib)
+
+        # --- guarded aggregation: screen the arriving updates ---
+        accept = factor = None
+        new_guard_state = afed.guard
+        if guards is not None:
+            base = (contrib if contrib is not None
+                    else jnp.ones((cohort,), jnp.float32))
+            delta_u = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                sub.params["client"], snap0)
+            accept, factor, g_norms, new_guard_state = _guards.screen(
+                guards, delta_u, base, afed.guard)
+            survivor = base * accept
+            rejected = base.sum() - survivor.sum()
+            # >=1 rejection: re-run the cohort scan over the survivors
+            # so the priors / logit adjustments match an event the
+            # rejected arrivals never joined
+            sub, metrics = jax.lax.cond(
+                rejected > 0, lambda _: run_local(survivor),
+                lambda _: (sub, metrics), None)
+            if guards.clip > 0:
+                delta2 = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)),
+                    sub.params["client"], snap0)
+                _, factor, _, _ = _guards.screen(guards, delta2, survivor,
+                                                 afed.guard)
+            # survivor == base bitwise when nothing was rejected
+            contrib = survivor
+
+        mask_eff = arrival_mask
+        if contrib is not None:
+            mask_eff = jnp.zeros((K,), jnp.float32).at[idx].set(contrib)
 
         # --- staleness-weighted delayed aggregation (GAS / FedAsync) ---
         p_k = p_global = None
@@ -804,14 +953,23 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
             p_k, p_global = _agg.aggregation_priors(
                 model.num_classes, round_batches["labels"],
                 round_batches.get("weights"), client_axis=1)
-        ctx = _agg.AggContext(num_clients=K, mask=arrival_mask,
+        ctx = _agg.AggContext(num_clients=K, mask=mask_eff,
                               data_sizes=data_sizes, p_k=p_k,
                               p_global=p_global)
         w_base, agg_state = agg.client_weights(ctx, afed.agg_state)
         decay = jnp.power(jnp.float32(staleness_decay), staleness)
-        r_hat = normalize_client_weights(w_base * decay, arrival_mask)
-        cohort_avg = weighted_mean(sub.params["client"],
-                                   jnp.take(r_hat, idx))
+        r_hat = normalize_client_weights(w_base * decay, mask_eff)
+        pc_sub = sub.params["client"]
+        if guards is not None and guards.clip > 0:
+            pc_sub = _guards.apply_clip(snap0, pc_sub, factor)
+        if accept is not None:
+            # 0-weight x NaN = NaN: rejected rows must be zeroed out of
+            # the average, not just down-weighted
+            pc_sub = jax.tree.map(
+                lambda p: jnp.where(
+                    accept.reshape((-1,) + (1,) * (p.ndim - 1)) > 0,
+                    p, jnp.zeros((), p.dtype)), pc_sub)
+        cohort_avg = weighted_mean(pc_sub, jnp.take(r_hat, idx))
         mu = jnp.float32(mix_rate)
         global_c = jax.tree.map(lambda a: a[0], state.params["client"])
         new_global = jax.tree.map(
@@ -847,14 +1005,38 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                     return jnp.broadcast_to(m[None], a.shape)
 
                 sub_opt_c = jax.tree.map(avg, sub_opt_c)
+            if present is not None:
+                # deadline-missed arrivals never delivered: keep their
+                # pre-event moments
+                sub_opt_c = jax.tree.map(
+                    lambda o0, o1: jnp.where(
+                        present.reshape((-1,) + (1,) * (o1.ndim - 1)) > 0,
+                        o1, o0),
+                    sub0.opt_state["client"], sub_opt_c)
             opt_c = engine.scatter_rows(state.opt_state["client"], sub_opt_c,
                                         idx)
             new_client = stack_client_params(new_global, K)
 
         # --- re-dispatch the cohort at the new version ---
         new_version = afed.server_version + 1
-        k_delay, k_carry = jax.random.split(afed.key)
+        k_delay, k_carry = jax.random.split(key_rest)
         new_delays = delays.sample(k_delay, (cohort,)).astype(jnp.float32)
+        eff_delays = new_delays
+        if stall_sub is not None:
+            # stalled clients straggle for stall_factor x the sampled
+            # delay; deadline/backoff later rescues the schedule
+            eff_delays = jnp.where(stall_sub > 0,
+                                   eff_delays * jnp.float32(
+                                       faults.stall_factor),
+                                   eff_delays)
+        new_retries = None
+        if present is not None:
+            boff = jnp.power(jnp.float32(backoff),
+                             retries_sub.astype(jnp.float32))
+            eff_delays = jnp.where(present > 0, eff_delays,
+                                   new_delays * boff)
+            new_retries = jnp.where(present > 0, 0,
+                                    retries_sub + 1).astype(jnp.int32)
         if delta:
             slot = new_version % ring_size
             snap = afed.client_params
@@ -863,21 +1045,37 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
                 afed.ring, new_global)
             ring_versions = afed.ring_versions.at[slot].set(new_version)
         else:
-            snap = engine.scatter_rows(
-                afed.client_params, stack_client_params(new_global, cohort),
-                idx)
+            rows = stack_client_params(new_global, cohort)
+            if present is not None:
+                # absent arrivals keep computing from their original
+                # snapshot — only present ones restart from the new one
+                rows = jax.tree.map(
+                    lambda r, s0: jnp.where(
+                        present.reshape((-1,) + (1,) * (r.ndim - 1)) > 0,
+                        r.astype(s0.dtype), s0),
+                    rows, snap0)
+            snap = engine.scatter_rows(afed.client_params, rows, idx)
             ring, ring_versions = afed.ring, afed.ring_versions
+        ver_sub = jnp.full((cohort,), new_version, jnp.int32)
+        if present is not None:
+            ver_sub = jnp.where(present > 0, ver_sub,
+                                jnp.take(afed.version, idx)).astype(jnp.int32)
+        retries_out = afed.retries
+        if new_retries is not None:
+            retries_out = afed.retries.at[idx].set(new_retries)
         new_afed = AsyncFedState(
             client_params=snap,
-            version=afed.version.at[idx].set(new_version),
+            version=afed.version.at[idx].set(ver_sub),
             server_version=new_version,
-            finish_time=afed.finish_time.at[idx].set(t_event + new_delays),
+            finish_time=afed.finish_time.at[idx].set(t_event + eff_delays),
             now=t_event,
             key=k_carry,
             agg_state=agg_state,
             server_opt=server_opt_state,
             ring=ring,
-            ring_versions=ring_versions)
+            ring_versions=ring_versions,
+            retries=retries_out,
+            guard=new_guard_state)
         new_state = engine.TrainState(
             params={"client": new_client, "server": new_ws},
             opt_state={"client": opt_c, "server": sub.opt_state["server"]},
@@ -891,6 +1089,12 @@ def make_async_runner(model: engine.SplitModel, scala: ScalaConfig, *,
         else:
             metrics.update(staleness_mean=jnp.take(staleness, idx).mean())
         metrics.update(t_event=t_event, server_version=new_version)
+        if guards is not None:
+            metrics.update(guard_accept=accept, guard_norm=g_norms,
+                           guard_rejected=rejected)
+        if present is not None:
+            metrics.update(deadline_missed=jnp.float32(cohort)
+                           - present.sum())
         if paged_opt:
             return new_state, new_afed, metrics, sub.opt_state["client"]
         return new_state, new_afed, metrics
@@ -987,7 +1191,9 @@ def _make_async_runner_dp(model, scala, *, boundary, delays, cohort, opt,
             agg_state=jax.tree.map(lambda _: P(), afed.agg_state),
             server_opt=jax.tree.map(lambda _: P(), afed.server_opt),
             ring=jax.tree.map(lambda _: P(), afed.ring),
-            ring_versions=P() if delta else ())
+            ring_versions=P() if delta else (),
+            retries=jax.tree.map(lambda _: cspec, afed.retries),
+            guard=jax.tree.map(lambda _: P(), afed.guard))
 
         def body(st, af, rb, sizes_l):
             # --- per-shard pop of the local cohort (arrival= picks the
@@ -1100,7 +1306,9 @@ def _make_async_runner_dp(model, scala, *, boundary, delays, cohort, opt,
                 agg_state=af.agg_state,
                 server_opt=so_state,
                 ring=ring,
-                ring_versions=ring_versions)
+                ring_versions=ring_versions,
+                retries=af.retries,
+                guard=af.guard)
             new_st = engine.TrainState(
                 params={"client": new_client, "server": new_ws},
                 opt_state={"client": opt_c,

@@ -119,7 +119,9 @@ def spec_from_args(args) -> api.ExperimentSpec:
                             schedule=args.schedule, warmup=args.warmup),
         fed=api.FedSpec(aggregator=args.aggregator,
                         participation=scheduler_spec,
-                        opt_state_policy=args.opt_state_policy),
+                        opt_state_policy=args.opt_state_policy,
+                        faults=args.faults or None,
+                        guards=args.guards or None),
         execution=api.ExecutionSpec(
             mode=mode, backend="lace", delay=args.delay_spec,
             cohort=args.cohort, staleness_decay=args.staleness_decay,
@@ -130,7 +132,8 @@ def spec_from_args(args) -> api.ExperimentSpec:
             donate=not args.no_donate,
             snapshots=args.snapshots, ring_size=args.ring_size,
             lr_scale=args.lr_scale, arrival=args.arrival,
-            opt_paging=args.opt_paging),
+            opt_paging=args.opt_paging,
+            deadline=args.deadline, backoff=args.backoff),
         data=api.DataSpec(kind="lm_synthetic", seq=args.seq,
                           docs_per_client=args.docs_per_client))
 
@@ -247,7 +250,36 @@ def build_parser() -> argparse.ArgumentParser:
                     help="disable buffer donation of the round state "
                          "(donation updates params/opt-state in place; "
                          "disable only for debugging aliasing issues)")
-    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault injection spec: comma-joined "
+                         "drop:P | corrupt:P[:MODE[:SCALE]] (MODE nan | inf "
+                         "| noise) | stall:P[:FACTOR] — chaos testing at "
+                         "spec level (fed.faults)")
+    ap.add_argument("--guards", default="",
+                    help="aggregation guard spec: nonfinite and/or "
+                         "clip:TAU[:BETA] — rejected clients shrink the "
+                         "cohort and the eq. 14/15 logit adjustments are "
+                         "recomputed over the survivors (fed.guards)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="async only: bound each event's cohort barrier; "
+                         "clients not finished by (earliest finish + "
+                         "DEADLINE) miss the event and are requeued with "
+                         "exponential backoff")
+    ap.add_argument("--backoff", type=float, default=2.0,
+                    help="requeue delay multiplier per consecutive miss "
+                         "(with --deadline)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="save params-only checkpoints (servable via "
+                         "launch/serve.py) at round-fusion boundaries")
+    ap.add_argument("--state-dir", default="",
+                    help="save FULL crash-recovery checkpoints (params + "
+                         "optimizer + fed/async state + host RNG) via "
+                         "Trainer.save at round-fusion boundaries; resume "
+                         "with --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest complete checkpoint from "
+                         "--state-dir before training and run only the "
+                         "remaining rounds (bit-identical continuation)")
     return ap
 
 
@@ -353,6 +385,10 @@ def main(argv=None):
           f"vocab={cfg.vocab_size}")
     assert cfg.frontend is None, "LM driver supports text archs"
 
+    if args.resume and not args.state_dir:
+        raise SystemExit("--resume needs --state-dir (the directory "
+                         "Trainer.save wrote full-state checkpoints to)")
+
     trainer = api.Trainer(spec)
     meta = trainer.program.metadata
     n_params = sum(x.size for x in jax.tree.leaves(
@@ -364,11 +400,22 @@ def main(argv=None):
           f"opt-state: {spec.fed.opt_state_policy}, "
           f"optimizer: {spec.optim.spec}, schedule: {spec.optim.schedule}")
     if meta["mode"] == "async":
+        extra_async = (f" deadline={spec.execution.deadline} "
+                       f"backoff={spec.execution.backoff}"
+                       if spec.execution.deadline else "")
         print(f"async: delay={spec.execution.delay} "
               f"cohort={spec.execution.resolve_cohort(meta['slots'])}"
               f"/{meta['slots']} "
               f"staleness_decay={spec.execution.staleness_decay} "
-              f"mix_rate={spec.execution.mix_rate}")
+              f"mix_rate={spec.execution.mix_rate}{extra_async}")
+    if spec.fed.faults or spec.fed.guards:
+        print(f"fault tolerance: faults={spec.fed.faults or 'none'} "
+              f"guards={spec.fed.guards or 'none'}")
+
+    start = 0
+    if args.resume:
+        start = trainer.resume(args.state_dir)
+        print(f"resumed at round {start} from {args.state_dir}")
 
     label = "event" if meta["mode"] == "async" else "round"
     rpc = meta["rounds_per_call"]
@@ -378,6 +425,8 @@ def main(argv=None):
         if "t_event" in metrics:
             extra = (f" t={metrics['t_event']:.2f}"
                      f" stale={metrics['staleness_mean']:.2f}")
+        if "guard_rejected" in metrics:
+            extra += f" rej={metrics['guard_rejected']:.0f}"
         print(f"{label} {rnd:3d} loss_s={metrics['loss_server']:.4f} "
               f"loss_c={metrics['loss_client']:.4f}{extra} ({dt:.1f}s)",
               flush=True)
@@ -388,8 +437,10 @@ def main(argv=None):
         at_boundary = (rnd + 1) % rpc == 0 or rnd == spec.rounds - 1
         if args.checkpoint_dir and at_boundary:
             save(args.checkpoint_dir, rnd, trainer.state.inner.params)
+        if args.state_dir and at_boundary:
+            trainer.save(args.state_dir)
 
-    trainer.run(on_round=on_round)
+    trainer.run(spec.rounds - start, on_round=on_round)
     print("done")
     return trainer
 

@@ -41,22 +41,34 @@ from repro.serve.cache import is_group_path, make_ops
 
 @dataclass
 class Request:
-    """One generation request: prompt tokens + a token budget."""
+    """One generation request: prompt tokens + a token budget.
+
+    ``deadline`` (optional) bounds the request's total time in the
+    system, measured from ``arrival`` on the serve timeline (seconds
+    under ``wall_clock=True``, decode steps otherwise). A slot still
+    generating when its deadline passes is *evicted*: the partial
+    sequence is returned (``Result.evicted == "deadline"``) and the slot
+    and its pages are freed for the arrival queue — graceful degradation
+    under overload instead of head-of-line blocking."""
     rid: int
     tokens: np.ndarray          # (P,) int32 prompt
     max_new: int                # tokens to generate (>= 1)
     arrival: float = 0.0        # seconds after serve() start
+    deadline: Optional[float] = None  # max time in system, from arrival
 
 
 @dataclass
 class Result:
     rid: int
-    tokens: np.ndarray          # (P + max_new,) prompt + generated
+    tokens: np.ndarray          # (P + generated,) prompt + generated
     prompt_len: int
     arrival: float
     t_admit: float
     t_finish: float
     logits: Optional[List[np.ndarray]] = None
+    # None = ran to its own max_new; "deadline" = wall-clock eviction;
+    # "budget" = hit the engine-wide token_budget cap first
+    evicted: Optional[str] = None
 
     @property
     def latency(self) -> float:
@@ -72,6 +84,8 @@ class _Slot:
     generated: int = 0
     last_tok: int = 0
     n_pages: int = 0
+    budget: int = 0             # min(max_new, engine token_budget)
+    expiry: float = float("inf")  # absolute eviction time on the timeline
 
 
 class ServeEngine:
@@ -85,7 +99,8 @@ class ServeEngine:
     def __init__(self, params, cfg, *, slots: int = 4, max_len: int = 256,
                  pages: int = 0, page_size: int = 16,
                  temperature: float = 0.0, seed: int = 0,
-                 admission: str = "continuous", record_logits: bool = False):
+                 admission: str = "continuous", record_logits: bool = False,
+                 token_budget: Optional[int] = None):
         if not cfg.is_decoder:
             raise ValueError("ServeEngine requires a decoder arch")
         if cfg.frontend is not None:
@@ -100,6 +115,12 @@ class ServeEngine:
         self.temperature = float(temperature)
         self.admission = admission
         self.record_logits = record_logits
+        # engine-wide cap on generated tokens per request (overload
+        # protection): a request whose max_new exceeds it is evicted at
+        # the cap with Result.evicted == "budget"
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        self.token_budget = token_budget
         # sampling stream, folded off the raw seed key so it never
         # collides with the param-init stream PRNGKey(seed)
         self._key = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
@@ -206,15 +227,21 @@ class ServeEngine:
         s.active = True
         s.rid, s.length, s.max_new = req.rid, len(req.tokens), req.max_new
         s.generated, s.last_tok, s.n_pages = 1, tok0, n_pages
+        s.budget = (req.max_new if self.token_budget is None
+                    else min(req.max_new, self.token_budget))
+        s.expiry = (float("inf") if req.deadline is None
+                    else req.arrival + req.deadline)
         self._out[req.rid] = [tok0]
         if self.record_logits:
             self._log[req.rid] = [np.asarray(lg)]
         self._admit_meta[req.rid] = (req, now)
-        if s.generated >= s.max_new:
-            self._finish(slot, now, results)
+        if s.generated >= s.budget:
+            self._finish(slot, now, results,
+                         "budget" if s.budget < s.max_new else None)
         return True
 
-    def _finish(self, slot: int, now: float, results: Dict[int, Result]):
+    def _finish(self, slot: int, now: float, results: Dict[int, Result],
+                evicted: Optional[str] = None):
         s = self._slot[slot]
         req, t_admit = self._admit_meta.pop(s.rid)
         self._free_pages.extend(
@@ -227,8 +254,19 @@ class ServeEngine:
                                    np.asarray(self._out.pop(s.rid), np.int32)]),
             prompt_len=len(req.tokens), arrival=req.arrival,
             t_admit=t_admit, t_finish=now,
-            logits=self._log.pop(s.rid, None))
+            logits=self._log.pop(s.rid, None), evicted=evicted)
         s.active = False
+
+    def _evict_expired(self, now: float, results: Dict[int, Result]) -> int:
+        """Free every slot whose request deadline has passed; returns the
+        count evicted. The partial sequence generated so far is returned
+        as the request's result (``evicted == "deadline"``)."""
+        n = 0
+        for slot, s in enumerate(self._slot):
+            if s.active and now >= s.expiry:
+                self._finish(slot, now, results, "deadline")
+                n += 1
+        return n
 
     def _step_once(self, now: float, results: Dict[int, Result]):
         toks = np.array([s.last_tok for s in self._slot], np.int32)
@@ -249,8 +287,9 @@ class ServeEngine:
             self._out[s.rid].append(s.last_tok)
             if self.record_logits:
                 self._log[s.rid].append(logits[slot])
-            if s.generated >= s.max_new:
-                self._finish(slot, now, results)
+            if s.generated >= s.budget:
+                self._finish(slot, now, results,
+                             "budget" if s.budget < s.max_new else None)
 
     # -- public API --------------------------------------------------------
 
@@ -266,7 +305,10 @@ class ServeEngine:
         return self._try_admit(req, now, self._results)
 
     def step(self, now: float = 0.0) -> None:
-        """Advance every active slot by one token (one decode dispatch)."""
+        """Advance every active slot by one token (one decode dispatch).
+        Slots past their request deadline are evicted first, not
+        stepped."""
+        self._evict_expired(now, self._results)
         if self.n_active:
             self._step_once(now, self._results)
 
@@ -287,6 +329,10 @@ class ServeEngine:
             if total > self.max_len:
                 raise ValueError(
                     f"request {r.rid}: {total} tokens > max_len={self.max_len}")
+            if r.deadline is not None and r.deadline <= 0:
+                raise ValueError(
+                    f"request {r.rid}: deadline must be > 0, "
+                    f"got {r.deadline}")
         pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
         results: Dict[int, Result] = {}
@@ -294,6 +340,9 @@ class ServeEngine:
 
         while pending or self.n_active:
             now = (time.monotonic() - t0) if wall_clock else float(self._ctr)
+            # deadline evictions free slots BEFORE admission, so a queued
+            # request can take over an expired slot this very iteration
+            self._evict_expired(now, results)
             if self.n_active == 0:
                 self._wave_open = True  # static mode: new admission wave
             arrived = bool(pending) and (not wall_clock
